@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle per stage,
+plus slot- vs bitword-formulation engine timing — the per-call numbers
+behind the paper's T_par-proc column. CSV: name,us_per_call,derived."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import build_graph
+from repro.core.graphs import grid_graph, complete_bipartite, random_gnp
+from repro.core.triplets import initial_frontier, triplet_flags
+from repro.core import expand as E
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    for name, (n, edges) in [("grid6x10", grid_graph(6, 10)),
+                             ("K_20_20", complete_bipartite(20, 20)),
+                             ("gnp128", random_gnp(128, 0.15, 0))]:
+        g = build_graph(n, edges)
+        f, _, _ = initial_frontier(g)
+        d = max(g.max_degree, 1)
+        rows.append((f"triplet_jnp_{name}",
+                     _time(triplet_flags, g, d), f"grid={n}x{d}x{d}"))
+        rows.append((f"triplet_pallas_{name}",
+                     _time(ops.triplet_flags, g, d), "interpret=True"))
+        rows.append((f"expand_slot_jnp_{name}",
+                     _time(E.expand_flags_slot, g, f, d), f"cap={f.capacity}"))
+        rows.append((f"expand_slot_pallas_{name}",
+                     _time(ops.expand_flags_slot, g, f, d),
+                     "interpret=True"))
+        rows.append((f"expand_bitword_jnp_{name}",
+                     _time(E.expand_words_bitword, g, f), f"nw={g.n_words}"))
+        rows.append((f"expand_bitword_pallas_{name}",
+                     _time(ops.expand_words_bitword, g, f), "interpret=True"))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Print the (arch × shape) roofline table from dry-run JSON results."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(mesh="16x16", tag=""):
+    path = os.path.join(RESULTS, f"dryrun_{mesh}"
+                        + (f"_{tag}" if tag else "") + ".json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(mesh="16x16"):
+    rows = load(mesh)
+    if not rows:
+        print(f"(no dry-run results for mesh {mesh} — run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        return
+    hdr = ("cell", "bottleneck", "t_comp(s)", "t_mem(s)", "t_coll(s)",
+           "useful", "roofl_frac", "mem/dev(GB)")
+    print(("{:<38}" + "{:>12}" * 7).format(*hdr))
+    for r in rows:
+        if r.get("skipped"):
+            print(f"{r['name']:<38}{'SKIP':>12}  ({r['skipped'][:60]}…)")
+            continue
+        if r.get("error"):
+            print(f"{r['name']:<38}{'ERROR':>12}  ({r['error'][:60]})")
+            continue
+        if r.get("compiled") and "t_compute_s" not in r:
+            print(f"{r['name']:<38}{'COMPILED':>12}")
+            continue
+        print(("{:<38}" + "{:>12}" * 7).format(
+            r["name"], r["bottleneck"], f"{r['t_compute_s']:.4f}",
+            f"{r['t_memory_s']:.4f}", f"{r['t_collective_s']:.4f}",
+            f"{r['useful_flop_frac']:.2f}", f"{r['roofline_frac']:.3f}",
+            f"{r['peak_memory_gb_per_dev']:.1f}"))
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

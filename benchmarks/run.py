@@ -1,0 +1,45 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Sections:
+  table1   — paper Table 1 (counts validated vs published values + timings)
+  fig4     — paper Fig. 4 (|T|/|C| evolution waves)
+  kernels  — per-kernel microbench (pallas interpret vs jnp oracle)
+  dist     — distributed-enumeration scaling (1..8 fake devices)
+  roofline — the (arch × shape) dry-run roofline table (if results exist)
+
+Output: ``name,us_per_call,derived`` CSV blocks.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    print("== paper_table1 ==")
+    from . import paper_table1
+    paper_table1.main(full)
+
+    print("\n== paper_fig4 ==")
+    from . import paper_fig4
+    paper_fig4.main()
+
+    print("\n== kernel_bench ==")
+    from . import kernel_bench
+    kernel_bench.main()
+
+    print("\n== dist_enum ==")
+    from . import dist_enum
+    dist_enum.main()
+
+    print("\n== roofline (16x16) ==")
+    from . import roofline_table
+    roofline_table.main("16x16")
+    print("\n== roofline (2x16x16, compile proof) ==")
+    roofline_table.main("2x16x16")
+
+
+if __name__ == "__main__":
+    main()

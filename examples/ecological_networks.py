@@ -1,0 +1,46 @@
+"""Ecology use-case (the paper's §1 motivation): build a niche-overlap graph
+from a synthetic food web and enumerate its chordless cycles. A chordless
+cycle in the niche-overlap graph marks a set of predators whose competition
+for shared prey cannot be arranged along a single hierarchy (Sokhn et al.).
+
+    PYTHONPATH=src python examples/ecological_networks.py
+"""
+import numpy as np
+
+from repro.core import build_graph, enumerate_chordless_cycles
+from repro.core.bitset_graph import unpack_bits
+
+rng = np.random.default_rng(7)
+N_SPECIES, N_PREY = 40, 90
+
+# random food web: each prey is eaten by 2-6 predators
+web = [rng.choice(N_SPECIES, size=rng.integers(2, 7), replace=False)
+       for _ in range(N_PREY)]
+
+# Wilson–Watkins niche-overlap transform: predators sharing prey → edge
+edges = set()
+for preds in web:
+    for i in range(len(preds)):
+        for j in range(i + 1, len(preds)):
+            a, b = int(preds[i]), int(preds[j])
+            edges.add((min(a, b), max(a, b)))
+
+g = build_graph(N_SPECIES, sorted(edges))
+res = enumerate_chordless_cycles(g)
+
+print(f"niche-overlap graph: {N_SPECIES} species, {len(edges)} competition "
+      f"edges, Δ={g.max_degree}")
+print(f"chordless cycles: {res.n_cycles} ({res.n_triangles} triangles)")
+if res.n_cycles == res.n_triangles:
+    print("no chordless cycles of length ≥ 4 — species arrangeable along "
+          "a single hierarchy")
+else:
+    long_cycles = [s for s in res.cycles_as_sets(N_SPECIES) if len(s) >= 4]
+    print(f"{len(long_cycles)} non-hierarchical competition loops, e.g.:")
+    for cyc in long_cycles[:3]:
+        print(f"  species {sorted(cyc)} compete cyclically")
+
+# Fig-4-style evolution of the search
+print("\nstep |T| |C| (paper Fig. 4 wave):")
+for h in res.history:
+    print(f"  {h['step']:3d} {h['T']:6d} {h['C']:6d}")

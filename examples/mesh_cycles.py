@@ -1,0 +1,30 @@
+"""Integration of the paper's engine with the GNN arch zoo: enumerate the
+chordless cycles of the GraphCast icosahedral multi-mesh — the same edge set
+the graphcast config trains message passing on (DESIGN.md §4: the technique
+applies directly to the GNN family's graphs).
+
+    PYTHONPATH=src python examples/mesh_cycles.py [refinement]
+"""
+import sys
+import time
+
+from repro.core import build_graph, enumerate_chordless_cycles
+from repro.data.meshes import icosphere_edges
+
+refinement = int(sys.argv[1]) if len(sys.argv) > 1 else 1
+n, pos, edges = icosphere_edges(refinement)
+print(f"icosahedral multi-mesh r={refinement}: {n} nodes, {len(edges)} edges")
+
+g = build_graph(n, edges)
+t0 = time.perf_counter()
+res = enumerate_chordless_cycles(g, store=False)
+dt = time.perf_counter() - t0
+
+print(f"chordless cycles: {res.n_cycles} ({res.n_triangles} triangles) "
+      f"in {dt*1e3:.1f} ms, {res.iterations} rounds")
+print("triangles come from each refined face; longer chordless cycles are "
+      "the multi-mesh's cross-level shortcuts")
+
+# Fig-4 style |T| wave
+peak = max(h["T"] for h in res.history)
+print(f"peak frontier |T| = {peak}")

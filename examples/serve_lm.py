@@ -1,0 +1,49 @@
+"""Batched serving demo: prefill a batch of prompts, then decode tokens with
+the KV cache — the serve path the decode_32k / prefill_32k dry-run cells
+lower at production scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as T
+
+cfg = LMConfig(name="serve-demo", n_layers=4, d_model=128, n_heads=8,
+               n_kv_heads=4, d_ff=512, vocab=1024)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+BATCH, PROMPT, NEW, MAX = 4, 32, 16, 64
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, PROMPT)))
+
+prefill = jax.jit(lambda p, t: T.prefill_step(p, t, cfg, max_seq=MAX))
+decode = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
+
+t0 = time.perf_counter()
+logits, cache = prefill(params, prompts)
+jax.block_until_ready(logits)
+t_prefill = time.perf_counter() - t0
+print(f"prefill: batch={BATCH} prompt={PROMPT} -> {t_prefill*1e3:.1f} ms "
+      f"({BATCH*PROMPT/t_prefill:.0f} tok/s)")
+
+tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+out = [tok]
+t0 = time.perf_counter()
+for i in range(NEW - 1):
+    logits, cache = decode(params, cache, tok)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out.append(tok)
+jax.block_until_ready(tok)
+t_decode = time.perf_counter() - t0
+print(f"decode: {NEW-1} steps -> {t_decode/(NEW-1)*1e3:.1f} ms/step "
+      f"({BATCH*(NEW-1)/t_decode:.0f} tok/s)")
+
+gen = jnp.concatenate(out, axis=1)
+print(f"generated shape {gen.shape}; cache len {int(cache['len'])}")
+assert int(cache["len"]) == PROMPT + NEW - 1
+print("greedy decode with KV cache ✓")

@@ -1,0 +1,70 @@
+"""HLO-text analysis: collective byte counting for the roofline.
+
+cost_analysis() has no collective traffic numbers — we parse the compiled
+(post-SPMD) HLO text and sum operand bytes of every communication op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum bytes of every array literal in an HLO result signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind output bytes (proxy for wire traffic per device).
+
+    Uses the RESULT shape of each collective op (post-SPMD = per-device
+    shapes): all-gather result = bytes landing on each device, all-reduce
+    result = reduced tensor size, etc. ``start`` variants counted once
+    (``done`` ops are skipped).
+    """
+    out: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = TYPE[shape] all-gather(...)" / fusion-wrapped variants
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        sig, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(sig)
+        out[kind] += b
+        counts[kind] += 1
+    out["_ops"] = sum(counts.values())
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    d = collective_bytes(hlo_text)
+    return sum(v for k, v in d.items() if not k.startswith("_"))

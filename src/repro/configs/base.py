@@ -1,0 +1,175 @@
+"""Config dataclasses + the (arch × shape) cell registry."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    attention: str = "full"        # full | window (beyond-paper long-ctx)
+    window: int = 4096
+    moe: MoESpec | None = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    family: str = "lm"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (embeddings + layers)."""
+        d, L = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd \
+            + self.n_heads * self.hd * d
+        if self.moe:
+            ff = 3 * d * self.moe.d_ff_expert * self.moe.n_experts \
+                + d * self.moe.n_experts  # router
+        else:
+            ff = 3 * d * self.d_ff
+        norms = 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + ff + norms) + emb + d
+
+    def n_active_params(self) -> int:
+        if not self.moe:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd \
+            + self.n_heads * self.hd * d
+        ff = 3 * d * self.moe.d_ff_expert * self.moe.top_k + d * self.moe.n_experts
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + ff + 2 * d) + emb + d
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int
+    d_hidden: int
+    kind: str                      # graphcast | meshgraphnet | egnn | gat
+    aggregator: str = "sum"        # sum | attn
+    n_heads: int = 1
+    mlp_layers: int = 2
+    n_vars: int = 0                # graphcast input variables
+    mesh_refinement: int = 0
+    n_classes: int = 16
+    family: str = "gnn"
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    n_sparse: int
+    embed_dim: int
+    cin_layers: tuple[int, ...]
+    mlp_dims: tuple[int, ...]
+    vocab_per_field: int = 1_000_000
+    n_dense: int = 13
+    bag_size: int = 4              # multi-hot ids per field (EmbeddingBag)
+    family: str = "recsys"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                     # train | prefill | decode | long_decode |
+                                  # full_graph | minibatch | molecule |
+                                  # serve | bulk | retrieval
+    # LM fields
+    seq_len: int = 0
+    global_batch: int = 0
+    # GNN fields
+    n_nodes: int = 0
+    n_edges: int = 0
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: tuple[int, ...] = ()
+    graphs_per_batch: int = 0
+    # recsys fields
+    batch: int = 0
+    n_candidates: int = 0
+
+
+LM_SHAPES = [
+    ShapeSpec("train_4k", "train", seq_len=4096, global_batch=256),
+    ShapeSpec("prefill_32k", "prefill", seq_len=32768, global_batch=32),
+    ShapeSpec("decode_32k", "decode", seq_len=32768, global_batch=128),
+    ShapeSpec("long_500k", "long_decode", seq_len=524288, global_batch=1),
+]
+
+GNN_SHAPES = [
+    ShapeSpec("full_graph_sm", "full_graph", n_nodes=2708, n_edges=10556,
+              d_feat=1433),
+    ShapeSpec("minibatch_lg", "minibatch", n_nodes=232965, n_edges=114615892,
+              batch_nodes=1024, fanout=(15, 10), d_feat=602),
+    ShapeSpec("ogb_products", "full_graph", n_nodes=2449029, n_edges=61859140,
+              d_feat=100),
+    ShapeSpec("molecule", "molecule", n_nodes=30, n_edges=64,
+              graphs_per_batch=128, d_feat=16),
+]
+
+RECSYS_SHAPES = [
+    ShapeSpec("train_batch", "train", batch=65536),
+    ShapeSpec("serve_p99", "serve", batch=512),
+    ShapeSpec("serve_bulk", "bulk", batch=262144),
+    ShapeSpec("retrieval_cand", "retrieval", batch=1, n_candidates=1_000_000),
+]
+
+
+_REGISTRY: dict[str, Any] = {}
+
+
+def register(cfg) -> None:
+    _REGISTRY[cfg.name] = cfg
+
+
+def get_config(name: str):
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def all_archs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def shapes_for(cfg) -> list[ShapeSpec]:
+    return {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+            "recsys": RECSYS_SHAPES}[cfg.family]
+
+
+def cell_is_skipped(cfg, shape: ShapeSpec) -> str | None:
+    """Return a skip reason or None (cells per the assignment brief)."""
+    if cfg.family == "lm" and shape.kind == "long_decode" \
+            and cfg.attention == "full":
+        return ("pure full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md §4)")
+    return None
+
+
+def _load_all():
+    from . import (stablelm_12b, command_r_plus_104b, qwen2_0_5b,  # noqa: F401
+                   grok_1_314b, moonshot_v1_16b_a3b, graphcast,
+                   meshgraphnet, egnn, gat_cora, xdeepfm)

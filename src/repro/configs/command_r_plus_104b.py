@@ -1,0 +1,8 @@
+"""Command R+ 104B config — GQA, no bias [hf:CohereForAI/c4ai-command-r-v01]."""
+from .base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="command-r-plus-104b", n_layers=64, d_model=12288, n_heads=96,
+    n_kv_heads=8, d_ff=33792, vocab=256000, qkv_bias=False,
+)
+register(CONFIG)

@@ -1,0 +1,7 @@
+"""EGNN config [arXiv:2102.09844] — E(n)-equivariant."""
+from .base import GNNConfig, register
+
+CONFIG = GNNConfig(
+    name="egnn", kind="egnn", n_layers=4, d_hidden=64, aggregator="sum",
+)
+register(CONFIG)

@@ -1,0 +1,8 @@
+"""GAT (Cora) config [arXiv:1710.10903] — 2 layers, 8 heads × 8 dims."""
+from .base import GNNConfig, register
+
+CONFIG = GNNConfig(
+    name="gat-cora", kind="gat", n_layers=2, d_hidden=8, n_heads=8,
+    aggregator="attn", n_classes=7,
+)
+register(CONFIG)

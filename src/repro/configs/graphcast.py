@@ -1,0 +1,10 @@
+"""GraphCast processor config [arXiv:2212.12794] — encoder-processor-decoder
+mesh GNN; the icosahedral multi-mesh is supplied via the edge set
+(mesh_refinement=6), n_vars=227 input variables."""
+from .base import GNNConfig, register
+
+CONFIG = GNNConfig(
+    name="graphcast", kind="graphcast", n_layers=16, d_hidden=512,
+    aggregator="sum", mesh_refinement=6, n_vars=227, mlp_layers=2,
+)
+register(CONFIG)

@@ -1,0 +1,9 @@
+"""Grok-1 314B MoE config — 8 experts top-2 [hf:xai-org/grok-1]."""
+from .base import LMConfig, MoESpec, register
+
+CONFIG = LMConfig(
+    name="grok-1-314b", n_layers=64, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=32768, vocab=131072,
+    moe=MoESpec(n_experts=8, top_k=2, d_ff_expert=32768),
+)
+register(CONFIG)

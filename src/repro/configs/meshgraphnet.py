@@ -1,0 +1,8 @@
+"""MeshGraphNet config [arXiv:2010.03409]."""
+from .base import GNNConfig, register
+
+CONFIG = GNNConfig(
+    name="meshgraphnet", kind="meshgraphnet", n_layers=15, d_hidden=128,
+    aggregator="sum", mlp_layers=2,
+)
+register(CONFIG)

@@ -1,0 +1,10 @@
+"""Moonlight-16B-A3B MoE config — 64 experts top-6
+[hf:moonshotai/Moonlight-16B-A3B]."""
+from .base import LMConfig, MoESpec, register
+
+CONFIG = LMConfig(
+    name="moonshot-v1-16b-a3b", n_layers=48, d_model=2048, n_heads=16,
+    n_kv_heads=16, d_ff=1408, vocab=163840,
+    moe=MoESpec(n_experts=64, top_k=6, d_ff_expert=1408),
+)
+register(CONFIG)

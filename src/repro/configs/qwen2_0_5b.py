@@ -1,0 +1,9 @@
+"""Qwen2-0.5B config — GQA with QKV bias [arXiv:2407.10671]."""
+from .base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="qwen2-0.5b", n_layers=24, d_model=896, n_heads=14,
+    n_kv_heads=2, d_ff=4864, vocab=151936, qkv_bias=True,
+    tie_embeddings=True,  # 0.49B total, matching the published 0.5B
+)
+register(CONFIG)

@@ -1,0 +1,8 @@
+"""StableLM-2-12B family config [hf:stabilityai/stablelm-2-1_6b; hf]."""
+from .base import LMConfig, register
+
+CONFIG = LMConfig(
+    name="stablelm-12b", n_layers=40, d_model=5120, n_heads=32,
+    n_kv_heads=8, d_ff=13824, vocab=100352, qkv_bias=False,
+)
+register(CONFIG)

@@ -1,0 +1,9 @@
+"""xDeepFM config [arXiv:1803.05170] — CIN 200-200-200 + MLP 400-400."""
+from .base import RecsysConfig, register
+
+CONFIG = RecsysConfig(
+    name="xdeepfm", n_sparse=39, embed_dim=10,
+    cin_layers=(200, 200, 200), mlp_dims=(400, 400),
+    vocab_per_field=1_000_000, n_dense=13, bag_size=4,
+)
+register(CONFIG)

@@ -1,0 +1,13 @@
+"""Core: the paper's chordless-cycle enumeration engine (see DESIGN.md)."""
+from .bitset_graph import (BitsetGraph, build_graph, degree_labeling_np,
+                           degree_labeling_parallel, pack_bits, unpack_bits)
+from .engine import EnumerationResult, enumerate_chordless_cycles
+from .frontier import Frontier, empty_frontier
+from .ref_sequential import sequential_chordless_cycles
+
+__all__ = [
+    "BitsetGraph", "build_graph", "degree_labeling_np",
+    "degree_labeling_parallel", "pack_bits", "unpack_bits",
+    "EnumerationResult", "enumerate_chordless_cycles",
+    "Frontier", "empty_frontier", "sequential_chordless_cycles",
+]

@@ -1,0 +1,242 @@
+"""Compact graph representation for the chordless-cycle engine.
+
+Mirrors the paper's Harish–Narayanan CSR triple (V_e, E_e, L_v) and adds the
+TPU-native adjacency bitmap + label-threshold bitmap tables described in
+DESIGN.md §2.  All device arrays are plain jnp arrays so the whole structure
+is a pytree and can be donated to jit / shard_map / checkpointing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+WORD = 32  # bits per mask word (uint32)
+
+
+def n_words_for(n: int) -> int:
+    return max(1, (n + WORD - 1) // WORD)
+
+
+def pack_bits(dense: np.ndarray) -> np.ndarray:
+    """Pack a (..., n) {0,1} array into (..., ceil(n/32)) uint32 words.
+
+    Bit j of word w corresponds to vertex w*32 + j (little-endian within
+    word), matching ``bit_test``/``bit_set`` below.
+    """
+    dense = np.asarray(dense, dtype=np.uint8)
+    n = dense.shape[-1]
+    nw = n_words_for(n)
+    pad = nw * WORD - n
+    if pad:
+        pad_shape = dense.shape[:-1] + (pad,)
+        dense = np.concatenate([dense, np.zeros(pad_shape, np.uint8)], axis=-1)
+    dense = dense.reshape(dense.shape[:-1] + (nw, WORD))
+    shifts = (np.uint32(1) << np.arange(WORD, dtype=np.uint32))
+    return (dense.astype(np.uint32) * shifts).sum(axis=-1).astype(np.uint32)
+
+
+def unpack_bits(words: np.ndarray, n: int) -> np.ndarray:
+    words = np.asarray(words, dtype=np.uint32)
+    nw = words.shape[-1]
+    bits = (words[..., :, None] >> np.arange(WORD, dtype=np.uint32)) & np.uint32(1)
+    return bits.reshape(words.shape[:-1] + (nw * WORD,))[..., :n].astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# jnp bit helpers (vectorized; used by engine + kernels' reference path)
+# ---------------------------------------------------------------------------
+
+def bit_test(words: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Test bit ``v`` of each mask row.
+
+    words: (..., nw) uint32;  v: (...,) int32 broadcastable to words[...,0].
+    Returns bool of the broadcast shape. Out-of-range v (<0) tests word 0 via
+    clamp but callers must mask invalid slots themselves.
+    """
+    vi = jnp.clip(v, 0, None)
+    w = jnp.take_along_axis(words, (vi // WORD)[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return ((w >> (vi % WORD).astype(jnp.uint32)) & 1).astype(jnp.bool_)
+
+
+def bit_set(words: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Return rows with bit v set. words: (..., nw), v: (...,)."""
+    vi = jnp.clip(v, 0, None)
+    idx = (vi // WORD)[..., None].astype(jnp.int32)
+    cur = jnp.take_along_axis(words, idx, axis=-1)
+    new = cur | (jnp.uint32(1) << (vi % WORD).astype(jnp.uint32))[..., None]
+    out = jax.vmap(lambda ws, i, nv: ws.at[i].set(nv), in_axes=(0, 0, 0))
+    flat_w = words.reshape((-1, words.shape[-1]))
+    flat_i = idx.reshape((-1,))
+    flat_n = new.reshape((-1,))
+    return out(flat_w, flat_i, flat_n).reshape(words.shape)
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.population_count(words).astype(jnp.int32).sum(axis=-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitsetGraph:
+    """CSR + bitmap graph, device-resident. Static metadata in aux_data."""
+
+    # CSR (paper's V_e / E_e / L_v)
+    offsets: jnp.ndarray     # (n+1,) int32 — V_e
+    neighbors: jnp.ndarray   # (2m,) int32, sorted within each row — E_e
+    labels: jnp.ndarray      # (n,) int32 — L_v, degree labeling, values 0..n-1
+    # TPU-native additions
+    adj_bits: jnp.ndarray    # (n, nw) uint32 adjacency bitmap
+    labelgt_bits: jnp.ndarray  # (n, nw) uint32; row k = {v : labels[v] > k}
+    degrees: jnp.ndarray     # (n,) int32
+    # static
+    n: int
+    m: int
+    max_degree: int
+
+    def tree_flatten(self):
+        children = (self.offsets, self.neighbors, self.labels, self.adj_bits,
+                    self.labelgt_bits, self.degrees)
+        return children, (self.n, self.m, self.max_degree)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_words(self) -> int:
+        return self.adj_bits.shape[-1]
+
+
+def _csr_from_edges(n: int, edges: np.ndarray):
+    """edges: (m, 2) int array of undirected edges (no self loops / dups)."""
+    if edges.size == 0:
+        return np.zeros(n + 1, np.int32), np.zeros(0, np.int32)
+    und = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    order = np.lexsort((und[:, 1], und[:, 0]))
+    und = und[order]
+    counts = np.bincount(und[:, 0], minlength=n)
+    offsets = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return offsets.astype(np.int32), und[:, 1].astype(np.int32)
+
+
+def degree_labeling_np(n: int, edges: np.ndarray) -> np.ndarray:
+    """Faithful sequential degree labeling (paper §2 / Dias et al.).
+
+    Repeatedly remove a minimum-degree vertex of the remaining subgraph and
+    label it with the next integer (0-based here). Ties broken by smallest
+    vertex id for determinism.
+    """
+    adj = [set() for _ in range(n)]
+    for a, b in edges:
+        adj[int(a)].add(int(b))
+        adj[int(b)].add(int(a))
+    deg = np.array([len(s) for s in adj], dtype=np.int64)
+    alive = np.ones(n, dtype=bool)
+    labels = np.zeros(n, dtype=np.int32)
+    big = np.iinfo(np.int64).max
+    for i in range(n):
+        masked = np.where(alive, deg, big)
+        u = int(np.argmin(masked))  # argmin → smallest id tie-break
+        labels[u] = i
+        alive[u] = False
+        for w in adj[u]:
+            if alive[w]:
+                deg[w] -= 1
+    return labels
+
+
+def degree_labeling_parallel(adj_bits: jnp.ndarray, degrees: jnp.ndarray) -> jnp.ndarray:
+    """The paper's §6 future-work parallel labeling, in JAX.
+
+    n rounds; each round: masked argmin over degrees (parallel reduction),
+    then a vectorized degree decrement of the removed vertex's neighbors.
+    O(n log n) depth on n threads in the paper's model; here one fori_loop
+    with O(n) vector work per round. Produces the same labeling as
+    ``degree_labeling_np`` (same smallest-id tie-break).
+    """
+    n = degrees.shape[0]
+    nw = adj_bits.shape[-1]
+    big = jnp.int32(np.iinfo(np.int32).max // 2)
+
+    def body(i, state):
+        deg, alive_words, labels = state
+        alive_dense = _words_to_dense(alive_words, n)
+        masked = jnp.where(alive_dense, deg, big)
+        u = jnp.argmin(masked).astype(jnp.int32)
+        labels = labels.at[u].set(i)
+        # remove u
+        alive_words = alive_words & ~_onehot_words(u, nw)
+        nbr_alive = _words_to_dense(adj_bits[u] & alive_words, n)
+        deg = deg - nbr_alive.astype(jnp.int32)
+        deg = deg.at[u].set(big)
+        return deg, alive_words, labels
+
+    alive0 = jnp.full((nw,), jnp.uint32(0xFFFFFFFF))
+    # clear pad bits
+    alive0 = alive0 & pack_bits(np.ones(n, np.uint8))  # device-const fold
+    deg0 = degrees.astype(jnp.int32)
+    labels0 = jnp.zeros((n,), jnp.int32)
+    _, _, labels = jax.lax.fori_loop(0, n, body, (deg0, alive0, labels0))
+    return labels
+
+
+def _onehot_words(v: jnp.ndarray, nw: int) -> jnp.ndarray:
+    wi = (v // WORD).astype(jnp.int32)
+    return (jnp.uint32(1) << (v % WORD).astype(jnp.uint32)) * (
+        jnp.arange(nw, dtype=jnp.int32) == wi).astype(jnp.uint32)
+
+
+def _words_to_dense(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    nw = words.shape[-1]
+    bits = (words[..., :, None] >> jnp.arange(WORD, dtype=jnp.uint32)) & 1
+    return bits.reshape(words.shape[:-1] + (nw * WORD,))[..., :n].astype(jnp.bool_)
+
+
+def build_graph(n: int, edges: Iterable[Sequence[int]], *,
+                labels: np.ndarray | None = None,
+                parallel_labeling: bool = False) -> BitsetGraph:
+    """Build the device graph. ``edges`` = iterable of (u, v) pairs.
+
+    Self-loops are dropped; duplicate/reversed edges deduped.
+    """
+    e = np.asarray(list(edges), dtype=np.int64).reshape(-1, 2)
+    if e.size:
+        e = e[e[:, 0] != e[:, 1]]
+        e = np.unique(np.sort(e, axis=1), axis=0)
+    m = len(e)
+    offsets, nbr = _csr_from_edges(n, e)
+    deg = (offsets[1:] - offsets[:-1]).astype(np.int32)
+    maxd = int(deg.max()) if n else 0
+
+    dense = np.zeros((n, n), np.uint8)
+    if m:
+        dense[e[:, 0], e[:, 1]] = 1
+        dense[e[:, 1], e[:, 0]] = 1
+    adj_bits = pack_bits(dense)
+
+    if labels is None:
+        if parallel_labeling:
+            labels = np.asarray(
+                degree_labeling_parallel(jnp.asarray(adj_bits), jnp.asarray(deg)))
+        else:
+            labels = degree_labeling_np(n, e)
+    labels = np.asarray(labels, dtype=np.int32)
+
+    # labelgt_bits[k] = bitmap of {v : labels[v] > k}
+    gt = labels[None, :] > np.arange(n)[:, None]
+    labelgt_bits = pack_bits(gt.astype(np.uint8))
+
+    return BitsetGraph(
+        offsets=jnp.asarray(offsets),
+        neighbors=jnp.asarray(nbr),
+        labels=jnp.asarray(labels),
+        adj_bits=jnp.asarray(adj_bits),
+        labelgt_bits=jnp.asarray(labelgt_bits),
+        degrees=jnp.asarray(deg),
+        n=n, m=m, max_degree=maxd,
+    )

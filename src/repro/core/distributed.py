@@ -1,0 +1,207 @@
+"""Distributed chordless-cycle enumeration (shard_map over the data axis).
+
+Scaling story (DESIGN.md §5): the frontier — not the graph — is what
+explodes (14M live paths on Grid 7×10, unbounded in general), so we shard
+frontier ROWS across devices and replicate the (small) graph. Per round each
+device expands its local rows exactly as the single-device engine does.
+
+Load balance: initial triplets are dealt round-robin, but DFS trees are
+lopsided, so every round we run one step of *diffusion load balancing*
+(Cybenko '89): each device donates a fixed-size block of tail rows to its
+ring neighbor iff its live count exceeds the neighbor's by more than the
+block size. ``collective_permute`` with static block shapes keeps XLA happy
+(no ragged all-to-all); repeated rounds diffuse load like a heat equation.
+
+Fault tolerance: the sharded frontier + counters form a pytree —
+``checkpoint.save_pytree`` snapshots it every K rounds; a restart (possibly
+on a *different* device count) reshards via round-robin re-deal of live rows.
+
+Count-only mode (the paper's Grid 8×10 footnote) — cycle *bitmaps* stay
+device-local and could be all_gathered, but counting is the scalable output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .bitset_graph import BitsetGraph
+from .frontier import Frontier
+from . import expand as E
+from . import triplets as T
+
+
+@dataclasses.dataclass
+class DistEnumConfig:
+    local_capacity: int = 1 << 14     # frontier rows per device
+    balance_block: int = 256          # diffusion donation block (rows)
+    balance_every: int = 1            # rounds between balance steps
+    checkpoint_every: int = 0         # 0 = off
+    checkpoint_dir: str = "/tmp/repro_enum_ckpt"
+
+
+def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int):
+    """One expansion round on this device's rows. Returns (f', n_cyc, drop)."""
+    cand, is_cyc, is_ext = E.expand_flags_slot(g, f, delta)
+    n_cyc = is_cyc.sum(dtype=jnp.int32)
+    f2, dropped = E.compact_extensions(g, f, cand, is_ext, cap)
+    return f2, n_cyc, dropped
+
+
+def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str):
+    """Ring-shift ``block`` tail rows rightward; keep them iff give==0.
+
+    give ∈ {0,1} per device. Sends are unconditional (static shapes); the
+    *receiver* learns how many of the incoming rows are real via the
+    permuted (give * k) counter and appends only those.
+    """
+    cap = f.capacity
+    cnt = f.count
+    k = jnp.minimum(jnp.where(give > 0, block, 0), cnt).astype(jnp.int32)
+    start = cnt - k  # tail rows [start, start+k)
+    idx = (start + jnp.arange(block, dtype=jnp.int32)) % jnp.maximum(cap, 1)
+
+    axis_size = jax.lax.axis_size(axis)
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    send = lambda x: jax.lax.ppermute(x, axis, perm)
+
+    blk = Frontier(path=f.path[idx], blocked=f.blocked[idx], v1=f.v1[idx],
+                   l2=f.l2[idx], vlast=f.vlast[idx], count=k)
+    rblk = jax.tree_util.tree_map(send, blk)
+    rk = rblk.count
+
+    # drop donated tail locally; append received rows (capacity-clamped)
+    new_cnt = cnt - k
+    appended = jnp.minimum(rk, cap - new_cnt)
+    lost = rk - appended
+    dest = new_cnt + jnp.arange(block, dtype=jnp.int32)
+    dest = jnp.where(jnp.arange(block) < appended, dest, cap)  # drop pad rows
+    f2 = Frontier(
+        path=f.path.at[dest].set(rblk.path, mode="drop"),
+        blocked=f.blocked.at[dest].set(rblk.blocked, mode="drop"),
+        v1=f.v1.at[dest].set(rblk.v1, mode="drop"),
+        l2=f.l2.at[dest].set(rblk.l2, mode="drop"),
+        vlast=f.vlast.at[dest].set(rblk.vlast, mode="drop"),
+        count=new_cnt + appended,
+    )
+    return f2, lost
+
+
+def make_dist_step(mesh: Mesh, axis: str, g_spec, cfg: DistEnumConfig,
+                   delta: int):
+    """Build the jitted per-round shard_map step."""
+    cap = cfg.local_capacity
+    block = cfg.balance_block
+    fspec = Frontier(path=P(axis), blocked=P(axis), v1=P(axis), l2=P(axis),
+                     vlast=P(axis), count=P(axis))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(g_spec, fspec, P(axis)),
+        out_specs=(fspec, P(axis), P()),
+        check_rep=False)
+    def step(g, f, counters):
+        # local shards: path (cap, nw), count (1,), counters (1, 3)
+        f = Frontier(path=f.path, blocked=f.blocked, v1=f.v1, l2=f.l2,
+                     vlast=f.vlast, count=f.count[0])
+        f2, n_cyc, drop = _local_step(g, f, delta, cap)
+
+        # diffusion balance: donate a tail block iff my load exceeds my
+        # RIGHT neighbor's by more than one block.
+        axis_size = jax.lax.axis_size(axis)
+        perm_rev = [((i + 1) % axis_size, i) for i in range(axis_size)]
+        rcnt = jax.lax.ppermute(f2.count, axis, perm_rev)  # right's count
+        give = (f2.count > rcnt + block).astype(jnp.int32)
+        f2, lost = _donate(f2, give, block, axis)
+
+        total_live = jax.lax.psum(f2.count, axis)
+        new_counters = counters + jnp.stack(
+            [n_cyc, drop + lost, jnp.int32(0)]).reshape(1, 3)
+        new_counters = new_counters.at[0, 2].set(f2.count)
+        f2 = Frontier(path=f2.path, blocked=f2.blocked, v1=f2.v1, l2=f2.l2,
+                      vlast=f2.vlast, count=f2.count[None])
+        return f2, new_counters, total_live
+
+    return jax.jit(step)
+
+
+def enumerate_distributed(g: BitsetGraph, mesh: Mesh, axis: str = "data",
+                          cfg: DistEnumConfig | None = None,
+                          max_iters: int | None = None):
+    """Count all chordless cycles using every device on ``axis``.
+
+    Returns dict(n_cycles, n_triangles, iterations, dropped, per_device_live).
+    """
+    cfg = cfg or DistEnumConfig()
+    ndev = mesh.shape[axis]
+    cap = cfg.local_capacity
+    delta = max(g.max_degree, 1)
+
+    # --- stage 1 on host, round-robin deal to devices -----------------------
+    f0, _, n_tri = T.initial_frontier(g)
+    cnt = int(f0.count)
+    rows = np.arange(cnt)
+    per_dev = [rows[rows % ndev == d] for d in range(ndev)]
+    local = max((len(r) for r in per_dev), default=0)
+    if local > cap:
+        raise ValueError(f"initial triplets {local}/device exceed capacity {cap}")
+
+    nw = g.adj_bits.shape[1]
+    host = lambda a: np.asarray(a)
+    path_h, blocked_h = host(f0.path), host(f0.blocked)
+    v1_h, l2_h, vl_h = host(f0.v1), host(f0.l2), host(f0.vlast)
+
+    def deal(arr, fill=0):
+        out = np.full((ndev, cap) + arr.shape[1:], fill, arr.dtype)
+        for d, r in enumerate(per_dev):
+            out[d, :len(r)] = arr[r]
+        return out
+
+    fshard = Frontier(
+        path=jnp.asarray(deal(path_h).reshape(ndev * cap, nw)),
+        blocked=jnp.asarray(deal(blocked_h).reshape(ndev * cap, nw)),
+        v1=jnp.asarray(deal(v1_h, -1).reshape(ndev * cap)),
+        l2=jnp.asarray(deal(l2_h).reshape(ndev * cap)),
+        vlast=jnp.asarray(deal(vl_h).reshape(ndev * cap)),
+        count=jnp.asarray(np.array([len(r) for r in per_dev], np.int32)),
+    )
+    counters = jnp.zeros((ndev, 3), jnp.int32)
+
+    g_spec = jax.tree_util.tree_map(lambda _: P(), g)
+    step = make_dist_step(mesh, axis, g_spec, cfg, delta)
+
+    sh = jax.sharding.NamedSharding(mesh, P(axis))
+    rep = jax.sharding.NamedSharding(mesh, P())
+    fshard = Frontier(
+        path=jax.device_put(fshard.path, sh),
+        blocked=jax.device_put(fshard.blocked, sh),
+        v1=jax.device_put(fshard.v1, sh),
+        l2=jax.device_put(fshard.l2, sh),
+        vlast=jax.device_put(fshard.vlast, sh),
+        count=jax.device_put(fshard.count, sh),
+    )
+    g = jax.tree_util.tree_map(lambda x: jax.device_put(x, rep), g)
+    counters = jax.device_put(counters, sh)
+
+    limit = max_iters if max_iters is not None else max(g.n - 3, 0)
+    it = 0
+    while it < limit:
+        fshard, counters, total_live = step(g, fshard, counters)
+        it += 1
+        if cfg.checkpoint_every and it % cfg.checkpoint_every == 0:
+            from .. import checkpoint as ckpt
+            ckpt.save_pytree(cfg.checkpoint_dir, it,
+                             dict(frontier=fshard, counters=counters))
+        if int(total_live) == 0:
+            break
+
+    c = np.asarray(counters)
+    return dict(n_cycles=int(c[:, 0].sum()) + n_tri, n_triangles=n_tri,
+                iterations=it, dropped=int(c[:, 1].sum()),
+                per_device_live=c[:, 2].tolist())

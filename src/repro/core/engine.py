@@ -1,0 +1,145 @@
+"""Host process (paper Algorithm 4) — drives stage 1 + repeated stage 2.
+
+The paper relaunches the expansion kernel a fixed |V|−3 times with a
+double-buffered T/T' to avoid device→host convergence checks over PCIe.  Here
+the host loop re-jits only when the frontier capacity crosses a power-of-two
+bucket (bounded recompiles — the JAX analogue of persistent threads), and we
+*do* early-exit on count == 0 since reading a scalar is cheap on TPU
+(DESIGN.md §6.4).
+
+Modes:
+  * store=True  — returns every chordless cycle as a vertex bitmap (the
+                  paper's solution matrix S).
+  * store=False — count-only (the paper's Grid 8×10 footnote mode).
+Backends: 'jnp' (pure JAX) or 'pallas' (kernels/; interpret=True on CPU).
+Formulations: 'slot' (paper-faithful) or 'bitword' (TPU-native).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from .bitset_graph import BitsetGraph
+from . import expand as E
+from . import triplets as T
+from .frontier import Frontier, with_capacity
+
+
+def _bucket(c: int, *, growth_bits: int = 1) -> int:
+    """Round capacity up to a power-of-2 bucket (the paper's T/T' double
+    buffer becomes a small family of jit shapes). growth_bits=2 (×4 buckets)
+    was tried for §Perf engine hillclimb iter 4: cold time −18% (half the
+    recompiles) but WARM time +50% (dead-row work) — refuted for
+    steady-state serving, kept as a knob for one-shot runs."""
+    bits = max(4, math.ceil(math.log2(max(c, 1))))
+    return 1 << (-(-bits // growth_bits) * growth_bits)
+
+
+@dataclasses.dataclass
+class EnumerationResult:
+    n_cycles: int                 # all chordless cycles (incl. triangles)
+    n_triangles: int
+    cycle_masks: np.ndarray | None  # (n_cycles, nw) uint32, or None if count-only
+    iterations: int
+    history: list[dict]           # per-iteration |T|, |C| (paper Fig. 4)
+
+    def cycles_as_sets(self, n: int) -> list[frozenset[int]]:
+        from .bitset_graph import unpack_bits
+        assert self.cycle_masks is not None
+        dense = unpack_bits(self.cycle_masks, n)
+        return [frozenset(np.flatnonzero(r)) for r in dense]
+
+
+def enumerate_chordless_cycles(
+    g: BitsetGraph,
+    *,
+    store: bool = True,
+    formulation: str = "slot",
+    backend: str = "jnp",
+    max_iters: int | None = None,
+    progress: Callable[[dict], None] | None = None,
+) -> EnumerationResult:
+    """Enumerate (or count) all chordless cycles of ``g``."""
+    if backend == "pallas":
+        from ..kernels import ops as kops
+        slot_flags = kops.expand_flags_slot
+        trip_flags = kops.triplet_flags
+    else:
+        slot_flags = E.expand_flags_slot
+        trip_flags = T.triplet_flags
+
+    delta = max(g.max_degree, 1)
+    frontier, tri_masks, n_tri = T.initial_frontier(
+        g, bucket=_bucket, flags_fn=trip_flags)
+
+    cycles: list[np.ndarray] = [tri_masks] if store else []
+    n_cycles = n_tri
+    history = [dict(step=0, T=int(frontier.count), C=n_tri)]
+    limit = max_iters if max_iters is not None else max(g.n - 3, 0)
+
+    it = 0
+    while it < limit:
+        cnt = int(frontier.count)
+        if cnt == 0:
+            break
+        it += 1
+        # trim dead tail rows to current bucket to bound work
+        frontier = with_capacity(frontier, _bucket(cnt))
+
+        if formulation == "bitword" and not store:
+            # fast path (§Perf engine hillclimb): popcount-only cycle
+            # counting, 2 jit calls / round, exact output sizing.
+            ext_w, n_cyc_j, n_new_j = E.bitword_flags_count(g, frontier)
+            n_cyc, n_new = int(n_cyc_j), int(n_new_j)
+            n_cycles += n_cyc
+            frontier, dropped = E.bitword_compact(
+                g, frontier, ext_w, delta, _bucket(max(n_new, 1)))
+            assert int(dropped) == 0
+            rec = dict(step=it, T=n_new, C=n_cycles)
+            history.append(rec)
+            if progress:
+                progress(rec)
+            continue
+        if formulation == "bitword":
+            close_w, ext_w = E.expand_words_bitword(g, frontier)
+            cand_v = E.bitword_to_slots(ext_w, delta)
+            is_ext = cand_v >= 0
+            n_new = int(is_ext.sum())
+            # cycles from close words
+            ccand = E.bitword_to_slots(close_w, delta)
+            is_cyc = ccand >= 0
+            n_cyc = int(is_cyc.sum())
+            cyc_src, cyc_flags = ccand, is_cyc
+        else:
+            cand_v, is_cyc, is_ext = slot_flags(g, frontier, delta)
+            n_new_j, n_cyc_j = E.count_ext_and_cycles(is_cyc, is_ext)
+            n_new, n_cyc = int(n_new_j), int(n_cyc_j)
+            cyc_src, cyc_flags = cand_v, is_cyc
+
+        if store and n_cyc:
+            masks, _ = E.gather_cycles(frontier, cyc_src, cyc_flags,
+                                       _bucket(n_cyc))
+            cycles.append(np.asarray(masks)[:n_cyc])
+        n_cycles += n_cyc
+
+        out_cap = _bucket(n_new)
+        frontier, dropped = E.compact_extensions(g, frontier, cand_v, is_ext,
+                                                 out_cap)
+        assert int(dropped) == 0
+        rec = dict(step=it, T=n_new, C=n_cycles)
+        history.append(rec)
+        if progress:
+            progress(rec)
+
+    cycle_masks = None
+    if store:
+        nw = g.adj_bits.shape[1]
+        cycle_masks = (np.concatenate(cycles, axis=0) if cycles
+                       else np.zeros((0, nw), np.uint32))
+    return EnumerationResult(
+        n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=cycle_masks,
+        iterations=it, history=history)

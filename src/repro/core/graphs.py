@@ -1,0 +1,76 @@
+"""Graph generators for the paper's Table 1 suite + test fixtures."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def cycle_graph(n: int):
+    return n, [(i, (i + 1) % n) for i in range(n)]
+
+
+def wheel_graph(n_rim: int):
+    """Wheel with n_rim rim vertices + 1 hub (paper's 'Wheel 100' = 101 v)."""
+    edges = [(i, (i + 1) % n_rim) for i in range(n_rim)]
+    hub = n_rim
+    edges += [(hub, i) for i in range(n_rim)]
+    return n_rim + 1, edges
+
+
+def complete_bipartite(a: int, b: int):
+    return a + b, [(i, a + j) for i in range(a) for j in range(b)]
+
+
+def grid_graph(rows: int, cols: int):
+    def vid(r, c):
+        return r * cols + c
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            if c + 1 < cols:
+                edges.append((vid(r, c), vid(r, c + 1)))
+            if r + 1 < rows:
+                edges.append((vid(r, c), vid(r + 1, c)))
+    return rows * cols, edges
+
+
+def complete_graph(n: int):
+    return n, [(i, j) for i in range(n) for j in range(i + 1, n)]
+
+
+def random_gnp(n: int, p: float, seed: int):
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, k=1)
+    mask = rng.random(len(iu[0])) < p
+    return n, list(zip(iu[0][mask].tolist(), iu[1][mask].tolist()))
+
+
+def niche_overlap_like(n: int, n_prey: int, mean_preds: float, seed: int):
+    """Synthetic stand-in for the paper's food-web → niche-overlap graphs
+    (the ecology datasets are not redistributable offline): predators sharing
+    a prey become adjacent (Wilson–Watkins construction on a random web)."""
+    rng = np.random.default_rng(seed)
+    edges = set()
+    for _ in range(n_prey):
+        k = max(2, int(rng.poisson(mean_preds)))
+        preds = rng.choice(n, size=min(k, n), replace=False)
+        for i in range(len(preds)):
+            for j in range(i + 1, len(preds)):
+                a, b = int(preds[i]), int(preds[j])
+                edges.add((min(a, b), max(a, b)))
+    return n, sorted(edges)
+
+
+# paper Table 1 ground-truth: name -> (builder, n_triangles, n_clc_gt3)
+PAPER_TABLE1 = {
+    "C_100": (lambda: cycle_graph(100), 0, 1),
+    "Wheel_100": (lambda: wheel_graph(100), 100, 1),
+    "K_8_8": (lambda: complete_bipartite(8, 8), 0, 784),
+    "K_50_50": (lambda: complete_bipartite(50, 50), 0, 1500625),
+    "Grid_4x10": (lambda: grid_graph(4, 10), 0, 1823),
+    "Grid_5x6": (lambda: grid_graph(5, 6), 0, 749),
+    "Grid_5x10": (lambda: grid_graph(5, 10), 0, 52620),
+    "Grid_6x6": (lambda: grid_graph(6, 6), 0, 3436),
+    "Grid_6x10": (lambda: grid_graph(6, 10), 0, 800139),
+    "Grid_7x10": (lambda: grid_graph(7, 10), 0, 8136453),
+    "Grid_8x10": (lambda: grid_graph(8, 10), 0, 71535910),
+}

@@ -1,0 +1,22 @@
+"""Brute-force chordless-cycle oracle (tiny graphs only).
+
+A chordless cycle is uniquely determined by its vertex set (the induced
+subgraph is the cycle itself), so the oracle returns a set of frozensets.
+"""
+from __future__ import annotations
+
+import networkx as nx
+
+
+def chordless_cycle_sets(n: int, edges) -> set[frozenset]:
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    g.add_edges_from((int(a), int(b)) for a, b in edges if int(a) != int(b))
+    out = set()
+    for cyc in nx.simple_cycles(g):
+        k = len(cyc)
+        if k < 3:
+            continue
+        if g.subgraph(cyc).number_of_edges() == k:
+            out.add(frozenset(cyc))
+    return out

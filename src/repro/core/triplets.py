@@ -1,0 +1,117 @@
+"""Stage 1 — FindingInitialTripletsParallel (paper Algorithm 2).
+
+The paper launches |V|·Δ² GPU threads; thread j decodes (i_u, i_x, i_y) from
+its global id (Eqs. 1–3) and tests the label condition ℓ(u) < ℓ(x) < ℓ(y) plus
+adjacency of (x, y).  Here the same 3-D index grid is evaluated as one
+vectorized flag computation (tiled by the caller if n·Δ² is large); the
+paper's atomic append into C / T(G) becomes deterministic stream compaction
+(host nonzero or cumsum-scatter — DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bitset_graph import BitsetGraph, bit_test
+from .frontier import Frontier
+
+
+@partial(jax.jit, static_argnames=("delta",))
+def triplet_flags(g: BitsetGraph, delta: int):
+    """Flags over the (n, Δ, Δ) grid.
+
+    Returns (is_triangle, is_triplet) bool arrays of shape (n, Δ, Δ).
+    Mirrors Algorithm 2 lines 2–16 with the slot-validity trick of lines 8–9
+    (invalid slots encoded as x = −1) replaced by boolean masking.
+    """
+    n = g.labels.shape[0]
+    u = jnp.arange(n, dtype=jnp.int32)[:, None, None]
+    ix = jnp.arange(delta, dtype=jnp.int32)[None, :, None]
+    iy = jnp.arange(delta, dtype=jnp.int32)[None, None, :]
+    k1 = g.offsets[u]
+    deg = g.degrees[u]
+    slot_ok = (ix < deg) & (iy < deg) & (ix != iy)
+    last = jnp.maximum(g.neighbors.shape[0] - 1, 0)
+    x = g.neighbors[jnp.clip(k1 + ix, 0, last)]
+    y = g.neighbors[jnp.clip(k1 + iy, 0, last)]
+    lu, lx, ly = g.labels[u], g.labels[x], g.labels[y]
+    label_ok = (lu < lx) & (lx < ly)
+    adj_xy = bit_test(g.adj_bits[x], y)
+    base = slot_ok & label_ok
+    return base & adj_xy, base & ~adj_xy
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def gather_triplets(g: BitsetGraph, flat_idx: jnp.ndarray, n_valid: jnp.ndarray,
+                    capacity: int) -> Frontier:
+    """Materialize frontier rows from flat (n·Δ·Δ) grid indices.
+
+    flat_idx: (capacity,) int32 indices into the flattened stage-1 grid
+    (entries ≥ n_valid are padding).  Builds path = {x,u,y}, blocked = Adj(u),
+    v1 = x, l2 = ℓ(u), vlast = y.
+    """
+    delta = g.max_degree
+    nw = g.adj_bits.shape[1]
+    iu = flat_idx // (delta * delta)
+    rem = flat_idx % (delta * delta)
+    ix = rem // delta
+    iy = rem % delta
+    last = jnp.maximum(g.neighbors.shape[0] - 1, 0)
+    x = g.neighbors[jnp.clip(g.offsets[iu] + ix, 0, last)]
+    y = g.neighbors[jnp.clip(g.offsets[iu] + iy, 0, last)]
+
+    def onehot(v):
+        wi = (v // 32)[:, None]
+        return jnp.where(jnp.arange(nw)[None, :] == wi,
+                         jnp.uint32(1) << (v % 32).astype(jnp.uint32)[:, None],
+                         jnp.uint32(0))
+
+    live = (jnp.arange(capacity) < n_valid)
+    path = jnp.where(live[:, None], onehot(x) | onehot(iu) | onehot(y), 0)
+    blocked = jnp.where(live[:, None], g.adj_bits[iu], 0)
+    return Frontier(
+        path=path,
+        blocked=blocked,
+        v1=jnp.where(live, x, -1).astype(jnp.int32),
+        l2=jnp.where(live, g.labels[iu], 0).astype(jnp.int32),
+        vlast=jnp.where(live, y, 0).astype(jnp.int32),
+        count=n_valid.astype(jnp.int32),
+    )
+
+
+def initial_frontier(g: BitsetGraph, *, bucket=lambda c: max(1, int(c)),
+                     flags_fn=None):
+    """Host-side stage 1: flags → host nonzero → gathered Frontier.
+
+    Returns (frontier, triangle_masks (t, nw) uint32 np.ndarray, n_triangles).
+    ``flags_fn`` lets the Pallas kernel backend replace ``triplet_flags``.
+    """
+    nw = g.adj_bits.shape[1]
+    if g.m == 0:
+        from .frontier import empty_frontier
+        return empty_frontier(1, nw), np.zeros((0, nw), np.uint32), 0
+    delta = max(g.max_degree, 1)
+    fn = flags_fn or triplet_flags
+    tri, trip = fn(g, delta)
+    tri_idx = np.flatnonzero(np.asarray(tri).reshape(-1))
+    trip_idx = np.flatnonzero(np.asarray(trip).reshape(-1))
+
+    cap = bucket(max(len(trip_idx), 1))
+    idx = np.full(cap, 0, np.int32)
+    idx[:len(trip_idx)] = trip_idx
+    frontier = gather_triplets(g, jnp.asarray(idx),
+                               jnp.int32(len(trip_idx)), cap)
+
+    # triangles: materialize their bitmaps (vertex sets identify cycles)
+    n_tri = len(tri_idx)
+    if n_tri:
+        tcap = int(n_tri)
+        tidx = np.asarray(tri_idx, np.int32)
+        tri_f = gather_triplets(g, jnp.asarray(tidx), jnp.int32(n_tri), tcap)
+        tri_masks = np.asarray(tri_f.path)
+    else:
+        tri_masks = np.zeros((0, g.adj_bits.shape[1]), np.uint32)
+    return frontier, tri_masks, n_tri

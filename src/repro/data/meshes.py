@@ -1,0 +1,57 @@
+"""Icosahedral multi-mesh generator (GraphCast's processor topology)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def icosahedron():
+    phi = (1 + 5 ** 0.5) / 2
+    v = np.array([
+        [-1, phi, 0], [1, phi, 0], [-1, -phi, 0], [1, -phi, 0],
+        [0, -1, phi], [0, 1, phi], [0, -1, -phi], [0, 1, -phi],
+        [phi, 0, -1], [phi, 0, 1], [-phi, 0, -1], [-phi, 0, 1],
+    ], float)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    f = np.array([
+        [0, 11, 5], [0, 5, 1], [0, 1, 7], [0, 7, 10], [0, 10, 11],
+        [1, 5, 9], [5, 11, 4], [11, 10, 2], [10, 7, 6], [7, 1, 8],
+        [3, 9, 4], [3, 4, 2], [3, 2, 6], [3, 6, 8], [3, 8, 9],
+        [4, 9, 5], [2, 4, 11], [6, 2, 10], [8, 6, 7], [9, 8, 1],
+    ], int)
+    return v, f
+
+
+def refine(vertices: np.ndarray, faces: np.ndarray):
+    """One 4-way triangular refinement, vertices projected to the sphere."""
+    cache: dict[tuple[int, int], int] = {}
+    verts = list(vertices)
+
+    def mid(a, b):
+        key = (min(a, b), max(a, b))
+        if key not in cache:
+            m = (vertices[a] + vertices[b]) / 2
+            m = m / np.linalg.norm(m)
+            cache[key] = len(verts)
+            verts.append(m)
+        return cache[key]
+
+    new_faces = []
+    for a, b, c in faces:
+        ab, bc, ca = mid(a, b), mid(b, c), mid(c, a)
+        new_faces += [[a, ab, ca], [b, bc, ab], [c, ca, bc], [ab, bc, ca]]
+    return np.array(verts), np.array(new_faces, int)
+
+
+def icosphere_edges(refinement: int):
+    """(n_vertices, positions, undirected edge list) after ``refinement``
+    subdivision rounds. GraphCast uses the MULTI-mesh = union of edges from
+    every refinement level (coarse long-range + fine local edges)."""
+    v, f = icosahedron()
+    all_edges = set()
+    for level in range(refinement + 1):
+        for a, b, c in f:
+            for e in ((a, b), (b, c), (c, a)):
+                all_edges.add((min(e), max(e)))
+        if level < refinement:
+            v, f = refine(v, f)
+    return len(v), v, sorted(all_edges)

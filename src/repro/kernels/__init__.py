@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's two hot spots (+ TPU-native bitword).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
+under interpret=True on CPU against the pure-jnp oracles in ref.py.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel — bitword (TPU-native) Stage-2 formulation.
+
+Beyond-paper optimization (DESIGN.md §2 'bitword'): instead of Δ candidate
+slots per path, compute the *entire* candidate set of each path with
+word-parallel mask algebra over uint32 lanes:
+
+    cand  = Adj[v_last] & ~path & ~blocked & labelgt[ℓ(v₂)]
+    close = cand & Adj[v₁]          (each set bit = one chordless cycle)
+    ext   = cand & ~Adj[v₁]         (each set bit = one extended path)
+
+O(n/32) VPU ops per path, independent of Δ, fully branch-free — this is what
+replaces the paper's per-thread neighbor loop + O(t·logΔ) chord re-check.
+Cycle counting fuses a population_count reduction in the same kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitword_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
+                    adj_ref, labelgt_ref,
+                    close_ref, ext_ref, ncyc_ref):
+    path = path_ref[...]
+    blocked = blocked_ref[...]
+    v1 = v1_ref[...][:, 0]
+    l2 = l2_ref[...][:, 0]
+    vlast = vlast_ref[...][:, 0]
+    adj = adj_ref[...]
+    labelgt = labelgt_ref[...]
+    n = adj.shape[0]
+
+    adj_last = jnp.take(adj, jnp.clip(vlast, 0, n - 1), axis=0)
+    adj_v1 = jnp.take(adj, jnp.clip(v1, 0, n - 1), axis=0)
+    gt = jnp.take(labelgt, jnp.clip(l2, 0, n - 1), axis=0)
+
+    cand = adj_last & ~path & ~blocked & gt
+    close = cand & adj_v1
+    close_ref[...] = close
+    ext_ref[...] = cand & ~adj_v1
+    ncyc_ref[...] = jax.lax.population_count(close).astype(jnp.int32).sum(
+        axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def bitword_expand_pallas(path, blocked, v1, l2, vlast, count,
+                          adj_bits, labelgt_bits,
+                          *, tile: int = 128, interpret: bool = True):
+    """Returns (close_words, ext_words, n_cycles_per_row) for live rows."""
+    cap, nw = path.shape
+    tp = min(tile, max(8, cap))
+    pad = (-cap) % tp
+    padded = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    col = lambda a: padded(a.reshape(-1, 1))
+    capp = cap + pad
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+
+    close, ext, ncyc = pl.pallas_call(
+        _bitword_kernel,
+        grid=(capp // tp,),
+        in_specs=[
+            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
+            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
+            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
+            whole(adj_bits), whole(labelgt_bits),
+        ],
+        out_specs=[pl.BlockSpec((tp, nw), lambda i: (i, 0)),
+                   pl.BlockSpec((tp, nw), lambda i: (i, 0)),
+                   pl.BlockSpec((tp, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((capp, nw), jnp.uint32),
+                   jax.ShapeDtypeStruct((capp, nw), jnp.uint32),
+                   jax.ShapeDtypeStruct((capp, 1), jnp.int32)],
+        interpret=interpret,
+    )(padded(path), padded(blocked), col(v1), col(l2), col(vlast),
+      adj_bits, labelgt_bits)
+
+    live = (jnp.arange(cap, dtype=jnp.int32) < count)[:, None]
+    z = jnp.uint32(0)
+    return (jnp.where(live, close[:cap], z),
+            jnp.where(live, ext[:cap], z),
+            jnp.where(live, ncyc[:cap], 0)[:, 0])

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel for Stage 2 — ExpandingChordlessPathsParallel.
+
+This is the paper's hot spot (Algorithm 3): for every in-flight chordless
+path and every candidate slot j < Δ, decide cycle / extend / discard.
+
+TPU mapping (DESIGN.md §2):
+  * grid iterates over frontier row tiles (TP paths per step) — the analogue
+    of the paper's persistent-thread blocks;
+  * the whole graph (CSR neighbors + adjacency bitmap + labels) is pinned in
+    VMEM via BlockSpecs with a constant index_map — the analogue of the
+    paper's "graph in SM shared memory" trick (§4.2). This bounds supported
+    graphs to n·nw·4 + 2m·4 ≲ VMEM (n ≈ 8k on a 16 MB v5e core), the same
+    kind of capacity limit the paper accepts for its 64 KB SMs;
+  * the per-candidate `if` ladder becomes branch-free mask algebra on the
+    VPU; chord checking is one word-probe into the *blocked* bitset;
+  * no atomics: the kernel only emits flags; prefix-sum compaction happens
+    outside (stream compaction — the TPU replacement for the paper's
+    serialized index allocation).
+
+Block shapes: path/blocked tiles are (TP, nw) uint32 — nw = ⌈n/32⌉ words.
+TP defaults to 128 (8×16 sublane×lane friendly); flag outputs are (TP, Δp)
+with Δp = Δ rounded up to a lane multiple by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expand_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
+                   offsets_ref, neighbors_ref, labels_ref, adj_ref,
+                   cand_ref, cycle_ref, ext_ref, *, delta_p: int):
+    path = path_ref[...]          # (TP, nw) uint32
+    blocked = blocked_ref[...]    # (TP, nw) uint32
+    v1 = v1_ref[...][:, 0]        # (TP,)
+    l2 = l2_ref[...][:, 0]
+    vlast = vlast_ref[...][:, 0]
+    offsets = offsets_ref[...][:, 0]     # (n+1,)
+    neighbors = neighbors_ref[...][:, 0]  # (2m_pad,)
+    labels = labels_ref[...][:, 0]        # (n,)
+    adj = adj_ref[...]                    # (n, nw)
+
+    tp = path.shape[0]
+    j = jax.lax.broadcasted_iota(jnp.int32, (tp, delta_p), 1)
+    k1 = offsets[jnp.clip(vlast, 0, offsets.shape[0] - 2)][:, None]
+    k2 = offsets[jnp.clip(vlast, 0, offsets.shape[0] - 2) + 1][:, None]
+    slot_ok = j < (k2 - k1)                                     # j < deg(v_t)
+    v = jnp.take(neighbors, jnp.clip(k1 + j, 0, neighbors.shape[0] - 1))
+    vi = jnp.clip(v, 0, labels.shape[0] - 1)
+
+    lab_ok = jnp.take(labels, vi) > l2[:, None]                 # ℓ(v) > ℓ(v₂)
+
+    word = (vi // 32).astype(jnp.int32)
+    bit = (jnp.uint32(1) << (vi % 32).astype(jnp.uint32))
+
+    def probe(mask_rows):  # (TP, nw) -> bit of v per slot (TP, Δp)
+        w = jnp.take_along_axis(
+            mask_rows[:, None, :].repeat(delta_p, axis=1),
+            word[..., None], axis=2)[..., 0]
+        return (w & bit) != 0
+
+    in_path = probe(path)
+    in_blocked = probe(blocked)
+    adj_v1 = jnp.take(adj, jnp.clip(v1, 0, adj.shape[0] - 1), axis=0)
+    closes = probe(adj_v1)
+
+    valid = slot_ok & lab_ok & ~in_path & ~in_blocked
+    cand_ref[...] = v.astype(jnp.int32)
+    cycle_ref[...] = valid & closes
+    ext_ref[...] = valid & ~closes
+
+
+def _pad_to(x, mult, axis=0, fill=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("delta", "tile", "interpret"))
+def frontier_expand_pallas(path, blocked, v1, l2, vlast, count,
+                           offsets, neighbors, labels, adj_bits,
+                           *, delta: int, tile: int = 128,
+                           interpret: bool = True):
+    """Returns (cand_v, is_cycle, is_ext), each (cap, Δ)."""
+    cap, nw = path.shape
+    n = labels.shape[0]
+    tp = min(tile, max(8, cap))
+    delta_p = max(8, -(-delta // 8) * 8)  # pad Δ to a multiple of 8 lanes
+
+    path_p = _pad_to(path, tp)
+    blocked_p = _pad_to(blocked, tp)
+    capp = path_p.shape[0]
+    col = lambda a: _pad_to(a.reshape(-1, 1), tp)
+    v1_p, l2_p, vl_p = col(v1), col(l2), col(vlast)
+    nbr = _pad_to(neighbors.reshape(-1, 1), 8, fill=0)
+    offs = offsets.reshape(-1, 1)
+    labs = labels.reshape(-1, 1)
+
+    grid = (capp // tp,)
+    kernel = functools.partial(_expand_kernel, delta_p=delta_p)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+
+    cand, cyc, ext = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
+            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
+            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
+            whole(offs), whole(nbr), whole(labs), whole(adj_bits),
+        ],
+        out_specs=[
+            pl.BlockSpec((tp, delta_p), lambda i: (i, 0)),
+            pl.BlockSpec((tp, delta_p), lambda i: (i, 0)),
+            pl.BlockSpec((tp, delta_p), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capp, delta_p), jnp.int32),
+            jax.ShapeDtypeStruct((capp, delta_p), jnp.bool_),
+            jax.ShapeDtypeStruct((capp, delta_p), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(path_p, blocked_p, v1_p, l2_p, vl_p, offs, nbr, labs, adj_bits)
+
+    live = (jnp.arange(cap, dtype=jnp.int32) < count)[:, None]
+    cand = cand[:cap, :delta]
+    cyc = cyc[:cap, :delta] & live
+    ext = ext[:cap, :delta] & live
+    return cand, cyc, ext

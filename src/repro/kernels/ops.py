@@ -1,0 +1,40 @@
+"""Jit'd wrappers exposing the Pallas kernels with engine-compatible
+signatures. On CPU (this container) kernels run under interpret=True; on a
+real TPU backend set ``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from ..core.bitset_graph import BitsetGraph
+from ..core.frontier import Frontier
+from .frontier_expand import frontier_expand_pallas
+from .triplet_init import triplet_init_pallas
+from .bitword_expand import bitword_expand_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or \
+    jax.default_backend() != "tpu"
+
+
+def expand_flags_slot(g: BitsetGraph, f: Frontier, delta: int):
+    """Drop-in for core.expand.expand_flags_slot (slot formulation)."""
+    return frontier_expand_pallas(
+        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+        g.offsets, g.neighbors, g.labels, g.adj_bits,
+        delta=delta, interpret=INTERPRET)
+
+
+def triplet_flags(g: BitsetGraph, delta: int):
+    """Drop-in for core.triplets.triplet_flags (stage 1)."""
+    return triplet_init_pallas(g.offsets, g.neighbors, g.labels, g.adj_bits,
+                               delta=delta, interpret=INTERPRET)
+
+
+def expand_words_bitword(g: BitsetGraph, f: Frontier):
+    """Drop-in for core.expand.expand_words_bitword (TPU-native)."""
+    close, ext, _ = bitword_expand_pallas(
+        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+        g.adj_bits, g.labelgt_bits, interpret=INTERPRET)
+    return close, ext

@@ -1,0 +1,15 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the *definitions* of kernel semantics — the engine's own jnp path
+(core.expand / core.triplets) reuses the same functions, so a kernel bug
+cannot hide behind a shared implementation: tests compare kernel output to
+these references elementwise across shape/density sweeps.
+"""
+from __future__ import annotations
+
+from ..core.expand import expand_flags_slot as expand_flags_slot_ref
+from ..core.expand import expand_words_bitword as expand_words_bitword_ref
+from ..core.triplets import triplet_flags as triplet_flags_ref
+
+__all__ = ["expand_flags_slot_ref", "expand_words_bitword_ref",
+           "triplet_flags_ref"]

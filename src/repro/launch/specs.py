@@ -1,0 +1,301 @@
+"""Cell definitions: (architecture × input shape) → abstract inputs, step
+function, state, and shardings. Used by the smoke tests (reduced configs,
+concrete arrays) and the multi-pod dry-run (full configs, ShapeDtypeStructs,
+never allocated)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import base as B
+from ..configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeSpec
+from ..dist.sharding import DEFAULT_RULES, logical_to_spec, tree_shardings
+from ..models import gnn as G
+from ..models import recsys as R
+from ..models import transformer as T
+from ..train import trainer as TR
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# d_out / feature dims per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def gnn_dims(cfg: GNNConfig, shape: ShapeSpec):
+    """(d_feat, d_edge, d_out, classification?) for a GNN cell."""
+    d_feat = shape.d_feat or 16
+    if cfg.kind == "graphcast":
+        return max(d_feat, 1), 4, cfg.n_vars, False
+    if cfg.kind == "meshgraphnet":
+        return max(d_feat, 1), 4, 3, False
+    if cfg.kind == "egnn":
+        return max(d_feat, 1), 0, 1, False
+    n_classes = {"full_graph_sm": 7, "minibatch_lg": 41,
+                 "ogb_products": 47, "molecule": 16}.get(shape.name,
+                                                         cfg.n_classes)
+    return max(d_feat, 1), 0, n_classes, True
+
+
+def gnn_batch_shapes(cfg: GNNConfig, shape: ShapeSpec):
+    """Static padded (N, E, G) for the batch arrays."""
+    if shape.kind == "minibatch":
+        s = shape.batch_nodes
+        width, n, e = s, s, 0
+        for f in shape.fanout:
+            width *= f
+            n += width
+            e += width
+        return _pad_to(n, 512), _pad_to(e, 512), 0
+    if shape.kind == "molecule":
+        g = shape.graphs_per_batch
+        return (_pad_to(shape.n_nodes * g, 512),
+                _pad_to(shape.n_edges * g, 512), g)
+    return _pad_to(shape.n_nodes, 512), _pad_to(shape.n_edges, 512), 0
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per cell
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape: ShapeSpec):
+    """Returns (abstract_inputs, logical_axes) for the cell's step inputs
+    EXCLUDING model/optimizer state (see state_specs)."""
+    if cfg.family == "lm":
+        b, s = shape.global_batch, shape.seq_len
+        tok_l = ("batch", "seq")
+        if shape.kind == "train":
+            return ({"tokens": SDS((b, s), jnp.int32),
+                     "labels": SDS((b, s), jnp.int32)},
+                    {"tokens": tok_l, "labels": tok_l})
+        if shape.kind == "prefill":
+            return {"tokens": SDS((b, s), jnp.int32)}, {"tokens": tok_l}
+        # decode / long_decode: one new token against a seq_len KV cache
+        cache_ab, cache_l = T.abstract_kv_cache(cfg, b, s)
+        return ({"tokens": SDS((b, 1), jnp.int32), "cache": cache_ab},
+                {"tokens": tok_l, "cache": cache_l})
+
+    if cfg.family == "gnn":
+        n, e, g = gnn_batch_shapes(cfg, shape)
+        d_feat, d_edge, d_out, classify = gnn_dims(cfg, shape)
+        ab = {
+            "node_feat": SDS((n, d_feat), jnp.float32),
+            "senders": SDS((e,), jnp.int32),
+            "receivers": SDS((e,), jnp.int32),
+            "node_mask": SDS((n,), jnp.float32),
+            "edge_mask": SDS((e,), jnp.float32),
+        }
+        lg = {
+            "node_feat": ("nodes", None),
+            "senders": ("edges",), "receivers": ("edges",),
+            "node_mask": ("nodes",), "edge_mask": ("edges",),
+        }
+        if cfg.kind in ("graphcast", "meshgraphnet"):
+            ab["edge_feat"] = SDS((e, d_edge), jnp.float32)
+            lg["edge_feat"] = ("edges", None)
+        if cfg.kind == "egnn":
+            ab["coords"] = SDS((n, 3), jnp.float32)
+            lg["coords"] = ("nodes", None)
+        if g:  # molecule readout
+            ab["graph_ids"] = SDS((n,), jnp.int32)
+            lg["graph_ids"] = ("nodes",)
+            if cfg.kind == "egnn":
+                ab["labels"] = SDS((g, d_out), jnp.float32)
+            elif classify:
+                ab["labels"] = SDS((n,), jnp.int32)
+            else:
+                ab["labels"] = SDS((n, d_out), jnp.float32)
+        elif classify:
+            ab["labels"] = SDS((n,), jnp.int32)
+        else:
+            ab["labels"] = SDS((n, d_out), jnp.float32)
+        lg["labels"] = ("nodes",) if len(ab["labels"].shape) == 1 else \
+            (("nodes", None) if ab["labels"].shape[0] == n else (None, None))
+        return ab, lg
+
+    # recsys
+    f, bag, nd = cfg.n_sparse, cfg.bag_size, cfg.n_dense
+    if shape.kind == "retrieval":
+        ncand = _pad_to(shape.n_candidates, 512)
+        d_tower = (f + 1) * cfg.embed_dim
+        return ({"sparse_ids": SDS((1, f, bag), jnp.int32),
+                 "dense": SDS((1, nd), jnp.float32),
+                 "candidates": SDS((ncand, d_tower), jnp.float32)},
+                {"sparse_ids": (None, None, None), "dense": (None, None),
+                 "candidates": ("candidates", None)})
+    b = shape.batch
+    ab = {"sparse_ids": SDS((b, f, bag), jnp.int32),
+          "dense": SDS((b, nd), jnp.float32)}
+    lg = {"sparse_ids": ("recsys_batch", None, None),
+          "dense": ("recsys_batch", None)}
+    if shape.kind == "train":
+        ab["labels"] = SDS((b,), jnp.float32)
+        lg["labels"] = ("recsys_batch",)
+    return ab, lg
+
+
+# ---------------------------------------------------------------------------
+# Model state per cell
+# ---------------------------------------------------------------------------
+
+def model_abstract(cfg, shape: ShapeSpec, dtype=jnp.float32):
+    """(abstract_params, logical) for the arch (GNN dims depend on shape)."""
+    if cfg.family == "lm":
+        return T.abstract_params(cfg, dtype)
+    if cfg.family == "gnn":
+        d_feat, d_edge, d_out, _ = gnn_dims(cfg, shape)
+        ab = G.gnn_abstract_params(cfg, d_feat, d_edge, d_out, dtype)
+        logical = jax.tree_util.tree_map(
+            lambda s: ("gnn",) * len(s.shape), ab)
+        return ab, logical
+    ab, logical = R.abstract_params(cfg, dtype)
+    return ab, logical
+
+
+def model_init(cfg, shape: ShapeSpec, key, dtype=jnp.float32):
+    if cfg.family == "lm":
+        return T.init_params(cfg, key, dtype)
+    if cfg.family == "gnn":
+        d_feat, d_edge, d_out, _ = gnn_dims(cfg, shape)
+        return G.gnn_init_params(cfg, key, d_feat, d_edge, d_out, dtype)
+    return R.init_params(cfg, key, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg, shape: ShapeSpec, mesh=None, rules=None,
+                 remat: str = "dots", unroll: bool = False):
+    if cfg.family == "lm":
+        return functools.partial(T.loss_fn, cfg=cfg, mesh=mesh, rules=rules,
+                                 remat=remat, unroll=unroll)
+    if cfg.family == "gnn":
+        gr = "full" if remat in ("dots", "full") else "none"
+        return functools.partial(G.gnn_loss, cfg=cfg, mesh=mesh, rules=rules,
+                                 remat=gr, unroll=unroll)
+    return functools.partial(R.loss_fn, cfg=cfg, mesh=mesh, rules=rules)
+
+
+def make_step(cfg, shape: ShapeSpec, *, mesh=None, rules=None,
+              tcfg: TR.TrainConfig | None = None, remat: str = "dots",
+              unroll: bool = False):
+    """Returns (step_fn, kind) where kind ∈ {train, serve}.
+
+    train: step(state, batch) -> (state, metrics)
+    serve: step(params, batch) -> outputs
+    """
+    is_train = shape.kind == "train" or (cfg.family == "gnn")
+    if is_train:
+        tcfg = tcfg or TR.TrainConfig(
+            adamw=_adamw_for(cfg))
+        loss = make_loss_fn(cfg, shape, mesh, rules, remat, unroll)
+        return TR.make_train_step(loss, tcfg), "train"
+
+    if cfg.family == "lm":
+        if shape.kind == "prefill":
+            def step(params, batch):
+                return T.prefill_step(params, batch["tokens"], cfg,
+                                      mesh=mesh, rules=rules, unroll=unroll)
+            return step, "serve"
+
+        def step(params, batch):
+            return T.decode_step(params, batch["cache"], batch["tokens"],
+                                 cfg, mesh=mesh, rules=rules, unroll=unroll)
+        return step, "serve"
+
+    # recsys serve / bulk / retrieval
+    if shape.kind == "retrieval":
+        def step(params, batch):
+            return R.retrieval_score(params, batch, cfg, mesh=mesh,
+                                     rules=rules)
+        return step, "serve"
+
+    def step(params, batch):
+        return R.forward(params, batch, cfg, mesh=mesh, rules=rules)
+    return step, "serve"
+
+
+def _adamw_for(cfg):
+    from ..train.optimizer import AdamWConfig
+    big = cfg.family == "lm" and cfg.n_params() > 50e9
+    return AdamWConfig(factored=big)   # Adafactor-lite ≥50B (DESIGN.md §5)
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs (CPU smoke tests)
+# ---------------------------------------------------------------------------
+
+def reduced_config(cfg):
+    if cfg.family == "lm":
+        moe = None
+        if cfg.moe:
+            moe = dataclasses.replace(cfg.moe, n_experts=4, top_k=2,
+                                      d_ff_expert=64)
+        return dataclasses.replace(
+            cfg, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+            d_ff=128, vocab=512, head_dim=16, moe=moe)
+    if cfg.family == "gnn":
+        return dataclasses.replace(
+            cfg, n_layers=2, d_hidden=16,
+            n_vars=8 if cfg.n_vars else 0)
+    return dataclasses.replace(cfg, embed_dim=4, cin_layers=(8, 8),
+                               mlp_dims=(16, 16), vocab_per_field=1000)
+
+
+def reduced_shape(cfg, shape: ShapeSpec) -> ShapeSpec:
+    if cfg.family == "lm":
+        return dataclasses.replace(shape, seq_len=32, global_batch=2)
+    if cfg.family == "gnn":
+        if shape.kind == "minibatch":
+            return dataclasses.replace(shape, batch_nodes=8, fanout=(3, 2),
+                                       n_nodes=200, n_edges=2000, d_feat=12)
+        if shape.kind == "molecule":
+            return dataclasses.replace(shape, n_nodes=6, n_edges=10,
+                                       graphs_per_batch=4, d_feat=8)
+        return dataclasses.replace(shape, n_nodes=60, n_edges=240, d_feat=12)
+    if shape.kind == "retrieval":
+        return dataclasses.replace(shape, n_candidates=256)
+    return dataclasses.replace(shape, batch=8)
+
+
+def concrete_batch(cfg, shape: ShapeSpec, seed: int = 0):
+    """Random concrete arrays matching input_specs (smoke tests)."""
+    ab, _ = input_specs(cfg, shape)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in ab.items():
+        if k == "tokens":
+            out[k] = rng.integers(0, cfg.vocab, s.shape).astype(np.int32)
+        elif k == "labels" and np.issubdtype(s.dtype, np.integer):
+            hi = gnn_dims(cfg, shape)[2] if cfg.family == "gnn" else 8
+            out[k] = (rng.integers(0, max(hi, 2), s.shape)).astype(np.int32)
+        elif k == "sparse_ids":
+            out[k] = rng.integers(0, cfg.vocab_per_field, s.shape).astype(np.int32)
+        elif k in ("senders", "receivers"):
+            n = gnn_batch_shapes(cfg, shape)[0]
+            out[k] = rng.integers(0, max(n, 1), s.shape).astype(np.int32)
+        elif k == "graph_ids":
+            g = gnn_batch_shapes(cfg, shape)[2]
+            out[k] = (np.arange(s.shape[0]) % max(g, 1)).astype(np.int32)
+        elif k == "cache" or isinstance(s, dict):
+            out[k] = jax.tree_util.tree_map(
+                lambda x: np.zeros(x.shape, x.dtype), s)
+        elif "mask" in k:
+            out[k] = np.ones(s.shape, np.float32)
+        else:
+            out[k] = rng.normal(size=s.shape).astype(s.dtype) \
+                if np.issubdtype(s.dtype, np.floating) else \
+                np.zeros(s.shape, s.dtype)
+    return out

@@ -1,0 +1,130 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --shape train_4k --steps 100 [--fake-devices 8] [--reduced]
+
+Builds the mesh, shards state via the logical rules, feeds the host-sharded
+data pipeline through the jitted train step, checkpoints periodically, and
+resumes (possibly on a different mesh — elastic) from the latest checkpoint.
+``--fake-devices`` forces N host devices (must be set before jax init, so it
+re-execs the process with XLA_FLAGS when needed).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _maybe_reexec(n: int):
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if flag not in os.environ.get("XLA_FLAGS", "") and n > 1:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                   + " " + flag).strip()
+        os.execv(sys.executable, [sys.executable, "-m",
+                                  "repro.launch.train"] + sys.argv[1:])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config/shape (CPU-sized)")
+    ap.add_argument("--fake-devices", type=int, default=1)
+    ap.add_argument("--mesh", default=None,
+                    help="mesh shape, e.g. 2x4 (data x model)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    _maybe_reexec(args.fake_devices)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from ..configs.base import get_config, shapes_for
+    from ..data.pipeline import Prefetcher, recsys_batches, token_batches
+    from ..dist.fault import StragglerPolicy
+    from ..dist.sharding import DEFAULT_RULES, tree_shardings
+    from ..train import trainer as TR
+    from .. import checkpoint as ckpt
+    from . import specs as S
+
+    cfg = get_config(args.arch)
+    shape = next(s for s in shapes_for(cfg)
+                 if args.shape in (None, s.name) and s.kind == "train")
+    if args.reduced:
+        cfg = S.reduced_config(cfg)
+        shape = S.reduced_shape(cfg, shape)
+
+    ndev = len(jax.devices())
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+    else:
+        dims = (ndev, 1)
+    mesh = jax.make_mesh(dims, ("data", "model")[:len(dims)])
+    print(f"mesh {dims} over {ndev} devices; arch {cfg.name} "
+          f"shape {shape.name}")
+
+    tcfg = TR.TrainConfig(lr=1e-3, warmup=10, total_steps=args.steps,
+                          microbatches=args.microbatches,
+                          adamw=S._adamw_for(cfg))
+    step_fn, kind = S.make_step(cfg, shape, mesh=mesh, rules=DEFAULT_RULES,
+                                tcfg=tcfg)
+    assert kind == "train"
+
+    params_ab, params_logical = S.model_abstract(cfg, shape)
+    state_ab = TR.abstract_state(params_ab, tcfg)
+    state_logical = TR.state_logical(params_logical, tcfg, params_ab)
+    state_sh = tree_shardings(state_logical, state_ab, mesh, DEFAULT_RULES)
+    in_ab, in_logical = S.input_specs(cfg, shape)
+    in_sh = tree_shardings(in_logical, in_ab, mesh, DEFAULT_RULES)
+
+    jstep = jax.jit(step_fn, in_shardings=(state_sh, in_sh),
+                    out_shardings=(state_sh, None), donate_argnums=0)
+
+    last = ckpt.latest_step(args.ckpt_dir)
+    if last is not None:
+        # elastic restore: reshard onto the CURRENT mesh
+        from ..dist.elastic import resume_on_mesh
+        state, _ = resume_on_mesh(args.ckpt_dir, state_ab,
+                                  state_logical, mesh)
+        print(f"resumed step {last} (elastic reshard onto {dims})")
+    else:
+        params = S.model_init(cfg, shape, jax.random.PRNGKey(0))
+        state = TR.init_state(params, tcfg)
+        state = jax.device_put(state, state_sh)
+
+    if cfg.family == "lm":
+        data = Prefetcher(token_batches(
+            vocab=cfg.vocab, seq_len=shape.seq_len,
+            global_batch=shape.global_batch))
+    elif cfg.family == "recsys":
+        data = Prefetcher(recsys_batches(
+            batch=shape.batch, n_sparse=cfg.n_sparse, bag=cfg.bag_size,
+            vocab=cfg.vocab_per_field, n_dense=cfg.n_dense))
+    else:
+        data = iter(lambda: S.concrete_batch(cfg, shape, seed=0), None)
+
+    pol = StragglerPolicy()
+    start = int(jax.device_get(state["step"]))
+    for i, batch in zip(range(start, args.steps), data):
+        t0 = time.perf_counter()
+        state, m = jstep(state, jax.tree_util.tree_map(jnp.asarray, batch))
+        dt = time.perf_counter() - t0
+        pol.observe(dt)
+        if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
+            ckpt.save_pytree(args.ckpt_dir, i + 1, state)
+        if (i + 1) % 5 == 0 or i == start:
+            print(f"step {i+1} loss={float(m['loss']):.4f} {dt*1e3:.0f}ms"
+                  + (" [straggler-remediate]" if pol.should_remediate else ""))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,309 @@
+"""GNN zoo: GraphCast, MeshGraphNet, EGNN, GAT — segment_sum message passing.
+
+JAX has no sparse-matmul fast path for this (BCOO only), so message passing
+is built on the edge-index → gather → segment_sum/segment_max primitive, as
+the assignment brief requires. One static-shape batch format serves all four
+archs and all four shape cells (padded edges carry edge_mask=0 and scatter
+into a dead pad node).
+
+Batch dict (all padded/static):
+  node_feat (N, F) · senders/receivers (E,) int32 · edge_feat (E, Fe)?
+  coords (N, 3) [egnn] · node_mask (N,) · edge_mask (E,)
+  graph_ids (N,) [molecule readout] · labels (N,) int | (N, d) | (G, d)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import GNNConfig
+from ..dist.sharding import constrain
+from . import layers as L
+
+
+def seg_sum(data, ids, n):
+    return jax.ops.segment_sum(data, ids, num_segments=n)
+
+
+def seg_softmax(scores, ids, n, mask):
+    """Numerically-stable softmax over incoming edges per receiver."""
+    scores = jnp.where(mask, scores, -1e30)
+    mx = jax.ops.segment_max(scores, ids, num_segments=n)
+    ex = jnp.exp(scores - mx[ids]) * mask
+    den = seg_sum(ex, ids, n)
+    return ex / jnp.maximum(den[ids], 1e-9)
+
+
+def _mlp_params(key, dims, name, logical=("gnn_in", "gnn_out")):
+    ws, bs, logs = [], [], []
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        ws.append(jax.random.normal(k, (a, b), jnp.float32)
+                  * jax.lax.rsqrt(jnp.float32(a)))
+        bs.append(jnp.zeros((b,), jnp.float32))
+    return {"w": ws, "b": bs}
+
+
+def _mlp_abstract(dims, dtype=jnp.float32):
+    ws = [jax.ShapeDtypeStruct((a, b), dtype)
+          for a, b in zip(dims[:-1], dims[1:])]
+    bs = [jax.ShapeDtypeStruct((b,), dtype) for b in dims[1:]]
+    return {"w": ws, "b": bs}
+
+
+def _mlp(p, x, act=jax.nn.relu, final_act=False):
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Message-passing processor (GraphCast / MeshGraphNet share this core)
+# ---------------------------------------------------------------------------
+
+def _mp_layer(p, h, e, senders, receivers, edge_mask, n, *, mesh=None,
+              rules=None):
+    """Edge update → aggregate → node update, with residuals (MGN-style).
+    Aggregation runs in fp32 (long segment reductions are bf16-sensitive);
+    messages/MLPs in the compute dtype."""
+    hs, hr = h[senders], h[receivers]
+    e_in = jnp.concatenate([e, hs, hr], axis=-1)
+    e_in = constrain(e_in, ("edges", None), mesh, rules)
+    e2 = e + _mlp(p["edge"], e_in) * edge_mask[:, None].astype(h.dtype)
+    agg = seg_sum((e2 * edge_mask[:, None].astype(h.dtype)
+                   ).astype(jnp.float32), receivers, n).astype(h.dtype)
+    agg = constrain(agg, ("nodes", None), mesh, rules)
+    h2 = h + _mlp(p["node"], jnp.concatenate([h, agg], axis=-1))
+    return h2, e2
+
+
+def _mp_abstract(cfg: GNNConfig, d_edge_in: int, dtype=jnp.float32):
+    d = cfg.d_hidden
+    mk = lambda dims: _mlp_abstract(dims, dtype)
+    hidden = [d] * cfg.mlp_layers
+    return {
+        "edge": mk([3 * d] + hidden + [d]),
+        "node": mk([2 * d] + hidden + [d]),
+    }
+
+
+def _stack_abstract(tree, n_layers):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Arch forward passes
+# ---------------------------------------------------------------------------
+
+def encode_process_decode_abstract(cfg: GNNConfig, d_feat: int, d_edge: int,
+                                   d_out: int, dtype=jnp.float32):
+    """GraphCast / MeshGraphNet params: encoder + L processors + decoder."""
+    d = cfg.d_hidden
+    hidden = [d] * cfg.mlp_layers
+    return {
+        "node_enc": _mlp_abstract([d_feat] + hidden + [d], dtype),
+        "edge_enc": _mlp_abstract([d_edge] + hidden + [d], dtype),
+        "proc": _stack_abstract(_mp_abstract(cfg, 3 * d, dtype), cfg.n_layers),
+        "node_dec": _mlp_abstract([d] + hidden + [d_out], dtype),
+    }
+
+
+def encode_process_decode(params, batch, cfg: GNNConfig, *, mesh=None,
+                          rules=None, remat: str = "none",
+                          unroll: bool = False,
+                          compute_dtype=jnp.float32):
+    # NOTE compute_dtype=bf16 was tried for the ogb_products hillclimb and
+    # REFUTED on the bytes-accessed metric (+15%: convert ops are counted;
+    # real TPU fuses them) — see EXPERIMENTS.md §Perf hillclimb #3 iter 3.
+    n = batch["node_feat"].shape[0]
+    senders, receivers = batch["senders"], batch["receivers"]
+    h = _mlp(params["node_enc"], batch["node_feat"].astype(compute_dtype))
+    e = _mlp(params["edge_enc"], batch["edge_feat"].astype(compute_dtype))
+    h = constrain(h, ("nodes", None), mesh, rules)
+
+    def step(carry, lp):
+        h, e = carry
+        h2, e2 = _mp_layer(lp, h, e, senders, receivers, batch["edge_mask"],
+                           n, mesh=mesh, rules=rules)
+        return (h2, e2), None
+
+    if remat == "full":
+        step = jax.checkpoint(step,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if unroll:  # exact cost_analysis (scan body costed once — DESIGN.md §7)
+        carry = (h, e)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[i], params["proc"])
+            carry, _ = step(carry, lp)
+        h, e = carry
+    else:
+        (h, e), _ = jax.lax.scan(step, (h, e), params["proc"])
+    return _mlp(params["node_dec"], h).astype(jnp.float32)
+
+
+def egnn_abstract(cfg: GNNConfig, d_feat: int, d_out: int, dtype=jnp.float32):
+    d = cfg.d_hidden
+    layer = {
+        "msg": _mlp_abstract([2 * d + 1, d, d], dtype),
+        "coord": _mlp_abstract([d, d, 1], dtype),
+        "node": _mlp_abstract([2 * d, d, d], dtype),
+    }
+    return {
+        "embed": _mlp_abstract([d_feat, d], dtype),
+        "layers": _stack_abstract(layer, cfg.n_layers),
+        "dec": _mlp_abstract([d, d, d_out], dtype),
+    }
+
+
+def egnn_forward(params, batch, cfg: GNNConfig, *, mesh=None, rules=None,
+                 unroll: bool = False):
+    """E(n)-equivariant GNN (Satorras et al.): distance-gated messages +
+    equivariant coordinate updates."""
+    n = batch["node_feat"].shape[0]
+    s, r = batch["senders"], batch["receivers"]
+    emask = batch["edge_mask"][:, None].astype(jnp.float32)
+    h = _mlp(params["embed"], batch["node_feat"])
+    x = batch["coords"].astype(jnp.float32)
+
+    def step(carry, lp):
+        h, x = carry
+        diff = x[s] - x[r]
+        d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = _mlp(lp["msg"], jnp.concatenate([h[s], h[r], d2], -1),
+                 act=jax.nn.silu, final_act=True) * emask
+        # coordinate update (equivariant): x_r += mean_j (x_r - x_j)·φ_x(m)
+        w = _mlp(lp["coord"], m, act=jax.nn.silu)
+        upd = seg_sum(-diff * w * emask, r, n)
+        deg = seg_sum(emask, r, n)
+        x = x + upd / jnp.maximum(deg, 1.0)
+        agg = seg_sum(m, r, n)
+        h = h + _mlp(lp["node"], jnp.concatenate([h, agg], -1),
+                     act=jax.nn.silu)
+        return (h, x), None
+
+    if unroll:
+        carry = (h, x)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+            carry, _ = step(carry, lp)
+        h, x = carry
+    else:
+        (h, x), _ = jax.lax.scan(step, (h, x), params["layers"])
+    out = _mlp(params["dec"], h)
+    if "graph_ids" in batch:  # molecule: per-graph readout
+        g = int(batch["labels"].shape[0])
+        out = seg_sum(out * batch["node_mask"][:, None].astype(out.dtype),
+                      batch["graph_ids"], g)
+    return out, x
+
+
+def gat_abstract(cfg: GNNConfig, d_feat: int, n_classes: int,
+                 dtype=jnp.float32):
+    h, d = cfg.n_heads, cfg.d_hidden
+    return {
+        "w1": jax.ShapeDtypeStruct((d_feat, h, d), dtype),
+        "a1_src": jax.ShapeDtypeStruct((h, d), dtype),
+        "a1_dst": jax.ShapeDtypeStruct((h, d), dtype),
+        "w2": jax.ShapeDtypeStruct((h * d, 1, n_classes), dtype),
+        "a2_src": jax.ShapeDtypeStruct((1, n_classes), dtype),
+        "a2_dst": jax.ShapeDtypeStruct((1, n_classes), dtype),
+    }
+
+
+def _gat_layer(x, w, a_src, a_dst, senders, receivers, edge_mask, n,
+               *, mesh=None, rules=None):
+    """GAT attention layer (SDDMM scores → segment softmax → SpMM)."""
+    z = jnp.einsum("nf,fhd->nhd", x, w.astype(x.dtype))
+    es = jnp.einsum("nhd,hd->nh", z, a_src.astype(x.dtype))
+    ed = jnp.einsum("nhd,hd->nh", z, a_dst.astype(x.dtype))
+    scores = jax.nn.leaky_relu(es[senders] + ed[receivers], 0.2)
+    alpha = seg_softmax(scores, receivers, n, edge_mask[:, None])
+    msg = z[senders] * alpha[..., None]
+    msg = constrain(msg, ("edges", None, None), mesh, rules)
+    return seg_sum(msg, receivers, n)
+
+
+def gat_forward(params, batch, cfg: GNNConfig, *, mesh=None, rules=None):
+    n = batch["node_feat"].shape[0]
+    s, r = batch["senders"], batch["receivers"]
+    h1 = _gat_layer(batch["node_feat"], params["w1"], params["a1_src"],
+                    params["a1_dst"], s, r, batch["edge_mask"], n,
+                    mesh=mesh, rules=rules)
+    h1 = jax.nn.elu(h1.reshape(n, -1))
+    h2 = _gat_layer(h1, params["w2"], params["a2_src"], params["a2_dst"],
+                    s, r, batch["edge_mask"], n, mesh=mesh, rules=rules)
+    return h2[:, 0, :]  # (N, n_classes)
+
+
+# ---------------------------------------------------------------------------
+# Unified abstract/init/loss API
+# ---------------------------------------------------------------------------
+
+def gnn_abstract_params(cfg: GNNConfig, d_feat: int, d_edge: int, d_out: int,
+                        dtype=jnp.float32):
+    if cfg.kind in ("graphcast", "meshgraphnet"):
+        return encode_process_decode_abstract(cfg, d_feat, d_edge, d_out, dtype)
+    if cfg.kind == "egnn":
+        return egnn_abstract(cfg, d_feat, d_out, dtype)
+    if cfg.kind == "gat":
+        return gat_abstract(cfg, d_feat, d_out, dtype)
+    raise ValueError(cfg.kind)
+
+
+def gnn_init_params(cfg: GNNConfig, key, d_feat: int, d_edge: int,
+                    d_out: int, dtype=jnp.float32):
+    ab = gnn_abstract_params(cfg, d_feat, d_edge, d_out, dtype)
+    flat, treedef = jax.tree_util.tree_flatten(ab)
+    keys = jax.random.split(key, len(flat))
+
+    def one(k, sds):
+        if len(sds.shape) == 1:
+            return jnp.zeros(sds.shape, sds.dtype)
+        fan = sds.shape[-2] if len(sds.shape) >= 2 else 1
+        return (jax.random.normal(k, sds.shape, jnp.float32)
+                * jax.lax.rsqrt(jnp.float32(max(fan, 1)))).astype(sds.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(k, s) for k, s in zip(keys, flat)])
+
+
+def gnn_forward(params, batch, cfg: GNNConfig, *, mesh=None, rules=None,
+                remat: str = "none", unroll: bool = False):
+    if cfg.kind in ("graphcast", "meshgraphnet"):
+        return encode_process_decode(params, batch, cfg, mesh=mesh,
+                                     rules=rules, remat=remat, unroll=unroll)
+    if cfg.kind == "egnn":
+        out, _ = egnn_forward(params, batch, cfg, mesh=mesh, rules=rules,
+                              unroll=unroll)
+        return out
+    if cfg.kind == "gat":
+        return gat_forward(params, batch, cfg, mesh=mesh, rules=rules)
+    raise ValueError(cfg.kind)
+
+
+def gnn_loss(params, batch, cfg: GNNConfig, *, mesh=None, rules=None,
+             remat: str = "none", unroll: bool = False):
+    out = gnn_forward(params, batch, cfg, mesh=mesh, rules=rules, remat=remat,
+                      unroll=unroll)
+    labels = batch["labels"]
+    if jnp.issubdtype(labels.dtype, jnp.integer):   # node classification
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[:, None].clip(0), axis=1)[:, 0]
+        mask = (labels >= 0) & (batch["node_mask"] > 0)
+        loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    else:                                           # regression (MSE)
+        if labels.shape[0] == out.shape[0] and "graph_ids" not in batch:
+            mask = batch["node_mask"][:, None].astype(jnp.float32)
+        else:
+            mask = jnp.ones((labels.shape[0], 1), jnp.float32)
+        err = (out.astype(jnp.float32) - labels.astype(jnp.float32)) ** 2
+        loss = (err * mask).sum() / jnp.maximum(mask.sum() * err.shape[-1], 1)
+    return loss, {"loss": loss}

@@ -1,0 +1,268 @@
+"""Shared NN layers (pure JAX/jnp — no Pallas on the dry-run path, see
+DESIGN.md §3: Pallas custom-calls carry no XLA cost model and would corrupt
+the roofline terms)."""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(q, positions, theta: float = 10000.0):
+    """Rotary embedding. q: (..., S, H, D); positions: (..., S)."""
+    d = q.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    q1, q2 = q[..., :half], q[..., half:]
+    out = jnp.concatenate([q1 * cos - q2 * sin, q2 * cos + q1 * sin], axis=-1)
+    return out.astype(q.dtype)
+
+
+def _block_mask(sq, skv, q0, k0, q_offset, causal, window):
+    qpos = q_offset + q0 + jnp.arange(sq)[:, None]
+    kpos = k0 + jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _attn_block(qg, k, v, q0, k0, *, causal, q_offset, window, scale):
+    """One (q-chunk × kv-chunk) attention block, grouped (5-D) form.
+    Returns (unnormalized acc, rowsum, rowmax)."""
+    sq, skv = qg.shape[1], k.shape[1]
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(_block_mask(sq, skv, q0, k0, q_offset, causal, window),
+                       logits, -1e30)
+    m = jnp.max(logits, axis=-1)                       # (b,hkv,g,sq)
+    p = jnp.exp(logits - m[..., None])
+    s = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(qg.dtype), v)
+    return acc, s, m
+
+
+def _attn_block4(q, k, v, q0, k0, *, causal, q_offset, window, scale):
+    """4-D (per-head) block — transpose-free einsums; used when KV heads are
+    pre-expanded (the 5-D grouped form forces physical layout copies —
+    measured ≈+10 GB/layer/device on qwen2, §Perf hillclimb #1)."""
+    sq, skv = q.shape[1], k.shape[1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(_block_mask(sq, skv, q0, k0, q_offset, causal, window),
+                       logits, -1e30)
+    m = jnp.max(logits, axis=-1)                       # (b,h,sq)
+    p = jnp.exp(logits - m[..., None])
+    s = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype), v)
+    return acc, s, m
+
+
+def gqa_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                  max_chunks: int = 8, min_chunk: int = 1024,
+                  mesh=None, rules=None):
+    """Grouped-query attention with chunked online softmax.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    q_offset: absolute position of q[0] (decode: cache length).
+
+    Long sequences are processed in (q-chunk × kv-chunk) blocks with
+    flash-style running max/sum — peak temp is one block of scores, not
+    Sq×Skv (full 32k prefill scores would be ~15 GB/device on unshardable
+    head counts). Chunks are PYTHON-unrolled so compiled cost_analysis sees
+    every block (a lax.scan body is costed once — measured, DESIGN.md §7),
+    and fully-masked causal blocks are skipped STATICALLY, so the ~2×
+    causal flop saving shows up in the roofline.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    groups = hq // hkv
+    expanded = groups > 1 and sq > 1
+    if expanded:
+        # training/prefill: expand KV to full heads (cheap — no S² term) so
+        # attention runs in transpose-free 4-D einsums; decode (sq == 1)
+        # keeps grouped KV to avoid ×groups cache-read traffic.
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+        hkv, groups = hq, 1
+    scale = 1.0 / math.sqrt(d)
+
+    def chunk_of(n):
+        c = max(min_chunk, -(-n // max_chunks))
+        while c < n and n % c:
+            c += 1
+        return min(c, n)
+
+    cq, ck = chunk_of(sq), chunk_of(skv)
+    nq, nk = sq // cq, skv // ck
+    four_d = groups == 1
+    stat_shape = (b, hq, cq) if four_d else (b, hkv, groups, cq)
+    acc_shape = stat_shape + (d,)
+
+    outs = []
+    for i in range(nq):
+        q0 = i * cq
+        qc = q[:, q0:q0 + cq] if four_d \
+            else q[:, q0:q0 + cq].reshape(b, cq, hkv, groups, d)
+        acc = jnp.zeros(acc_shape, q.dtype)
+        s = jnp.zeros(stat_shape, jnp.float32)
+        m = jnp.full(stat_shape, -1e30, jnp.float32)
+        for j in range(nk):
+            k0 = j * ck
+            if causal and isinstance(q_offset, int) \
+                    and k0 > q_offset + q0 + cq - 1:
+                continue  # statically dead causal block
+            block = _attn_block4 if four_d else _attn_block
+            a_j, s_j, m_j = block(
+                qc, k[:, k0:k0 + ck], v[:, k0:k0 + ck], q0, k0,
+                causal=causal, q_offset=q_offset, window=window, scale=scale)
+            m_new = jnp.maximum(m, m_j)
+            corr = jnp.exp(m - m_new)
+            corr_j = jnp.exp(m_j - m_new)
+            s = s * corr + s_j * corr_j
+            acc = acc * corr[..., None].astype(q.dtype) \
+                + a_j * corr_j[..., None].astype(q.dtype)
+            m = m_new
+        out = acc / jnp.maximum(s, 1e-30)[..., None].astype(q.dtype)
+        if four_d:
+            outs.append(jnp.swapaxes(out, 1, 2))           # (b, cq, hq, d)
+        else:
+            outs.append(jnp.moveaxis(out, 3, 1).reshape(b, cq, hq, d))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def swiglu(x, w_gate, w_up, w_down, mesh=None, rules=None):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, ("batch", "seq", "mlp"), mesh, rules)
+    return h @ w_down
+
+
+def dense(x, w, b=None):
+    y = x @ w
+    return y if b is None else y + b
+
+
+def mlp_stack(x, ws, bs, act=jax.nn.relu, final_act=False):
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = x @ w + b
+        if i < len(ws) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0,
+                  vocab_sharded: bool = True):
+    """Mean token cross-entropy in fp32; ignores labels < 0.
+
+    vocab_sharded=True → the label pick is an iota-mask reduction, NOT
+    take_along_axis: a gather along a model-sharded vocab axis makes XLA
+    all-gather the full (B, S, V) logits (≈40 GB/device measured on 32k-vocab
+    cells — EXPERIMENTS.md §Perf). The masked reduce keeps every temp
+    vocab-sharded. vocab_sharded=False (pure-DP layouts) → plain gather:
+    the iota/onehot chain costs ~4 extra full-logit-size temps (measured
+    ~45 GB/device on qwen2 DP — §Perf hillclimb #1 iter 3).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    if vocab_sharded:
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                              logits.ndim - 1)
+        onehot = vocab_iota == labels[..., None]
+        ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    else:
+        ll = jnp.take_along_axis(logits, labels[..., None].clip(0),
+                                 axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    valid = (labels >= 0).astype(jnp.float32)
+    return (loss * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based capacity-bounded dispatch (deterministic, TPU-friendly)
+# ---------------------------------------------------------------------------
+
+def moe_ffn(x, router_w, experts, *, top_k: int, capacity_factor: float,
+            mesh=None, rules=None):
+    """Top-k MoE feed-forward, GROUP-BLOCKED dispatch.
+
+    x: (G, Tg, d) — dispatch groups (one per sequence); capacity is
+    per-group so sort/scatter/buffers all carry the batch-sharded G axis and
+    never materialize a global (E·cap_global, d) buffer (a global dispatch
+    buffer measured 64 GB/device on grok-1 — EXPERIMENTS.md §Perf).
+    Deterministic capacity drop, no ragged collectives (DESIGN.md §5).
+    experts: dict of stacked weights (E, d, ff) / (E, ff, d).
+    """
+    g, tg, d = x.shape
+    e = router_w.shape[1]
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G, Tg, E)
+    gate, idx = jax.lax.top_k(probs, top_k)                      # (G, Tg, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(capacity_factor * tg * top_k / e))
+    tk = tg * top_k
+    flat_expert = idx.reshape(g, tk)
+    flat_token = jnp.repeat(
+        jnp.arange(tg, dtype=jnp.int32), top_k)[None, :].repeat(g, 0)
+    flat_gate = gate.reshape(g, tk)
+
+    order = jnp.argsort(flat_expert, axis=1, stable=True)        # by expert
+    se = jnp.take_along_axis(flat_expert, order, axis=1)
+    st = jnp.take_along_axis(flat_token, order, axis=1)
+    sg = jnp.take_along_axis(flat_gate, order, axis=1)
+    # position within expert run (per group)
+    first = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(se)
+    pos_in_e = jnp.arange(tk)[None, :] - first
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)         # drop → pad
+
+    # gather tokens into (G, E·cap, d) buffer
+    gather_tok = jnp.take_along_axis(x, st[..., None], axis=1)   # (G, TK, d)
+    buf = jnp.zeros((g, e * cap + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v, mode="drop"))(
+        buf, slot, gather_tok)
+    hidden = buf[:, :e * cap].reshape(g, e, cap, d)
+    hidden = constrain(hidden, ("batch", "experts", None, None), mesh, rules)
+
+    h = jnp.einsum("gecd,edf->gecf", hidden, experts["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", hidden, experts["w_up"])
+    h = jax.nn.silu(h) * u
+    y = jnp.einsum("gecf,efd->gecd", h, experts["w_down"])       # (G,E,cap,d)
+    y = y.reshape(g, e * cap, d)
+
+    # combine: fetch each sorted entry's expert output, gate-weight, and
+    # scatter-add into its token; dropped entries land on a pad row.
+    rows = jnp.take_along_axis(y, jnp.clip(slot, 0, e * cap - 1)[..., None],
+                               axis=1)                            # (G, TK, d)
+    dest = jnp.where(keep, st, tg)
+    out = jax.vmap(lambda o, s, v: o.at[s].add(v, mode="drop"))(
+        jnp.zeros((g, tg, d), x.dtype), dest,
+        rows * sg[..., None].astype(x.dtype))
+    aux = _load_balance_loss(probs.reshape(-1, e), idx.reshape(-1, top_k), e)
+    return out, aux
+
+
+def _load_balance_loss(probs, idx, e):
+    """Switch-style aux loss: e * Σ_e f_e · P_e."""
+    t = probs.shape[0]
+    counts = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    p = probs.mean(axis=0)
+    return e * jnp.sum(f * p)

@@ -1,0 +1,297 @@
+"""Decoder-only transformer (dense GQA + MoE) — scan-over-layers.
+
+Layers are stacked on a leading "layers" axis and folded with lax.scan: the
+HLO stays O(1) in depth (compile-time matters — 80 dry-run compiles on one
+CPU core) and remat policy applies per scan step.
+
+Every param leaf has a logical-axis tuple in ``param_logical`` mirroring the
+param tree; `dist.sharding.tree_shardings` turns those into NamedShardings
+for the dry-run / trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from ..dist.sharding import constrain
+from . import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _layer_shapes(cfg: LMConfig):
+    d, hd, hq, hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    shapes = {
+        "attn_norm": ((d,), ("embed",)),
+        "mlp_norm": ((d,), ("embed",)),
+        "wq": ((d, hq, hd), ("embed_fsdp", "heads", "qkv")),
+        "wk": ((d, hkv, hd), ("embed_fsdp", "kv_heads", "qkv")),
+        "wv": ((d, hkv, hd), ("embed_fsdp", "kv_heads", "qkv")),
+        "wo": ((hq, hd, d), ("heads", "qkv", "embed_fsdp")),
+    }
+    if cfg.qkv_bias:
+        shapes |= {
+            "bq": ((hq, hd), ("heads", "qkv")),
+            "bk": ((hkv, hd), ("kv_heads", "qkv")),
+            "bv": ((hkv, hd), ("kv_heads", "qkv")),
+        }
+    if cfg.moe:
+        e, ff = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        shapes |= {
+            "router": ((d, e), ("embed", "experts")),
+            "w_gate": ((e, d, ff), ("experts", "embed_fsdp", "mlp")),
+            "w_up": ((e, d, ff), ("experts", "embed_fsdp", "mlp")),
+            "w_down": ((e, ff, d), ("experts", "mlp", "embed_fsdp")),
+        }
+    else:
+        shapes |= {
+            "w_gate": ((d, cfg.d_ff), ("embed_fsdp", "mlp")),
+            "w_up": ((d, cfg.d_ff), ("embed_fsdp", "mlp")),
+            "w_down": ((cfg.d_ff, d), ("mlp", "embed_fsdp")),
+        }
+    return shapes
+
+
+def abstract_params(cfg: LMConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (for dry-run lower) + logical-axis pytree."""
+    d = cfg.d_model
+    shapes: dict[str, Any] = {
+        "embed": ((cfg.vocab, d), ("vocab", "embed_fsdp")),
+        "final_norm": ((d,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        shapes["unembed"] = ((d, cfg.vocab), ("embed_fsdp", "vocab"))
+    params = {k: jax.ShapeDtypeStruct(s, dtype) for k, (s, _) in shapes.items()}
+    logical = {k: l for k, (s, l) in shapes.items()}
+    lay = _layer_shapes(cfg)
+    params["layers"] = {
+        k: jax.ShapeDtypeStruct((cfg.n_layers,) + s, dtype)
+        for k, (s, _) in lay.items()}
+    logical["layers"] = {k: ("layers",) + l for k, (s, l) in lay.items()}
+    return params, logical
+
+
+def init_params(cfg: LMConfig, key, dtype=jnp.float32):
+    abstract, _ = abstract_params(cfg, dtype)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract)
+    keys = jax.random.split(key, len(flat))
+
+    def one(k, path, s):
+        name = str(path[-1])
+        if "norm" in name:
+            return jnp.ones(s.shape, s.dtype)
+        if any(b in name for b in ("bq", "bk", "bv", "router")):
+            return jnp.zeros(s.shape, s.dtype)
+        # GPT-2-style small-std init: stable smoke-test losses, no NaNs
+        return (jax.random.normal(k, s.shape, jnp.float32) * 0.02
+                ).astype(s.dtype)
+
+    leaves = [one(k, p, s) for k, (p, s) in zip(keys, flat)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn(lp, x, cfg: LMConfig, positions, kv_cache=None, *, causal=True,
+          mesh=None, rules=None, compute_dtype=jnp.bfloat16):
+    b, s, d = x.shape
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(compute_dtype))
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None), mesh, rules)
+
+    q_offset = 0
+    if kv_cache is not None:
+        ck, cv, clen = kv_cache["k"], kv_cache["v"], kv_cache["len"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), clen, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), clen, 1)
+        k, v = ck.astype(compute_dtype), cv.astype(compute_dtype)
+        q_offset = clen
+        new_cache = {"k": ck, "v": cv, "len": clen + s}
+    else:
+        new_cache = None
+
+    window = cfg.window if cfg.attention == "window" else 0
+    o = L.gqa_attention(q, k, v, causal=causal, q_offset=q_offset,
+                        window=window, mesh=mesh, rules=rules)
+    o = jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(compute_dtype))
+    return o, new_cache
+
+
+def _ffn(lp, x, cfg: LMConfig, mesh=None, rules=None,
+         compute_dtype=jnp.bfloat16):
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.moe:
+        b, s, d = h.shape
+        experts = {k: lp[k].astype(compute_dtype)
+                   for k in ("w_gate", "w_up", "w_down")}
+        out, aux = L.moe_ffn(h, lp["router"].astype(jnp.float32), experts,
+                             top_k=cfg.moe.top_k,
+                             capacity_factor=cfg.moe.capacity_factor,
+                             mesh=mesh, rules=rules)
+        return out, aux
+    out = L.swiglu(h, lp["w_gate"].astype(compute_dtype),
+                   lp["w_up"].astype(compute_dtype),
+                   lp["w_down"].astype(compute_dtype), mesh=mesh, rules=rules)
+    return out, jnp.float32(0)
+
+
+def forward(params, tokens, cfg: LMConfig, *, kv_caches=None, positions=None,
+            mesh=None, rules=None, compute_dtype=jnp.bfloat16,
+            remat: str = "none", logits_slice: int = 0,
+            unroll: bool = False):
+    """Run the stack. Returns (logits, new_kv_caches, aux_loss).
+
+    kv_caches: None (training/prefill-no-cache) or stacked-on-layers dict of
+    {"k": (L,B,S,H,D), "v": ..., "len": ()} for decode/prefill-with-cache.
+    logits_slice: if >0, compute logits only for the last ``logits_slice``
+    positions (decode: 1) — avoids the (B, 32k, vocab) monster.
+    """
+    b, s = tokens.shape
+    if positions is None:
+        if kv_caches is not None:
+            positions = kv_caches["len"] + jnp.arange(s)[None, :]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    x = params["embed"].astype(compute_dtype)[tokens]
+    x = constrain(x, ("batch", "seq", "embed"), mesh, rules)
+
+    def layer(carry, lp_and_cache):
+        x, aux = carry
+        lp, cache = lp_and_cache
+        attn_out, new_cache = _attn(lp, x, cfg, positions, cache, mesh=mesh,
+                                    rules=rules, compute_dtype=compute_dtype)
+        x = x + attn_out
+        ffn_out, a = _ffn(lp, x, cfg, mesh=mesh, rules=rules,
+                          compute_dtype=compute_dtype)
+        x = x + ffn_out
+        x = constrain(x, ("batch", "seq", "embed"), mesh, rules)
+        return (x, aux + a), new_cache
+
+    if remat == "full":
+        layer = jax.checkpoint(layer,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    lay = {k: v.astype(compute_dtype) if v.dtype != jnp.int32 else v
+           for k, v in params["layers"].items()}
+    if unroll:
+        # Python-unrolled layer loop: identical math to the scan below, but
+        # every layer appears in the HLO so compiled.cost_analysis() is
+        # exact (a scan body is costed ONCE regardless of trip count —
+        # measured; the dry-run extrapolates full depth from unrolled 1- and
+        # 2-layer programs, DESIGN.md §7).
+        carry = (x, jnp.float32(0))
+        new_ks, new_vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda p: p[i], lay)
+            cache_i = None
+            if kv_caches is not None:
+                cache_i = {"k": kv_caches["k"][i], "v": kv_caches["v"][i],
+                           "len": kv_caches["len"]}
+            carry, new_cache = layer(carry, (lp, cache_i))
+            if new_cache is not None:
+                new_ks.append(new_cache["k"])
+                new_vs.append(new_cache["v"])
+        x, aux = carry
+        new_kv = None
+        if kv_caches is not None:
+            new_kv = {"k": jnp.stack(new_ks), "v": jnp.stack(new_vs),
+                      "len": kv_caches["len"] + s}
+    elif kv_caches is not None:
+        caches = {"k": kv_caches["k"], "v": kv_caches["v"],
+                  "len": jnp.broadcast_to(kv_caches["len"], (cfg.n_layers,))}
+        (x, aux), new_caches = jax.lax.scan(
+            lambda c, xs: layer(c, (xs[0], {"k": xs[1]["k"], "v": xs[1]["v"],
+                                            "len": xs[1]["len"]})),
+            (x, jnp.float32(0)), (lay, caches))
+        new_kv = {"k": new_caches["k"], "v": new_caches["v"],
+                  "len": kv_caches["len"] + s}
+    else:
+        (x, aux), _ = jax.lax.scan(lambda c, lp: layer(c, (lp, None)),
+                                   (x, jnp.float32(0)), lay)
+        new_kv = None
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_slice:
+        x = x[:, -logits_slice:]
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"]).astype(compute_dtype)
+    logits = x @ unembed
+    logits = constrain(logits, ("batch", "seq", "vocab"), mesh, rules)
+    return logits, new_kv, aux
+
+
+def loss_fn(params, batch, cfg: LMConfig, *, mesh=None, rules=None,
+            remat: str = "dots", compute_dtype=jnp.bfloat16,
+            unroll: bool = False):
+    logits, _, aux = forward(params, batch["tokens"], cfg, mesh=mesh,
+                             rules=rules, compute_dtype=compute_dtype,
+                             remat=remat, unroll=unroll)
+    from ..dist.sharding import DEFAULT_RULES
+    eff = dict(DEFAULT_RULES, **(rules or {}))
+    vocab_sharded = mesh is not None and any(
+        a in mesh.shape and mesh.shape[a] > 1 for a in eff.get("vocab", ()))
+    ce = L.cross_entropy(logits, batch["labels"],
+                         vocab_sharded=vocab_sharded)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def abstract_kv_cache(cfg: LMConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    logical = ("layers", "cache_batch", "cache_seq", "kv_heads", None)
+    return ({"k": jax.ShapeDtypeStruct(shape, dtype),
+             "v": jax.ShapeDtypeStruct(shape, dtype),
+             "len": jax.ShapeDtypeStruct((), jnp.int32)},
+            {"k": logical, "v": logical, "len": ()})
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    ab, _ = abstract_kv_cache(cfg, batch, max_seq, dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), ab)
+
+
+def prefill_step(params, tokens, cfg: LMConfig, *, mesh=None, rules=None,
+                 max_seq: int | None = None, compute_dtype=jnp.bfloat16,
+                 unroll: bool = False):
+    """Prefill: run full sequence, build the KV cache, return last logits."""
+    b, s = tokens.shape
+    cache = init_kv_cache(cfg, b, max_seq or s, compute_dtype)
+    logits, cache, _ = forward(params, tokens, cfg, kv_caches=cache,
+                               mesh=mesh, rules=rules,
+                               compute_dtype=compute_dtype, logits_slice=1,
+                               unroll=unroll)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: LMConfig, *, mesh=None,
+                rules=None, compute_dtype=jnp.bfloat16, unroll: bool = False):
+    """One decode step: tokens (B, 1) + cache → next-token logits."""
+    logits, cache, _ = forward(params, tokens, cfg, kv_caches=cache,
+                               mesh=mesh, rules=rules,
+                               compute_dtype=compute_dtype, logits_slice=1,
+                               unroll=unroll)
+    return logits, cache

@@ -1,0 +1,127 @@
+"""Correctness of the chordless-cycle engine vs oracles + paper Table 1."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_graph, enumerate_chordless_cycles,
+                        sequential_chordless_cycles, degree_labeling_np)
+from repro.core.bitset_graph import degree_labeling_parallel, pack_bits, unpack_bits
+from repro.core.graphs import (PAPER_TABLE1, complete_bipartite, cycle_graph,
+                               grid_graph, random_gnp, wheel_graph,
+                               niche_overlap_like)
+from repro.core.oracle import chordless_cycle_sets
+
+SMALL = [
+    ("grid3x3", grid_graph(3, 3)),
+    ("K33", complete_bipartite(3, 3)),
+    ("C8", cycle_graph(8)),
+    ("wheel6", wheel_graph(6)),
+    ("K44", complete_bipartite(4, 4)),
+    ("niche", niche_overlap_like(14, 10, 3.0, 7)),
+]
+
+
+@pytest.mark.parametrize("name,graph", SMALL, ids=[s[0] for s in SMALL])
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+def test_small_graphs_vs_oracle(name, graph, formulation):
+    n, edges = graph
+    g = build_graph(n, edges)
+    res = enumerate_chordless_cycles(g, formulation=formulation)
+    oracle = chordless_cycle_sets(n, edges)
+    assert res.n_cycles == len(oracle)
+    assert set(res.cycles_as_sets(n)) == oracle
+
+
+@pytest.mark.parametrize("name", ["C_100", "Wheel_100", "K_8_8", "Grid_4x10",
+                                  "Grid_5x6", "Grid_6x6"])
+def test_paper_table1_counts(name):
+    build, tri_gt, clc_gt = PAPER_TABLE1[name]
+    n, edges = build()
+    g = build_graph(n, edges)
+    res = enumerate_chordless_cycles(g, store=False)
+    assert res.n_triangles == tri_gt
+    assert res.n_cycles - res.n_triangles == clc_gt
+
+
+def test_sequential_matches_engine_counts():
+    n, edges = grid_graph(4, 6)
+    g = build_graph(n, edges)
+    res = enumerate_chordless_cycles(g, store=False)
+    cnt, _ = sequential_chordless_cycles(n, edges)
+    assert cnt == res.n_cycles
+
+
+def test_store_vs_count_only_agree():
+    n, edges = grid_graph(4, 5)
+    g = build_graph(n, edges)
+    a = enumerate_chordless_cycles(g, store=True)
+    b = enumerate_chordless_cycles(g, store=False)
+    assert a.n_cycles == b.n_cycles
+    assert a.cycle_masks.shape[0] == a.n_cycles
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 13), p=st.floats(0.15, 0.6), seed=st.integers(0, 10**6))
+def test_property_random_graphs(n, p, seed):
+    """Engine == brute-force oracle on arbitrary G(n, p)."""
+    n, edges = random_gnp(n, p, seed)
+    g = build_graph(n, edges)
+    res = enumerate_chordless_cycles(g)
+    oracle = chordless_cycle_sets(n, edges)
+    assert res.n_cycles == len(oracle)
+    assert set(res.cycles_as_sets(n)) == oracle
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 12), p=st.floats(0.2, 0.6), seed=st.integers(0, 10**6))
+def test_property_slot_bitword_equivalence(n, p, seed):
+    n, edges = random_gnp(n, p, seed)
+    g = build_graph(n, edges)
+    a = enumerate_chordless_cycles(g, formulation="slot")
+    b = enumerate_chordless_cycles(g, formulation="bitword")
+    assert a.n_cycles == b.n_cycles
+    assert set(a.cycles_as_sets(n)) == set(b.cycles_as_sets(n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(3, 40), p=st.floats(0.05, 0.5), seed=st.integers(0, 10**6))
+def test_property_parallel_labeling(n, p, seed):
+    """Paper §6 parallel labeling == sequential labeling (same tie-break)."""
+    n, edges = random_gnp(n, p, seed)
+    g = build_graph(n, edges)
+    par = np.asarray(degree_labeling_parallel(g.adj_bits, g.degrees))
+    seq = degree_labeling_np(n, np.asarray(edges).reshape(-1, 2))
+    assert (par == seq).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 10**6))
+def test_property_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.integers(0, 2, size=(3, n)).astype(np.uint8)
+    assert (unpack_bits(pack_bits(dense), n) == dense).all()
+
+
+def test_labels_are_bijection():
+    n, edges = grid_graph(5, 5)
+    labels = degree_labeling_np(n, np.asarray(edges))
+    assert sorted(labels.tolist()) == list(range(n))
+
+
+def test_trees_have_no_cycles():
+    # paper §2: if G is a tree, T(G) = ∅
+    edges = [(i, i + 1) for i in range(20)] + [(0, 21), (21, 22), (5, 23)]
+    g = build_graph(24, edges)
+    res = enumerate_chordless_cycles(g)
+    assert res.n_cycles == 0 and res.iterations == 0
+
+
+def test_fig4_history_shape():
+    """Engine history reproduces the paper's Fig. 4 wave (|T| rises, falls)."""
+    n, edges = grid_graph(5, 6)
+    g = build_graph(n, edges)
+    res = enumerate_chordless_cycles(g, store=False)
+    ts = [h["T"] for h in res.history]
+    assert max(ts) > ts[0] > 0          # wave rises above the initial triplets
+    assert ts[-1] <= max(ts)            # and decays
+    assert res.history[-1]["C"] == res.n_cycles
