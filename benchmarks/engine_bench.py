@@ -1,0 +1,125 @@
+"""Engine A/B: legacy host-driven loop vs fused device-resident wave engine.
+
+Measures, per Fig.-4 benchmark graph: wall clock (cold = incl. jit, warm =
+steady state), rounds, dispatches, host syncs — and derives the metrics the
+perf trajectory is tracked by (us/round, rounds/dispatch, syncs/round).
+
+Emits ``benchmarks/results/BENCH_engine.json`` (machine-readable; one entry
+per graph × engine) so every future PR can diff against this one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import build_graph, enumerate_chordless_cycles
+from repro.core.graphs import PAPER_TABLE1, grid_graph
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# the Fig. 4 evolution graphs + a dense bipartite stressor
+GRAPHS = ["Grid_5x6", "Grid_4x10", "Grid_6x6", "K_8_8"]
+
+
+def _time_engine(g, engine: str, repeats: int = 3):
+    t0 = time.perf_counter()
+    res = enumerate_chordless_cycles(g, store=False, formulation="bitword",
+                                     engine=engine)
+    cold = time.perf_counter() - t0
+    warm = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = enumerate_chordless_cycles(g, store=False,
+                                         formulation="bitword", engine=engine)
+        warm = min(warm, time.perf_counter() - t0)
+    return res, cold, warm
+
+
+def run(graph_names=None):
+    rows = []
+    for name in (graph_names or GRAPHS):
+        build, tri_gt, clc_gt = PAPER_TABLE1[name]
+        n, edges = build()
+        g = build_graph(n, edges)
+        per_graph = {}
+        for engine in ("host", "wave"):
+            res, cold, warm = _time_engine(g, engine)
+            assert res.n_triangles == tri_gt, (name, engine)
+            assert res.n_cycles - tri_gt == clc_gt, (name, engine)
+            s = res.stats
+            rounds = max(s["rounds"], 1)
+            per_graph[engine] = dict(
+                graph=name, engine=engine, n=n, m=len(edges),
+                n_cycles=res.n_cycles, rounds=s["rounds"],
+                t_cold_ms=round(cold * 1e3, 2),
+                t_warm_ms=round(warm * 1e3, 2),
+                us_per_round=round(warm * 1e6 / rounds, 2),
+                n_dispatches=s["n_dispatches"],
+                n_host_syncs=s["n_host_syncs"],
+                rounds_per_dispatch=round(s["rounds_per_dispatch"], 3),
+                syncs_per_round=round(s["syncs_per_round"], 4),
+            )
+        h, w = per_graph["host"], per_graph["wave"]
+        w["dispatch_reduction"] = round(
+            h["n_dispatches"] / max(w["n_dispatches"], 1), 2)
+        w["sync_reduction"] = round(
+            h["n_host_syncs"] / max(w["n_host_syncs"], 1), 2)
+        w["warm_speedup"] = round(h["t_warm_ms"] / max(w["t_warm_ms"], 1e-9),
+                                  2)
+        # cold = one-shot wall clock incl. compiles — the paper's
+        # T_par-total analogue; the superstep compiles ~¼ the programs.
+        w["cold_speedup"] = round(h["t_cold_ms"] / max(w["t_cold_ms"], 1e-9),
+                                  2)
+        rows += [h, w]
+    return rows
+
+
+def emit(rows, path=None) -> str:
+    path = path or os.path.join(RESULTS_DIR, "BENCH_engine.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(dict(benchmark="engine_ab",
+                       unit_notes=dict(t="milliseconds", us_per_round="µs"),
+                       rows=rows), f, indent=2)
+    return path
+
+
+def smoke():
+    """CI-time sanity: table1-style count validation on the 4×4 mesh plus a
+    single host-vs-wave A/B on it. Seconds, not minutes."""
+    n, edges = grid_graph(4, 4)
+    g = build_graph(n, edges)
+    ref = None
+    for engine in ("host", "wave"):
+        res = enumerate_chordless_cycles(g, store=False,
+                                         formulation="bitword", engine=engine)
+        assert res.n_triangles == 0
+        if ref is None:
+            ref = res.n_cycles
+        assert res.n_cycles == ref, (engine, res.n_cycles, ref)
+    print(f"smoke OK: grid 4x4 -> {ref} chordless cycles (both engines)")
+    return ref
+
+
+def main(graph_names=None, out_name: str = "BENCH_engine.json"):
+    rows = run(graph_names)
+    hdr = ("graph,engine,rounds,t_cold_ms,t_warm_ms,us_per_round,"
+           "dispatches,host_syncs,rounds_per_dispatch,syncs_per_round")
+    print(hdr)
+    for r in rows:
+        print(f"{r['graph']},{r['engine']},{r['rounds']},{r['t_cold_ms']},"
+              f"{r['t_warm_ms']},{r['us_per_round']},{r['n_dispatches']},"
+              f"{r['n_host_syncs']},{r['rounds_per_dispatch']},"
+              f"{r['syncs_per_round']}")
+    path = emit(rows, os.path.join(RESULTS_DIR, out_name))
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

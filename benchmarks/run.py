@@ -1,15 +1,19 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke]
 
 Sections:
+  engine   — host vs fused wave engine A/B → results/BENCH_engine.json
   table1   — paper Table 1 (counts validated vs published values + timings)
   fig4     — paper Fig. 4 (|T|/|C| evolution waves)
   kernels  — per-kernel microbench (pallas interpret vs jnp oracle)
   dist     — distributed-enumeration scaling (1..8 fake devices)
   roofline — the (arch × shape) dry-run roofline table (if results exist)
 
-Output: ``name,us_per_call,derived`` CSV blocks.
+``--smoke`` runs only the CI-time subset: table1-style validation on the
+4×4 mesh plus the engine A/B JSON emission on the two smallest graphs.
+
+Output: ``name,us_per_call,derived`` CSV blocks + BENCH_engine.json.
 """
 from __future__ import annotations
 
@@ -18,7 +22,21 @@ import sys
 
 def main() -> None:
     full = "--full" in sys.argv
-    print("== paper_table1 ==")
+    if "--smoke" in sys.argv:
+        from . import engine_bench
+        print("== smoke (4x4 mesh) ==")
+        engine_bench.smoke()
+        print("\n== engine A/B (smoke subset) ==")
+        # separate file: must not clobber the tracked full-suite baseline
+        engine_bench.main(["Grid_5x6", "K_8_8"],
+                          out_name="BENCH_engine_smoke.json")
+        return
+
+    print("== engine A/B ==")
+    from . import engine_bench
+    engine_bench.main()
+
+    print("\n== paper_table1 ==")
     from . import paper_table1
     paper_table1.main(full)
 

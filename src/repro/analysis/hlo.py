@@ -68,3 +68,12 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
 def total_collective_bytes(hlo_text: str) -> int:
     d = collective_bytes(hlo_text)
     return sum(v for k, v in d.items() if not k.startswith("_"))
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: some
+    return a per-partition list of dicts, some a bare dict, some None."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})

@@ -54,7 +54,8 @@ def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int):
     return f2, n_cyc, dropped
 
 
-def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str):
+def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str,
+            axis_size: int):
     """Ring-shift ``block`` tail rows rightward; keep them iff give==0.
 
     give ∈ {0,1} per device. Sends are unconditional (static shapes); the
@@ -67,7 +68,6 @@ def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str):
     start = cnt - k  # tail rows [start, start+k)
     idx = (start + jnp.arange(block, dtype=jnp.int32)) % jnp.maximum(cap, 1)
 
-    axis_size = jax.lax.axis_size(axis)
     perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
     send = lambda x: jax.lax.ppermute(x, axis, perm)
 
@@ -98,6 +98,7 @@ def make_dist_step(mesh: Mesh, axis: str, g_spec, cfg: DistEnumConfig,
     """Build the jitted per-round shard_map step."""
     cap = cfg.local_capacity
     block = cfg.balance_block
+    axis_size = int(mesh.shape[axis])  # static (lax.axis_size: newer jax)
     fspec = Frontier(path=P(axis), blocked=P(axis), v1=P(axis), l2=P(axis),
                      vlast=P(axis), count=P(axis))
 
@@ -114,11 +115,10 @@ def make_dist_step(mesh: Mesh, axis: str, g_spec, cfg: DistEnumConfig,
 
         # diffusion balance: donate a tail block iff my load exceeds my
         # RIGHT neighbor's by more than one block.
-        axis_size = jax.lax.axis_size(axis)
         perm_rev = [((i + 1) % axis_size, i) for i in range(axis_size)]
         rcnt = jax.lax.ppermute(f2.count, axis, perm_rev)  # right's count
         give = (f2.count > rcnt + block).astype(jnp.int32)
-        f2, lost = _donate(f2, give, block, axis)
+        f2, lost = _donate(f2, give, block, axis, axis_size)
 
         total_live = jax.lax.psum(f2.count, axis)
         new_counters = counters + jnp.stack(

@@ -1,11 +1,20 @@
 """Host process (paper Algorithm 4) — drives stage 1 + repeated stage 2.
 
 The paper relaunches the expansion kernel a fixed |V|−3 times with a
-double-buffered T/T' to avoid device→host convergence checks over PCIe.  Here
-the host loop re-jits only when the frontier capacity crosses a power-of-two
-bucket (bounded recompiles — the JAX analogue of persistent threads), and we
-*do* early-exit on count == 0 since reading a scalar is cheap on TPU
-(DESIGN.md §6.4).
+double-buffered T/T' to avoid device→host convergence checks over PCIe.
+Two engines reproduce that trade-off (DESIGN.md §6.4):
+
+* ``wave`` (default) — device-resident superstep: one jitted program runs up
+  to K expansion rounds in a ``lax.while_loop`` at a fixed capacity bucket,
+  fusing flag computation, popcount cycle counting, cycle gathering into a
+  preallocated device CycleBuffer, and prefix-sum compaction.  The host is
+  re-entered only on *bucket transitions*: frontier outgrew its bucket,
+  cycle buffer filled, wave died, or the |V|−3 round budget ran out.  Host
+  syncs drop from O(iterations) to O(bucket transitions).
+* ``host`` — legacy per-round dispatch (kept as the A/B baseline and for
+  step-debugging), with all per-round scalars batched into ONE readback per
+  round (the `count == 0` probe and the `dropped` assert ride the next
+  round's fetch instead of blocking their own).
 
 Modes:
   * store=True  — returns every chordless cycle as a vertex bitmap (the
@@ -18,15 +27,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 from typing import Callable
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .bitset_graph import BitsetGraph
 from . import expand as E
 from . import triplets as T
-from .frontier import Frontier, with_capacity
+from .frontier import (CycleBuffer, Frontier, empty_cycle_buffer,
+                       with_capacity)
 
 
 def _bucket(c: int, *, growth_bits: int = 1) -> int:
@@ -39,6 +51,33 @@ def _bucket(c: int, *, growth_bits: int = 1) -> int:
     return 1 << (-(-bits // growth_bits) * growth_bits)
 
 
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """All engine knobs in one place (backend × formulation × bucketing).
+
+    ``superstep_rounds`` (K) bounds rounds per wave dispatch — it is the
+    history-buffer length, NOT a correctness bound: the loop exits early on
+    any bucket transition and the host relaunches. ``cycle_buffer_rows``
+    sizes the device-resident cycle ring; a single round producing more
+    cycles than the whole buffer triggers a host-side buffer regrow."""
+    store: bool = True
+    formulation: str = "slot"      # 'slot' | 'bitword'
+    backend: str = "jnp"           # 'jnp' | 'pallas'
+    engine: str = "wave"           # 'wave' | 'host'
+    growth_bits: int = 1           # bucket granularity (see _bucket)
+    superstep_rounds: int = 8      # K — max device rounds per dispatch
+    # (K=8 measured best warm time on CPU interpret; raise on real
+    # accelerators where dispatch latency dominates — §Perf hillclimb)
+    cycle_buffer_rows: int = 4096  # CycleBuffer capacity (store mode)
+    grow_headroom: int = 1         # extra ×2 buckets granted on GROW — an
+    # aborted GROW round re-runs its expand at the new bucket, so headroom
+    # trades dead-row work for fewer wasted peak-size rounds
+    max_iters: int | None = None
+
+    def bucket(self, c: int) -> int:
+        return _bucket(c, growth_bits=self.growth_bits)
+
+
 @dataclasses.dataclass
 class EnumerationResult:
     n_cycles: int                 # all chordless cycles (incl. triangles)
@@ -46,6 +85,7 @@ class EnumerationResult:
     cycle_masks: np.ndarray | None  # (n_cycles, nw) uint32, or None if count-only
     iterations: int
     history: list[dict]           # per-iteration |T|, |C| (paper Fig. 4)
+    stats: dict | None = None     # dispatch / host-sync accounting
 
     def cycles_as_sets(self, n: int) -> list[frozenset[int]]:
         from .bitset_graph import unpack_bits
@@ -54,92 +94,302 @@ class EnumerationResult:
         return [frozenset(np.flatnonzero(r)) for r in dense]
 
 
-def enumerate_chordless_cycles(
-    g: BitsetGraph,
-    *,
-    store: bool = True,
-    formulation: str = "slot",
-    backend: str = "jnp",
-    max_iters: int | None = None,
-    progress: Callable[[dict], None] | None = None,
-) -> EnumerationResult:
-    """Enumerate (or count) all chordless cycles of ``g``."""
-    if backend == "pallas":
+# ---------------------------------------------------------------------------
+# Wave engine (device-resident superstep)
+# ---------------------------------------------------------------------------
+
+# superstep exit codes
+_RUN, _DONE, _GROW, _DRAIN, _SHRINK = 0, 1, 2, 3, 4
+
+
+@partial(jax.jit,
+         static_argnames=("delta", "store", "formulation", "backend",
+                          "k_max"))
+def _wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
+                    rounds_limit: jnp.ndarray, *, delta: int, store: bool,
+                    formulation: str, backend: str, k_max: int):
+    """Run up to min(k_max, rounds_limit) fused rounds fully on device.
+
+    Returns (f', buf', rounds_done, status, t_hist, c_hist, pending_new,
+    pending_cyc). ``pending_*`` carry the aborted round's exact sizes so the
+    host can pick the next bucket without an extra counting dispatch."""
+    cap = f.capacity
+    # decay exit: once the wave shrinks well below the bucket, dead-row work
+    # dominates — hand back to the host to re-bucket DOWN (shapes are static
+    # inside the loop, so shrinking cannot happen here).
+    shrink_below = cap // 4 if cap > 16 else 0
+
+    def cond(c):
+        f, buf, r, status, th, ch, pn, pc = c
+        return (status == _RUN) & (r < rounds_limit) & (f.count > 0)
+
+    def body(c):
+        f, buf, r, status, th, ch, pn, pc = c
+        f2, buf2, n_cyc, n_new, ok_f, ok_c = E.expand_count_compact(
+            g, f, buf, delta=delta, formulation=formulation, store=store,
+            backend=backend)
+        ok = ok_f & ok_c
+        th = th.at[r].set(jnp.where(ok, n_new, 0))
+        ch = ch.at[r].set(jnp.where(ok, n_cyc, 0))
+        r2 = jnp.where(ok, r + 1, r).astype(jnp.int32)
+        shrink = ok & (n_new > 0) & (n_new <= shrink_below)
+        status2 = jnp.where(ok,
+                            jnp.where(shrink, jnp.int32(_SHRINK),
+                                      jnp.int32(_RUN)),
+                            jnp.where(ok_f, jnp.int32(_DRAIN),
+                                      jnp.int32(_GROW)))
+        pn2 = jnp.where(ok, jnp.int32(0), n_new).astype(jnp.int32)
+        pc2 = jnp.where(ok, jnp.int32(0), n_cyc).astype(jnp.int32)
+        return f2, buf2, r2, status2, th, ch, pn2, pc2
+
+    init = (f, buf, jnp.int32(0), jnp.int32(_RUN),
+            jnp.zeros((k_max,), jnp.int32), jnp.zeros((k_max,), jnp.int32),
+            jnp.int32(0), jnp.int32(0))
+    f, buf, r, status, th, ch, pn, pc = jax.lax.while_loop(cond, body, init)
+    status = jnp.where(((status == _RUN) | (status == _SHRINK))
+                       & (f.count == 0), jnp.int32(_DONE), status)
+    return f, buf, r, status, th, ch, pn, pc
+
+
+def _new_stats() -> dict:
+    return dict(n_dispatches=0, n_host_syncs=0, n_bucket_transitions=0,
+                n_drains=0)
+
+
+def _enumerate_wave(g: BitsetGraph, cfg: EngineConfig,
+                    progress: Callable[[dict], None] | None
+                    ) -> EnumerationResult:
+    if cfg.backend == "pallas":
         from ..kernels import ops as kops
-        slot_flags = kops.expand_flags_slot
         trip_flags = kops.triplet_flags
     else:
-        slot_flags = E.expand_flags_slot
         trip_flags = T.triplet_flags
 
     delta = max(g.max_degree, 1)
+    nw = g.adj_bits.shape[1]
     frontier, tri_masks, n_tri = T.initial_frontier(
-        g, bucket=_bucket, flags_fn=trip_flags)
+        g, bucket=cfg.bucket, flags_fn=trip_flags)
 
-    cycles: list[np.ndarray] = [tri_masks] if store else []
+    stats = _new_stats()
+    cycles: list[np.ndarray] = [tri_masks] if cfg.store else []
     n_cycles = n_tri
-    history = [dict(step=0, T=int(frontier.count), C=n_tri)]
-    limit = max_iters if max_iters is not None else max(g.n - 3, 0)
+    cnt = int(frontier.count)
+    stats["n_host_syncs"] += 1
+    history = [dict(step=0, T=cnt, C=n_tri)]
+    limit = cfg.max_iters if cfg.max_iters is not None else max(g.n - 3, 0)
+
+    cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
+    buf = empty_cycle_buffer(cyc_cap, nw)
 
     it = 0
-    while it < limit:
-        cnt = int(frontier.count)
-        if cnt == 0:
+    relaunches = 0
+    while it < limit and cnt > 0:
+        relaunches += 1
+        if relaunches > 4 * limit + 16:
+            raise RuntimeError("wave engine: no progress across relaunches")
+        k = min(cfg.superstep_rounds, limit - it)
+        frontier, buf, r, status, th, ch, pn, pc = _wave_superstep(
+            g, frontier, buf, jnp.int32(k), delta=delta, store=cfg.store,
+            formulation=cfg.formulation, backend=cfg.backend,
+            k_max=cfg.superstep_rounds)
+        stats["n_dispatches"] += 1
+        status_h, r_h, th_h, ch_h, pn_h, pc_h, cnt_h, bc_h = jax.device_get(
+            (status, r, th, ch, pn, pc, frontier.count, buf.count))
+        stats["n_host_syncs"] += 1
+
+        for i in range(int(r_h)):
+            n_cycles += int(ch_h[i])
+            rec = dict(step=it + i + 1, T=int(th_h[i]), C=n_cycles)
+            history.append(rec)
+            if progress:
+                progress(rec)
+        it += int(r_h)
+        cnt = int(cnt_h)
+        status_h = int(status_h)
+
+        if status_h == _DRAIN:
+            # cycle buffer full: drain to host, regrow if one round alone
+            # exceeds the current buffer.
+            if int(bc_h):
+                cycles.append(np.asarray(buf.masks[:int(bc_h)]))
+                stats["n_host_syncs"] += 1
+                stats["n_drains"] += 1
+            cyc_cap = max(cyc_cap, cfg.bucket(max(int(pc_h), 1)))
+            buf = empty_cycle_buffer(cyc_cap, nw)
+        elif status_h == _GROW:
+            # re-bucket the headroom'd size so the shape stays inside the
+            # growth_bits bucket family (off-family shapes would churn
+            # recompiles against the SHRINK path).
+            new_cap = cfg.bucket(
+                cfg.bucket(max(int(pn_h), 1)) << max(cfg.grow_headroom, 0))
+            frontier = with_capacity(frontier, new_cap)
+            stats["n_bucket_transitions"] += 1
+        elif status_h in (_RUN, _SHRINK) and cnt > 0:
+            # round budget exhausted / wave decayed below the bucket: shrink
+            # as the wave dies down (bounds dead-row work, like the host
+            # loop does every round).
+            new_cap = cfg.bucket(max(cnt, 1))
+            if new_cap < frontier.capacity:
+                frontier = with_capacity(frontier, new_cap)
+                stats["n_bucket_transitions"] += 1
+        elif status_h == _DONE:
             break
+
+    if cfg.store:
+        bc = int(jax.device_get(buf.count))
+        if bc:
+            cycles.append(np.asarray(buf.masks[:bc]))
+            stats["n_drains"] += 1
+        stats["n_host_syncs"] += 1
+
+    cycle_masks = None
+    if cfg.store:
+        cycle_masks = (np.concatenate(cycles, axis=0) if cycles
+                       else np.zeros((0, nw), np.uint32))
+    stats["rounds"] = it
+    stats["rounds_per_dispatch"] = it / max(stats["n_dispatches"], 1)
+    stats["syncs_per_round"] = stats["n_host_syncs"] / max(it, 1)
+    return EnumerationResult(
+        n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=cycle_masks,
+        iterations=it, history=history, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Legacy host-driven engine (per-round dispatch, batched readbacks)
+# ---------------------------------------------------------------------------
+
+def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
+                    progress: Callable[[dict], None] | None
+                    ) -> EnumerationResult:
+    if cfg.backend == "pallas":
+        from ..kernels import ops as kops
+        slot_flags = kops.expand_flags_slot
+        trip_flags = kops.triplet_flags
+        bitword_count = kops.bitword_flags_count
+        bitword_words = kops.expand_words_bitword
+    else:
+        slot_flags = E.expand_flags_slot
+        trip_flags = T.triplet_flags
+        bitword_count = E.bitword_flags_count
+        bitword_words = E.expand_words_bitword
+
+    store, formulation = cfg.store, cfg.formulation
+    delta = max(g.max_degree, 1)
+    frontier, tri_masks, n_tri = T.initial_frontier(
+        g, bucket=cfg.bucket, flags_fn=trip_flags)
+
+    stats = _new_stats()
+    cycles: list[np.ndarray] = [tri_masks] if store else []
+    n_cycles = n_tri
+    cnt = int(frontier.count)
+    stats["n_host_syncs"] += 1
+    history = [dict(step=0, T=cnt, C=n_tri)]
+    limit = cfg.max_iters if cfg.max_iters is not None else max(g.n - 3, 0)
+
+    # the previous round's `dropped` scalar rides the NEXT round's readback
+    # (it is provably 0 — out_cap is sized from the exact n_new — so nothing
+    # downstream ever waits on it).
+    prev_dropped = None
+    it = 0
+    while it < limit and cnt > 0:
         it += 1
-        # trim dead tail rows to current bucket to bound work
-        frontier = with_capacity(frontier, _bucket(cnt))
 
         if formulation == "bitword" and not store:
             # fast path (§Perf engine hillclimb): popcount-only cycle
-            # counting, 2 jit calls / round, exact output sizing.
-            ext_w, n_cyc_j, n_new_j = E.bitword_flags_count(g, frontier)
-            n_cyc, n_new = int(n_cyc_j), int(n_new_j)
+            # counting, exact output sizing, ONE readback per round.
+            ext_w, n_cyc_j, n_new_j = bitword_count(g, frontier)
+            stats["n_dispatches"] += 1
+            fetch = (n_cyc_j, n_new_j) + (
+                () if prev_dropped is None else (prev_dropped,))
+            got = jax.device_get(fetch)
+            stats["n_host_syncs"] += 1
+            n_cyc, n_new = int(got[0]), int(got[1])
+            if prev_dropped is not None:
+                assert int(got[2]) == 0
             n_cycles += n_cyc
-            frontier, dropped = E.bitword_compact(
-                g, frontier, ext_w, delta, _bucket(max(n_new, 1)))
-            assert int(dropped) == 0
+            frontier, prev_dropped = E.bitword_compact(
+                g, frontier, ext_w, delta, cfg.bucket(max(n_new, 1)))
+            stats["n_dispatches"] += 1
+            cnt = n_new
             rec = dict(step=it, T=n_new, C=n_cycles)
             history.append(rec)
             if progress:
                 progress(rec)
             continue
+
         if formulation == "bitword":
-            close_w, ext_w = E.expand_words_bitword(g, frontier)
+            close_w, ext_w = bitword_words(g, frontier)
             cand_v = E.bitword_to_slots(ext_w, delta)
             is_ext = cand_v >= 0
-            n_new = int(is_ext.sum())
-            # cycles from close words
             ccand = E.bitword_to_slots(close_w, delta)
             is_cyc = ccand >= 0
-            n_cyc = int(is_cyc.sum())
             cyc_src, cyc_flags = ccand, is_cyc
         else:
             cand_v, is_cyc, is_ext = slot_flags(g, frontier, delta)
-            n_new_j, n_cyc_j = E.count_ext_and_cycles(is_cyc, is_ext)
-            n_new, n_cyc = int(n_new_j), int(n_cyc_j)
             cyc_src, cyc_flags = cand_v, is_cyc
+        n_new_j, n_cyc_j = E.count_ext_and_cycles(is_cyc, is_ext)
+        stats["n_dispatches"] += 1
+        fetch = (n_cyc_j, n_new_j) + (
+            () if prev_dropped is None else (prev_dropped,))
+        got = jax.device_get(fetch)
+        stats["n_host_syncs"] += 1
+        n_cyc, n_new = int(got[0]), int(got[1])
+        if prev_dropped is not None:
+            assert int(got[2]) == 0
 
         if store and n_cyc:
             masks, _ = E.gather_cycles(frontier, cyc_src, cyc_flags,
-                                       _bucket(n_cyc))
+                                       cfg.bucket(n_cyc))
             cycles.append(np.asarray(masks)[:n_cyc])
+            stats["n_dispatches"] += 1
+            stats["n_host_syncs"] += 1
         n_cycles += n_cyc
 
-        out_cap = _bucket(n_new)
-        frontier, dropped = E.compact_extensions(g, frontier, cand_v, is_ext,
-                                                 out_cap)
-        assert int(dropped) == 0
+        frontier, prev_dropped = E.compact_extensions(
+            g, frontier, cand_v, is_ext, cfg.bucket(max(n_new, 1)))
+        stats["n_dispatches"] += 1
+        cnt = n_new
         rec = dict(step=it, T=n_new, C=n_cycles)
         history.append(rec)
         if progress:
             progress(rec)
+
+    if prev_dropped is not None:
+        assert int(jax.device_get(prev_dropped)) == 0
+        stats["n_host_syncs"] += 1
 
     cycle_masks = None
     if store:
         nw = g.adj_bits.shape[1]
         cycle_masks = (np.concatenate(cycles, axis=0) if cycles
                        else np.zeros((0, nw), np.uint32))
+    stats["rounds"] = it
+    stats["rounds_per_dispatch"] = it / max(stats["n_dispatches"], 1)
+    stats["syncs_per_round"] = stats["n_host_syncs"] / max(it, 1)
     return EnumerationResult(
         n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=cycle_masks,
-        iterations=it, history=history)
+        iterations=it, history=history, stats=stats)
+
+
+def enumerate_chordless_cycles(
+    g: BitsetGraph,
+    *,
+    store: bool = True,
+    formulation: str = "slot",
+    backend: str = "jnp",
+    engine: str = "wave",
+    max_iters: int | None = None,
+    progress: Callable[[dict], None] | None = None,
+    config: EngineConfig | None = None,
+) -> EnumerationResult:
+    """Enumerate (or count) all chordless cycles of ``g``.
+
+    ``config`` overrides the individual keyword knobs when given."""
+    cfg = config if config is not None else EngineConfig(
+        store=store, formulation=formulation, backend=backend, engine=engine,
+        max_iters=max_iters)
+    if cfg.engine == "host":
+        return _enumerate_host(g, cfg, progress)
+    if cfg.engine != "wave":
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+    return _enumerate_wave(g, cfg, progress)

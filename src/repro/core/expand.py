@@ -12,6 +12,12 @@ Two formulations (DESIGN.md §2):
 Both produce identical results (tested).  The paper's atomic appends into
 C / T' become prefix-sum compaction; the host-relaunch double buffer (T → T')
 is the functional update Frontier → Frontier.
+
+The wave engine (DESIGN.md §6.4) composes these into a single fused round,
+``expand_count_compact``: flag computation, cycle counting, cycle gathering
+into the device-resident ``CycleBuffer``, and prefix-sum compaction — all
+traceable inside ``lax.while_loop`` at fixed capacities, so an entire
+superstep of K rounds compiles to one program with zero host syncs.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from .bitset_graph import BitsetGraph, bit_test, popcount
-from .frontier import Frontier
+from .frontier import CycleBuffer, Frontier, scatter_frontier
 
 
 # ---------------------------------------------------------------------------
@@ -98,40 +104,48 @@ def bitword_to_slots(ext_words: jnp.ndarray, delta: int):
 # Compaction (the paper's atomic-append replacement)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("out_cap",), donate_argnums=())
-def compact_extensions(g: BitsetGraph, f: Frontier, cand_v: jnp.ndarray,
-                       is_ext: jnp.ndarray, out_cap: int) -> tuple[Frontier, jnp.ndarray]:
-    """Scatter extended paths ⟨p, v⟩ into a fresh frontier of capacity
-    ``out_cap`` using cumsum offsets. Returns (new_frontier, n_dropped)."""
+def compaction_dests(flat_flags: jnp.ndarray, out_cap: int,
+                     base: jnp.ndarray | int = 0):
+    """Shared prefix-sum destination computation for all stream compactions.
+
+    Flag i scatters to ``base + (#flags before i)``; unflagged or overflowing
+    entries are routed to ``out_cap`` (the drop slot of ``.at[].set(mode=
+    'drop')``). Returns (dest, total_flagged).
+    """
+    pos = jnp.cumsum(flat_flags.astype(jnp.int32)) - 1
+    total = jnp.where(flat_flags.any(), pos[-1] + 1, 0)
+    dest = jnp.where(flat_flags, base + pos, out_cap)
+    dest = jnp.where(dest >= out_cap, out_cap, dest)
+    return dest.astype(jnp.int32), total.astype(jnp.int32)
+
+
+def _extension_rows(g: BitsetGraph, f: Frontier, cand_v: jnp.ndarray):
+    """Materialize ⟨p, v⟩ rows for every (path, slot) pair (flat layout)."""
     cap, delta = cand_v.shape
     nw = f.n_words
-    flat_ext = is_ext.reshape(-1)
-    pos = jnp.cumsum(flat_ext.astype(jnp.int32)) - 1
-    total = jnp.where(flat_ext.any(), pos[-1] + 1, 0)
-    dest = jnp.where(flat_ext, pos, out_cap)       # drop invalid
-    dest = jnp.where(dest >= out_cap, out_cap, dest)  # drop overflow
-
     row = jnp.repeat(jnp.arange(cap, dtype=jnp.int32), delta)
     v = cand_v.reshape(-1)
     vi = jnp.clip(v, 0, None)
     onehot_w = (jnp.uint32(1) << (vi % 32).astype(jnp.uint32))
     wi = (vi // 32).astype(jnp.int32)
-
-    new_path_rows = f.path[row]
-    # set bit v in the gathered row
     upd = jnp.where(jnp.arange(nw)[None, :] == wi[:, None],
                     onehot_w[:, None], jnp.uint32(0))
-    new_path_rows = new_path_rows | upd
-    new_blocked_rows = f.blocked[row] | g.adj_bits[f.vlast[row]]
+    new_path = f.path[row] | upd
+    new_blocked = f.blocked[row] | g.adj_bits[f.vlast[row]]
+    return row, v, new_path, new_blocked
 
-    out = Frontier(
-        path=jnp.zeros((out_cap, nw), jnp.uint32).at[dest].set(new_path_rows, mode="drop"),
-        blocked=jnp.zeros((out_cap, nw), jnp.uint32).at[dest].set(new_blocked_rows, mode="drop"),
-        v1=jnp.full((out_cap,), -1, jnp.int32).at[dest].set(f.v1[row], mode="drop"),
-        l2=jnp.zeros((out_cap,), jnp.int32).at[dest].set(f.l2[row], mode="drop"),
-        vlast=jnp.zeros((out_cap,), jnp.int32).at[dest].set(v, mode="drop"),
-        count=jnp.minimum(total, out_cap).astype(jnp.int32),
-    )
+
+@partial(jax.jit, static_argnames=("out_cap",), donate_argnums=())
+def compact_extensions(g: BitsetGraph, f: Frontier, cand_v: jnp.ndarray,
+                       is_ext: jnp.ndarray, out_cap: int) -> tuple[Frontier, jnp.ndarray]:
+    """Scatter extended paths ⟨p, v⟩ into a fresh frontier of capacity
+    ``out_cap`` using cumsum offsets. Returns (new_frontier, n_dropped)."""
+    flat_ext = is_ext.reshape(-1)
+    dest, total = compaction_dests(flat_ext, out_cap)
+    row, v, new_path, new_blocked = _extension_rows(g, f, cand_v)
+    out = scatter_frontier(dest, new_path, new_blocked,
+                           f.v1[row], f.l2[row], v,
+                           jnp.minimum(total, out_cap), out_cap)
     return out, jnp.maximum(total - out_cap, 0)
 
 
@@ -158,21 +172,111 @@ def bitword_compact(g: BitsetGraph, f: Frontier, ext_w: jnp.ndarray,
     return compact_extensions(g, f, cand_v, is_ext, out_cap)
 
 
-@partial(jax.jit, static_argnames=("out_cap",))
-def gather_cycles(f: Frontier, cand_v: jnp.ndarray, is_cycle: jnp.ndarray,
-                  out_cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Materialize closed cycles as bitmaps (out_cap, nw): path | bit(v)."""
+def _cycle_rows(f: Frontier, cand_v: jnp.ndarray):
+    """Cycle bitmaps for every (path, slot) pair: path | bit(v), flat."""
     cap, delta = cand_v.shape
     nw = f.n_words
-    flat = is_cycle.reshape(-1)
-    pos = jnp.cumsum(flat.astype(jnp.int32)) - 1
-    total = jnp.where(flat.any(), pos[-1] + 1, 0)
-    dest = jnp.where(flat, jnp.minimum(pos, out_cap), out_cap)
     row = jnp.repeat(jnp.arange(cap, dtype=jnp.int32), delta)
     v = jnp.clip(cand_v.reshape(-1), 0, None)
     upd = jnp.where(jnp.arange(nw)[None, :] == (v // 32)[:, None],
                     (jnp.uint32(1) << (v % 32).astype(jnp.uint32))[:, None],
                     jnp.uint32(0))
-    rows = f.path[row] | upd
+    return f.path[row] | upd
+
+
+@partial(jax.jit, static_argnames=("out_cap",))
+def gather_cycles(f: Frontier, cand_v: jnp.ndarray, is_cycle: jnp.ndarray,
+                  out_cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize closed cycles as bitmaps (out_cap, nw): path | bit(v)."""
+    flat = is_cycle.reshape(-1)
+    dest, total = compaction_dests(flat, out_cap)
+    rows = _cycle_rows(f, cand_v)
+    nw = f.n_words
     out = jnp.zeros((out_cap, nw), jnp.uint32).at[dest].set(rows, mode="drop")
     return out, jnp.minimum(total, out_cap)
+
+
+def gather_cycles_into(f: Frontier, cand_v: jnp.ndarray,
+                       is_cycle: jnp.ndarray, buf: CycleBuffer) -> CycleBuffer:
+    """Append closed cycles to the device-resident CycleBuffer at its write
+    offset (wave engine; caller guarantees they fit — guarded upstream)."""
+    flat = is_cycle.reshape(-1)
+    dest, total = compaction_dests(flat, buf.capacity, base=buf.count)
+    rows = _cycle_rows(f, cand_v)
+    masks = buf.masks.at[dest].set(rows, mode="drop")
+    new_count = jnp.minimum(buf.count + total, buf.capacity)
+    return CycleBuffer(masks=masks, count=new_count.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Fused wave round (DESIGN.md §6.4)
+# ---------------------------------------------------------------------------
+
+def _round_flags(g: BitsetGraph, f: Frontier, delta: int, formulation: str,
+                 backend: str):
+    """Flags + counts for one round, no host syncs. Returns
+    (flags, n_cyc, n_new); ``flags`` is formulation-specific."""
+    if formulation == "bitword":
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            close_w, ext_w, n_cyc, n_new = kops.bitword_fused_counts(g, f)
+            return (close_w, ext_w), n_cyc, n_new
+        close_w, ext_w = expand_words_bitword(g, f)
+        return ((close_w, ext_w), popcount(close_w).sum(),
+                popcount(ext_w).sum())
+    if backend == "pallas":
+        from ..kernels import ops as kops
+        cand_v, is_cyc, is_ext = kops.expand_flags_slot(g, f, delta)
+    else:
+        cand_v, is_cyc, is_ext = expand_flags_slot(g, f, delta)
+    n_new, n_cyc = count_ext_and_cycles(is_cyc, is_ext)
+    return (cand_v, is_cyc, is_ext), n_cyc, n_new
+
+
+def _apply_round(g: BitsetGraph, f: Frontier, buf: CycleBuffer, flags,
+                 delta: int, formulation: str, store: bool):
+    """Gather this round's cycles + compact extensions, both at fixed
+    capacity (frontier bucket / cycle buffer) — the T → T' update."""
+    if formulation == "bitword":
+        close_w, ext_w = flags
+        cand_v = bitword_to_slots(ext_w, delta)
+        is_ext = cand_v >= 0
+        if store:
+            ccand = bitword_to_slots(close_w, delta)
+            buf = gather_cycles_into(f, ccand, ccand >= 0, buf)
+    else:
+        cand_v, is_cyc, is_ext = flags
+        if store:
+            buf = gather_cycles_into(f, cand_v, is_cyc, buf)
+    f2, _ = compact_extensions(g, f, cand_v, is_ext, f.capacity)
+    return f2, buf
+
+
+def expand_count_compact(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
+                         delta: int, formulation: str, store: bool,
+                         backend: str = "jnp"):
+    """One fused, guarded expansion round — the wave superstep's loop body.
+
+    Combines ``bitword_flags_count`` + ``bitword_compact`` (and the slot
+    equivalent) into a single traced unit: flag computation, popcount cycle
+    counting, in-buffer cycle gathering, and prefix-sum compaction back into
+    the SAME capacity bucket.  If the round would overflow the frontier
+    bucket or the cycle buffer it is NOT applied; the caller reads the
+    ``ok_*`` flags and escalates to the host (bucket transition).
+
+    Returns (f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles).
+    """
+    flags, n_cyc, n_new = _round_flags(g, f, delta, formulation, backend)
+    ok_frontier = n_new <= f.capacity
+    if store:
+        ok_cycles = (buf.count + n_cyc) <= buf.capacity
+    else:
+        ok_cycles = jnp.bool_(True)
+    ok = ok_frontier & ok_cycles
+
+    f2, buf2 = jax.lax.cond(
+        ok,
+        lambda _: _apply_round(g, f, buf, flags, delta, formulation, store),
+        lambda _: (f, buf),
+        None)
+    return f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles

@@ -6,6 +6,15 @@ same struct-of-arrays layout and add the incremental *blocked* bitset
 B_p = ∪_{i=2..t-1} Adj(v_i) (DESIGN.md §2) that turns the paper's O(t·logΔ)
 chord re-check into one word probe. We store ℓ(v₂) directly instead of v₂
 since only the label is ever used.
+
+Two kinds of capacity change exist (DESIGN.md §6.4):
+
+* ``with_capacity`` — HOST-side bucketing: pads/trims to a new power-of-two
+  bucket between jit shapes.  Only legal at superstep boundaries.
+* ``scatter_frontier`` — DEVICE-side functional update at *fixed* capacity:
+  builds the next frontier from gathered rows + cumsum destinations without
+  any host round-trip.  This is what the fused wave engine loops over inside
+  ``lax.while_loop``.
 """
 from __future__ import annotations
 
@@ -73,4 +82,68 @@ def with_capacity(f: Frontier, capacity: int) -> Frontier:
         path=f.path[:capacity], blocked=f.blocked[:capacity],
         v1=f.v1[:capacity], l2=f.l2[:capacity], vlast=f.vlast[:capacity],
         count=jnp.minimum(f.count, capacity).astype(jnp.int32),
+    )
+
+
+def scatter_frontier(dest: jnp.ndarray, path_rows: jnp.ndarray,
+                     blocked_rows: jnp.ndarray, v1: jnp.ndarray,
+                     l2: jnp.ndarray, vlast: jnp.ndarray,
+                     count: jnp.ndarray, out_cap: int) -> Frontier:
+    """Build a fresh frontier of static capacity ``out_cap`` by scattering
+    row i of each field to ``dest[i]`` (entries ≥ out_cap are dropped).
+
+    Pure device op — the wave engine's in-bucket T → T' update.
+    """
+    nw = path_rows.shape[-1]
+    return Frontier(
+        path=jnp.zeros((out_cap, nw), jnp.uint32)
+            .at[dest].set(path_rows, mode="drop"),
+        blocked=jnp.zeros((out_cap, nw), jnp.uint32)
+            .at[dest].set(blocked_rows, mode="drop"),
+        v1=jnp.full((out_cap,), -1, jnp.int32).at[dest].set(v1, mode="drop"),
+        l2=jnp.zeros((out_cap,), jnp.int32).at[dest].set(l2, mode="drop"),
+        vlast=jnp.zeros((out_cap,), jnp.int32)
+            .at[dest].set(vlast, mode="drop"),
+        count=count.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cycle ring buffer (the wave engine's device-resident slice of matrix S)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CycleBuffer:
+    """Preallocated device buffer of discovered cycle bitmaps.
+
+    Rows [0, count) hold cycles not yet drained to the host. The wave
+    superstep appends to it each round; the host drains it at superstep
+    boundaries only (DESIGN.md §6.4) — that is what turns O(iterations)
+    device→host mask copies into O(bucket transitions).
+    """
+    masks: jnp.ndarray  # (cap, nw) uint32
+    count: jnp.ndarray  # () int32
+
+    def tree_flatten(self):
+        return (self.masks, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.masks.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self.masks.shape[1]
+
+
+def empty_cycle_buffer(capacity: int, n_words: int) -> CycleBuffer:
+    return CycleBuffer(
+        masks=jnp.zeros((max(capacity, 1), n_words), jnp.uint32),
+        count=jnp.zeros((), jnp.int32),
     )

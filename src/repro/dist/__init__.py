@@ -1,0 +1,7 @@
+"""Distribution substrate: logical-axis sharding rules, compressed
+collectives, straggler/fault policies, and elastic (cross-mesh) restore.
+
+The chordless-cycle engine itself shards via ``core.distributed``; this
+package is the generic substrate shared by the training / serving launchers
+(DESIGN.md §5).
+"""

@@ -1,0 +1,33 @@
+"""Elastic restore: bring a checkpoint up on whatever mesh exists NOW.
+
+Checkpoints are saved as full host-gathered arrays (see ``repro.checkpoint``)
+precisely so a restart after losing a pod — or a deliberate rescale — can
+re-place them: we recompute the NamedShardings for the *current* mesh from
+the state's logical axes and ``device_put`` each leaf against them.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from jax.sharding import Mesh
+
+from .. import checkpoint as ckpt
+from .sharding import DEFAULT_RULES, tree_shardings
+
+
+def resume_on_mesh(directory: str, abstract_state: Any, state_logical: Any,
+                   mesh: Mesh, rules: Mapping | None = None,
+                   step: int | None = None):
+    """Restore the latest (or given) checkpoint resharded onto ``mesh``.
+
+    Returns ``(state, step)``. Raises FileNotFoundError if no checkpoint.
+    """
+    if step is None:
+        step = ckpt.latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    shardings = tree_shardings(state_logical, abstract_state, mesh,
+                               rules or DEFAULT_RULES)
+    state = ckpt.restore_pytree(directory, step, abstract_state,
+                                shardings=shardings)
+    return state, step

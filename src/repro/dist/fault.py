@@ -1,0 +1,96 @@
+"""Fault handling: straggler detection + checkpoint-restart loops.
+
+``StragglerPolicy`` watches per-step wall clock against an EWMA baseline;
+flagged outliers are *not* folded into the baseline (a slow pod must not
+drag the reference up and mask itself). ``CheckpointedLoop`` is the generic
+save/restore-retry harness used by the launchers: any exception rolls the
+loop back to the last checkpointed step and replays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Flag steps slower than ``multiple`` × the EWMA of healthy steps.
+
+    ``should_remediate`` latches once ``max_consecutive`` flagged steps occur
+    in a row — one slow step is noise (GC, incast), a run of them is a sick
+    host that needs draining.
+    """
+    multiple: float = 3.0
+    max_consecutive: int = 2
+    alpha: float = 0.2          # EWMA smoothing of healthy observations
+    warmup: int = 3             # snap-down window (jit-compile first steps)
+
+    _ewma: float | None = None
+    _consecutive: int = 0
+    _n_obs: int = 0
+
+    def observe(self, dt: float) -> bool:
+        """Record one step time; returns True iff it is a straggler."""
+        self._n_obs += 1
+        if self._ewma is None:
+            self._ewma = float(dt)
+            return False
+        if self._n_obs <= self.warmup and dt * self.multiple < self._ewma:
+            # early steps only: a baseline poisoned by an outlier-high
+            # first step (jit compile) snaps down immediately. Restricted
+            # to the warmup window so one anomalously FAST step later in a
+            # healthy run cannot crater the baseline and false-latch
+            # remediation.
+            self._ewma = float(dt)
+            self._consecutive = 0
+            return False
+        slow = dt > self.multiple * self._ewma
+        if slow:
+            self._consecutive += 1
+        else:
+            self._consecutive = 0
+            self._ewma = (1 - self.alpha) * self._ewma + self.alpha * float(dt)
+        return slow
+
+    @property
+    def should_remediate(self) -> bool:
+        return self._consecutive >= self.max_consecutive
+
+    def reset(self) -> None:
+        self._consecutive = 0
+
+
+class CheckpointedLoop:
+    """Run ``fn(step)`` for step ∈ [start, end) with periodic checkpoints;
+    on any exception restore the last checkpoint and replay from there.
+
+    ``save(step)`` persists "next step to run"; ``restore() -> step`` returns
+    it. ``every`` is the checkpoint cadence in steps (0 = only implicit
+    start). ``max_restarts`` bounds crash-loops.
+    """
+
+    def __init__(self, save: Callable[[int], None],
+                 restore: Callable[[], int], every: int = 1,
+                 max_restarts: int = 100):
+        self.save = save
+        self.restore = restore
+        self.every = max(int(every), 0)
+        self.max_restarts = max_restarts
+
+    def run(self, fn: Callable[[int], None], start: int, end: int) -> int:
+        step, restarts = start, 0
+        self.save(step)
+        while step < end:
+            try:
+                fn(step)
+            except Exception:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                step = self.restore()
+                continue
+            step += 1
+            if self.every and step % self.every == 0:
+                self.save(step)
+        self.save(step)
+        return step

@@ -1,0 +1,116 @@
+"""Logical-axis sharding: names → mesh axes → NamedSharding (DESIGN.md §5).
+
+Every array in the system carries a *logical* axis tuple (e.g.
+``("batch", "seq", "embed")``) rather than a hard-coded PartitionSpec.  A
+rules dict maps each logical name to the mesh axes it may shard over; axes
+absent from the current mesh — or that don't divide the dimension — fall
+back to replication. This is what makes the same model code run on a 1-chip
+CPU test, a 16×16 pod, and a 2×16×16 multi-pod mesh without edits.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis → preferred mesh axes (first-listed shards outermost).
+# "pod" only exists on multi-pod meshes; it is silently dropped elsewhere.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # data-parallel axes
+    "batch": ("pod", "data"),
+    "cache_batch": ("pod", "data"),
+    "recsys_batch": ("pod", "data"),
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    "candidates": ("pod", "data"),
+    # fsdp-style parameter sharding
+    "embed_fsdp": ("data",),
+    # tensor-parallel axes
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    # replicated
+    "seq": (),
+    "cache_seq": (),
+    "embed": (),
+    "qkv": (),
+    "layers": (),
+    "gnn": (),
+}
+
+
+def _is_logical(x: Any) -> bool:
+    """A logical-axis tuple: possibly-empty tuple of str | None."""
+    return isinstance(x, tuple) and all(
+        isinstance(i, (str, type(None))) for i in x)
+
+
+def _resolve(name: str | None, rules: Mapping[str, Sequence[str]],
+             mesh: Mesh | None) -> tuple[str, ...]:
+    if name is None:
+        return ()
+    axes = tuple(rules.get(name, ()))
+    if mesh is not None:
+        axes = tuple(a for a in axes if a in mesh.shape)
+    return axes
+
+
+def logical_to_spec(logical: Sequence[str | None],
+                    rules: Mapping[str, Sequence[str]] | None = None,
+                    mesh: Mesh | None = None,
+                    shape: Sequence[int] | None = None) -> P:
+    """Logical axis tuple → PartitionSpec.
+
+    Rules: each mesh axis is used at most once (GSPMD requirement — first
+    logical dim claiming it wins); if ``shape`` is given, a dim that the
+    claimed axes don't divide evenly is replicated instead (uneven sharding
+    never silently produced).
+    """
+    rules = DEFAULT_RULES if rules is None else rules
+    used: set[str] = set()
+    entries: list[Any] = []
+    for d, name in enumerate(logical):
+        axes = tuple(a for a in _resolve(name, rules, mesh) if a not in used)
+        if axes and shape is not None and mesh is not None:
+            size = math.prod(mesh.shape[a] for a in axes)
+            if size == 0 or shape[d] % size != 0:
+                axes = ()
+        used.update(axes)
+        entries.append(None if not axes else
+                       (axes[0] if len(axes) == 1 else axes))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(logical_tree: Any, abstract_tree: Any, mesh: Mesh,
+                   rules: Mapping[str, Sequence[str]] | None = None) -> Any:
+    """Pytree of NamedShardings matching ``abstract_tree``'s structure.
+
+    ``logical_tree`` mirrors it with logical-axis tuples at the leaves
+    (scalars use ``()``). Leaves of the abstract tree drive traversal, so
+    the tuples — themselves pytrees — are consumed whole.
+    """
+    rules = DEFAULT_RULES if rules is None else rules
+
+    def one(ab, logical):
+        assert _is_logical(logical), f"bad logical axes {logical!r}"
+        spec = logical_to_spec(logical, rules, mesh, shape=ab.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, abstract_tree, logical_tree)
+
+
+def constrain(x: jax.Array, logical: Sequence[str | None],
+              mesh: Mesh | None, rules: Mapping[str, Sequence[str]] | None):
+    """``with_sharding_constraint`` by logical axes; no-op without a mesh
+    (single-device tests) so model code never branches."""
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical, rules or DEFAULT_RULES, mesh,
+                           shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

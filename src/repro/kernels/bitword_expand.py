@@ -10,7 +10,12 @@ word-parallel mask algebra over uint32 lanes:
 
 O(n/32) VPU ops per path, independent of Δ, fully branch-free — this is what
 replaces the paper's per-thread neighbor loop + O(t·logΔ) chord re-check.
-Cycle counting fuses a population_count reduction in the same kernel.
+
+The kernel is FUSED (DESIGN.md §6.4): the same pass that produces the mask
+words also reduces their ``population_count`` per row — both the cycle count
+(close words) and the extension count (ext words) — so the wave engine's
+counting step costs zero extra memory traffic: the words are still in VMEM
+when they are counted.
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ from jax.experimental import pallas as pl
 
 def _bitword_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
                     adj_ref, labelgt_ref,
-                    close_ref, ext_ref, ncyc_ref):
+                    close_ref, ext_ref, ncyc_ref, next_ref):
     path = path_ref[...]
     blocked = blocked_ref[...]
     v1 = v1_ref[...][:, 0]
@@ -39,9 +44,13 @@ def _bitword_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
 
     cand = adj_last & ~path & ~blocked & gt
     close = cand & adj_v1
+    ext = cand & ~adj_v1
     close_ref[...] = close
-    ext_ref[...] = cand & ~adj_v1
+    ext_ref[...] = ext
+    # fused popcount reductions — words are still register/VMEM-resident
     ncyc_ref[...] = jax.lax.population_count(close).astype(jnp.int32).sum(
+        axis=1, keepdims=True)
+    next_ref[...] = jax.lax.population_count(ext).astype(jnp.int32).sum(
         axis=1, keepdims=True)
 
 
@@ -49,7 +58,8 @@ def _bitword_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
 def bitword_expand_pallas(path, blocked, v1, l2, vlast, count,
                           adj_bits, labelgt_bits,
                           *, tile: int = 128, interpret: bool = True):
-    """Returns (close_words, ext_words, n_cycles_per_row) for live rows."""
+    """Returns (close_words, ext_words, n_cycles_per_row, n_ext_per_row)
+    for live rows (dead rows are zeroed)."""
     cap, nw = path.shape
     tp = min(tile, max(8, cap))
     pad = (-cap) % tp
@@ -58,7 +68,7 @@ def bitword_expand_pallas(path, blocked, v1, l2, vlast, count,
     capp = cap + pad
     whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
 
-    close, ext, ncyc = pl.pallas_call(
+    close, ext, ncyc, next_ = pl.pallas_call(
         _bitword_kernel,
         grid=(capp // tp,),
         in_specs=[
@@ -71,9 +81,11 @@ def bitword_expand_pallas(path, blocked, v1, l2, vlast, count,
         ],
         out_specs=[pl.BlockSpec((tp, nw), lambda i: (i, 0)),
                    pl.BlockSpec((tp, nw), lambda i: (i, 0)),
+                   pl.BlockSpec((tp, 1), lambda i: (i, 0)),
                    pl.BlockSpec((tp, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((capp, nw), jnp.uint32),
                    jax.ShapeDtypeStruct((capp, nw), jnp.uint32),
+                   jax.ShapeDtypeStruct((capp, 1), jnp.int32),
                    jax.ShapeDtypeStruct((capp, 1), jnp.int32)],
         interpret=interpret,
     )(padded(path), padded(blocked), col(v1), col(l2), col(vlast),
@@ -83,4 +95,5 @@ def bitword_expand_pallas(path, blocked, v1, l2, vlast, count,
     z = jnp.uint32(0)
     return (jnp.where(live, close[:cap], z),
             jnp.where(live, ext[:cap], z),
-            jnp.where(live, ncyc[:cap], 0)[:, 0])
+            jnp.where(live, ncyc[:cap], 0)[:, 0],
+            jnp.where(live, next_[:cap], 0)[:, 0])

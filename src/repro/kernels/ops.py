@@ -34,7 +34,26 @@ def triplet_flags(g: BitsetGraph, delta: int):
 
 def expand_words_bitword(g: BitsetGraph, f: Frontier):
     """Drop-in for core.expand.expand_words_bitword (TPU-native)."""
-    close, ext, _ = bitword_expand_pallas(
+    close, ext, _, _ = bitword_expand_pallas(
         f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
         g.adj_bits, g.labelgt_bits, interpret=INTERPRET)
     return close, ext
+
+
+@jax.jit
+def bitword_fused_counts(g: BitsetGraph, f: Frontier):
+    """Fused mask algebra + per-row popcounts in ONE kernel pass
+    (DESIGN.md §6.4). Returns (close_words, ext_words, n_cyc, n_new).
+    Jitted so the scalar .sum() reductions fuse into the same dispatch."""
+    close, ext, ncyc, next_ = bitword_expand_pallas(
+        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+        g.adj_bits, g.labelgt_bits, interpret=INTERPRET)
+    return close, ext, ncyc.sum(), next_.sum()
+
+
+@jax.jit
+def bitword_flags_count(g: BitsetGraph, f: Frontier):
+    """Drop-in for core.expand.bitword_flags_count, but the popcounts ride
+    the expansion kernel instead of a second HBM pass."""
+    _, ext, n_cyc, n_new = bitword_fused_counts(g, f)
+    return ext, n_cyc, n_new

@@ -82,7 +82,7 @@ def _with_layers(cfg, n: int):
 
 
 def _cost_triple(compiled, lowered):
-    ca = compiled.cost_analysis() or {}
+    ca = H.cost_analysis_dict(compiled)
     try:
         txt = compiled.as_text()
     except Exception:
@@ -154,7 +154,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, rules=None,
                                        microbatches=microbatches)
         ma = compiled.memory_analysis()
         if compile_only:   # multi-pod pass: prove lower+compile; costs on
-            ca = compiled.cost_analysis() or {}     # the single-pod table
+            ca = H.cost_analysis_dict(compiled)     # the single-pod table
             row = dict(name=f"{cfg.name}/{shape.name}", mesh=mesh_name,
                        compiled=True, compile_s=round(time.time() - t0, 1),
                        flops_per_dev_scanbody=float(ca.get("flops", 0)),

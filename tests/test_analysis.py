@@ -60,6 +60,7 @@ def test_scan_body_costed_once_motivation():
         return y.sum()
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
-    flops = jax.jit(f).lower(x, ws).compile().cost_analysis()["flops"]
+    from repro.analysis.hlo import cost_analysis_dict
+    flops = cost_analysis_dict(jax.jit(f).lower(x, ws).compile())["flops"]
     one_layer = 2 * 64 * 64 * 64
     assert flops < 2 * one_layer, "scan body costed once (expected)"

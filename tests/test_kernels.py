@@ -106,6 +106,23 @@ def test_property_kernels_match_ref(n, p, seed):
         assert np.array_equal(np.asarray(ext_k), np.asarray(ext_r))
 
 
+@pytest.mark.parametrize("name,graph", GRAPHS, ids=[g[0] for g in GRAPHS])
+def test_bitword_fused_counts_match_popcount(name, graph):
+    """The fused in-kernel popcounts must equal popcounting the emitted
+    words (one-pass mask algebra + reduction — DESIGN.md §6.4)."""
+    from repro.core.bitset_graph import popcount
+    n, edges = graph
+    g, f = _mk(n, edges)
+    if int(f.count) == 0:
+        pytest.skip("no triplets")
+    close_k, ext_k, n_cyc, n_new = ops.bitword_fused_counts(g, f)
+    close_r, ext_r = ref.expand_words_bitword_ref(g, f)
+    assert np.array_equal(np.asarray(close_k), np.asarray(close_r))
+    assert np.array_equal(np.asarray(ext_k), np.asarray(ext_r))
+    assert int(n_cyc) == int(popcount(jnp.asarray(close_r)).sum())
+    assert int(n_new) == int(popcount(jnp.asarray(ext_r)).sum())
+
+
 def test_kernel_dead_rows_masked():
     """Rows ≥ count must produce no flags (live-mask correctness)."""
     n, edges = grid_graph(3, 5)
