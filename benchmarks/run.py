@@ -1,6 +1,6 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--nightly]
 
 Sections:
   engine   — host vs fused wave engine A/B → results/BENCH_engine.json
@@ -11,7 +11,10 @@ Sections:
   roofline — the (arch × shape) dry-run roofline table (if results exist)
 
 ``--smoke`` runs only the CI-time subset: table1-style validation on the
-4×4 mesh plus the engine A/B JSON emission on the two smallest graphs.
+4×4 mesh, the warm-cache serving scenario (shared CycleService vs one-shot,
+→ results/BENCH_service_smoke.json), plus the engine A/B JSON emission on
+the two smallest graphs. ``--nightly`` runs the paper's footnote-scale
+Grid_7x10 count-only target via the wave engine.
 
 Output: ``name,us_per_call,derived`` CSV blocks + BENCH_engine.json.
 """
@@ -26,10 +29,18 @@ def main() -> None:
         from . import engine_bench
         print("== smoke (4x4 mesh) ==")
         engine_bench.smoke()
+        print("\n== warm-cache serving (shared CycleService vs one-shot) ==")
+        engine_bench.service_smoke()
         print("\n== engine A/B (smoke subset) ==")
         # separate file: must not clobber the tracked full-suite baseline
         engine_bench.main(["Grid_5x6", "K_8_8"],
                           out_name="BENCH_engine_smoke.json")
+        return
+
+    if "--nightly" in sys.argv:
+        from . import engine_bench
+        print("== nightly (paper footnote scale, wave engine) ==")
+        engine_bench.nightly()
         return
 
     print("== engine A/B ==")

@@ -1,30 +1,56 @@
-"""Quickstart: enumerate all chordless cycles of a graph.
+"""Quickstart: enumerate all chordless cycles through the session API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import build_graph, enumerate_chordless_cycles
-from repro.core.graphs import grid_graph
+import numpy as np
+
+from repro.core import (CycleService, EngineConfig, build_graph,
+                        enumerate_chordless_cycles)
+from repro.core.graphs import grid_graph, random_gnp
 
 # a 4×4 grid: every unit square is a chordless C4; longer induced cycles too
 n, edges = grid_graph(4, 4)
 g = build_graph(n, edges)
 
-result = enumerate_chordless_cycles(g)          # store=True → bitmaps
+# one service = one session: programs compile once, every later same-shaped
+# request executes warm (the plan/execute split).
+service = CycleService(EngineConfig(store=True))
+
+result = service.enumerate(g)
 print(f"graph: {n} vertices, {len(edges)} edges, Δ={g.max_degree}")
 print(f"chordless cycles: {result.n_cycles} "
       f"({result.n_triangles} triangles), found in "
       f"{result.iterations} expansion rounds")
-
 for i, cyc in enumerate(result.cycles_as_sets(n)[:5]):
     print(f"  cycle {i}: vertices {sorted(cyc)}")
 print("  ...")
 
+# warm path: a second same-shaped graph reuses the compiled programs
+service.enumerate(build_graph(n, edges))
+s = service.stats
+print(f"program cache: {s['programs']} programs, {s['cache_hits']} hits / "
+      f"{s['cache_misses']} misses, {s['n_traces']} traces")
+
+# batched multi-graph enumeration: mixed-size tenants, ONE vmapped program
+tenants = [build_graph(*grid_graph(3, 4)),
+           build_graph(*random_gnp(12, 0.3, 7)),
+           build_graph(*grid_graph(4, 5))]
+for i, r in enumerate(service.enumerate_batch(tenants)):
+    print(f"tenant {i}: {r.n_cycles} chordless cycles")
+
+# streaming: cycle-mask chunks arrive as the device buffer drains; the
+# chunks concatenate bit-identically to result.cycle_masks
+chunks = list(service.stream(g))
+assert np.array_equal(np.concatenate(chunks, axis=0), result.cycle_masks)
+print(f"streamed {sum(len(c) for c in chunks)} masks "
+      f"in {len(chunks)} chunks")
+
 # count-only mode (the paper's footnote-a mode for Grid 8×10)
-count_only = enumerate_chordless_cycles(g, store=False)
+count_only = service.enumerate(g, config=EngineConfig(store=False))
 assert count_only.n_cycles == result.n_cycles
 
-# TPU-native bitword formulation + Pallas kernel backend give identical sets
-pallas = enumerate_chordless_cycles(g, backend="pallas")
-bitword = enumerate_chordless_cycles(g, formulation="bitword")
-assert pallas.n_cycles == bitword.n_cycles == result.n_cycles
-print("slot / bitword / pallas backends agree ✓")
+# the one-shot compat wrapper still works — it executes against a shared
+# module-level default service, so repeated calls stay warm too
+compat = enumerate_chordless_cycles(g, formulation="bitword")
+assert compat.n_cycles == result.n_cycles
+print("session API / compat wrapper / count-only all agree ✓")

@@ -1,13 +1,22 @@
-"""Core: the paper's chordless-cycle enumeration engine (see DESIGN.md)."""
+"""Core: the paper's chordless-cycle enumeration engine (see DESIGN.md).
+
+Primary surface: the ``CycleService`` session API (plan/execute split,
+cross-graph program cache, batched multi-graph enumeration, streaming).
+``enumerate_chordless_cycles`` remains as a thin one-shot compat wrapper
+over the module-level default service.
+"""
 from .bitset_graph import (BitsetGraph, build_graph, degree_labeling_np,
                            degree_labeling_parallel, pack_bits, unpack_bits)
-from .engine import EnumerationResult, enumerate_chordless_cycles
+from .engine import (EngineConfig, EnumerationResult,
+                     enumerate_chordless_cycles)
 from .frontier import Frontier, empty_frontier
 from .ref_sequential import sequential_chordless_cycles
+from .service import CycleService, default_service, reset_default_service
 
 __all__ = [
     "BitsetGraph", "build_graph", "degree_labeling_np",
     "degree_labeling_parallel", "pack_bits", "unpack_bits",
-    "EnumerationResult", "enumerate_chordless_cycles",
+    "EngineConfig", "EnumerationResult", "enumerate_chordless_cycles",
     "Frontier", "empty_frontier", "sequential_chordless_cycles",
+    "CycleService", "default_service", "reset_default_service",
 ]

@@ -32,6 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .bitset_graph import BitsetGraph
+from .engine import EngineConfig
 from .frontier import Frontier
 from . import expand as E
 from . import triplets as T
@@ -39,11 +40,42 @@ from . import triplets as T
 
 @dataclasses.dataclass
 class DistEnumConfig:
+    """DEPRECATED compat shim — these knobs folded into ``EngineConfig``
+    (set ``EngineConfig(mesh=..., axis=..., store=False)`` and go through
+    ``CycleService``). Still accepted by ``enumerate_distributed``."""
     local_capacity: int = 1 << 14     # frontier rows per device
     balance_block: int = 256          # diffusion donation block (rows)
     balance_every: int = 1            # rounds between balance steps
     checkpoint_every: int = 0         # 0 = off
     checkpoint_dir: str = "/tmp/repro_enum_ckpt"
+
+
+def as_engine_config(mesh: Mesh, axis: str,
+                     cfg: "EngineConfig | DistEnumConfig | None",
+                     max_iters: int | None = None) -> EngineConfig:
+    """Normalize any legacy config to a mesh-routed ``EngineConfig``."""
+    if isinstance(cfg, EngineConfig):
+        if cfg.mesh is not None and (cfg.mesh is not mesh
+                                     or cfg.axis != axis):
+            raise ValueError(
+                "conflicting meshes: cfg already carries "
+                f"mesh/axis={cfg.axis!r} but enumerate_distributed was "
+                f"called with a different mesh/axis={axis!r}; pass one or "
+                "the other")
+        out = cfg if cfg.mesh is not None else dataclasses.replace(
+            cfg, mesh=mesh, axis=axis)
+    else:
+        kw = {}
+        if cfg is not None:  # DistEnumConfig
+            kw = dict(local_capacity=cfg.local_capacity,
+                      balance_block=cfg.balance_block,
+                      balance_every=cfg.balance_every,
+                      checkpoint_every=cfg.checkpoint_every,
+                      checkpoint_dir=cfg.checkpoint_dir)
+        out = EngineConfig(store=False, mesh=mesh, axis=axis, **kw)
+    if max_iters is not None:
+        out = dataclasses.replace(out, max_iters=max_iters)
+    return out
 
 
 def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int):
@@ -93,9 +125,10 @@ def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str,
     return f2, lost
 
 
-def make_dist_step(mesh: Mesh, axis: str, g_spec, cfg: DistEnumConfig,
-                   delta: int):
-    """Build the jitted per-round shard_map step."""
+def make_dist_step(mesh: Mesh, axis: str, g_spec, cfg, delta: int):
+    """Build the jitted per-round shard_map step (``cfg`` may be an
+    ``EngineConfig`` or the legacy ``DistEnumConfig`` — only
+    ``local_capacity``/``balance_block`` are read)."""
     cap = cfg.local_capacity
     block = cfg.balance_block
     axis_size = int(mesh.shape[axis])  # static (lax.axis_size: newer jax)
@@ -131,14 +164,16 @@ def make_dist_step(mesh: Mesh, axis: str, g_spec, cfg: DistEnumConfig,
     return jax.jit(step)
 
 
-def enumerate_distributed(g: BitsetGraph, mesh: Mesh, axis: str = "data",
-                          cfg: DistEnumConfig | None = None,
-                          max_iters: int | None = None):
-    """Count all chordless cycles using every device on ``axis``.
+def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None):
+    """Count all chordless cycles using every device on ``cfg.axis`` of
+    ``cfg.mesh`` (the CycleService sharded path; cfg validated eagerly to
+    slot/jnp/count-only at construction).
 
     Returns dict(n_cycles, n_triangles, iterations, dropped, per_device_live).
-    """
-    cfg = cfg or DistEnumConfig()
+    ``cache`` (a core.plan.ProgramCache) memoizes the jitted shard_map step
+    across requests on the same mesh/shape."""
+    mesh, axis = cfg.mesh, cfg.axis
+    max_iters = cfg.max_iters
     ndev = mesh.shape[axis]
     cap = cfg.local_capacity
     delta = max(g.max_degree, 1)
@@ -174,7 +209,16 @@ def enumerate_distributed(g: BitsetGraph, mesh: Mesh, axis: str = "data",
     counters = jnp.zeros((ndev, 3), jnp.int32)
 
     g_spec = jax.tree_util.tree_map(lambda _: P(), g)
-    step = make_dist_step(mesh, axis, g_spec, cfg, delta)
+    if cache is not None:
+        from .plan import PlanKey
+        key = PlanKey(kind="dist", bucket=cap, nw=nw, cyc_rows=0,
+                      delta=delta, store=False, formulation="slot",
+                      backend="jnp", k_max=0, batch=int(ndev),
+                      extra=(mesh, axis, cfg.balance_block, g.n, g.m))
+        step = cache.get_or_build(
+            key, lambda: make_dist_step(mesh, axis, g_spec, cfg, delta))
+    else:
+        step = make_dist_step(mesh, axis, g_spec, cfg, delta)
 
     sh = jax.sharding.NamedSharding(mesh, P(axis))
     rep = jax.sharding.NamedSharding(mesh, P())
@@ -205,3 +249,18 @@ def enumerate_distributed(g: BitsetGraph, mesh: Mesh, axis: str = "data",
     return dict(n_cycles=int(c[:, 0].sum()) + n_tri, n_triangles=n_tri,
                 iterations=it, dropped=int(c[:, 1].sum()),
                 per_device_live=c[:, 2].tolist())
+
+
+def enumerate_distributed(g: BitsetGraph, mesh: Mesh, axis: str = "data",
+                          cfg: "DistEnumConfig | EngineConfig | None" = None,
+                          max_iters: int | None = None):
+    """Compat wrapper: count all chordless cycles using every device on
+    ``axis``. Routes through the default ``CycleService`` (so the jitted
+    shard_map step is cached across calls on the same mesh).
+
+    Returns dict(n_cycles, n_triangles, iterations, dropped, per_device_live).
+    """
+    from .service import default_service
+    ecfg = as_engine_config(mesh, axis, cfg, max_iters)
+    res = default_service().enumerate(g, config=ecfg)
+    return dict(res.stats)

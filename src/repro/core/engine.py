@@ -22,12 +22,18 @@ Modes:
   * store=False — count-only (the paper's Grid 8×10 footnote mode).
 Backends: 'jnp' (pure JAX) or 'pallas' (kernels/; interpret=True on CPU).
 Formulations: 'slot' (paper-faithful) or 'bitword' (TPU-native).
+
+Layering (DESIGN.md §"Service layer"): this module holds the device
+ALGORITHM (``wave_superstep``, the legacy host loop) and ``EngineConfig``;
+``core.plan`` owns compilation (jit + donation + the cross-graph program
+cache + batch vmap); ``core.service`` owns the host driver loop and the
+public session API (``CycleService``). ``enumerate_chordless_cycles`` is a
+compat wrapper over the module-level default service.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Callable
 
 import numpy as np
@@ -37,8 +43,7 @@ import jax.numpy as jnp
 from .bitset_graph import BitsetGraph
 from . import expand as E
 from . import triplets as T
-from .frontier import (CycleBuffer, Frontier, empty_cycle_buffer,
-                       with_capacity)
+from .frontier import CycleBuffer, Frontier
 
 
 def _bucket(c: int, *, growth_bits: int = 1) -> int:
@@ -51,15 +56,26 @@ def _bucket(c: int, *, growth_bits: int = 1) -> int:
     return 1 << (-(-bits // growth_bits) * growth_bits)
 
 
+FORMULATIONS = ("slot", "bitword")
+BACKENDS = ("jnp", "pallas")
+ENGINES = ("wave", "host")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """All engine knobs in one place (backend × formulation × bucketing).
+    """All engine knobs in one place (backend × formulation × bucketing),
+    including the sharded-path knobs that used to live in ``DistEnumConfig``
+    (set ``mesh``/``axis`` to route enumeration through shard_map).
 
     ``superstep_rounds`` (K) bounds rounds per wave dispatch — it is the
     history-buffer length, NOT a correctness bound: the loop exits early on
     any bucket transition and the host relaunches. ``cycle_buffer_rows``
     sizes the device-resident cycle ring; a single round producing more
-    cycles than the whole buffer triggers a host-side buffer regrow."""
+    cycles than the whole buffer triggers a host-side buffer regrow.
+
+    Validation is EAGER: unknown ``formulation``/``backend``/``engine`` and
+    cross-field mismatches raise ``ValueError`` here, at construction, with
+    the allowed values listed — not deep inside tracing."""
     store: bool = True
     formulation: str = "slot"      # 'slot' | 'bitword'
     backend: str = "jnp"           # 'jnp' | 'pallas'
@@ -73,6 +89,55 @@ class EngineConfig:
     # aborted GROW round re-runs its expand at the new bucket, so headroom
     # trades dead-row work for fewer wasted peak-size rounds
     max_iters: int | None = None
+    donate: bool = True            # donate superstep frontier/CycleBuffer
+    # buffers to the jitted program (no-copy in-place aliasing; halves peak
+    # device memory for the two big (cap, nw) operands)
+
+    # --- sharded path (formerly DistEnumConfig; DESIGN.md §5) -------------
+    mesh: object | None = None     # jax.sharding.Mesh — non-None selects
+    axis: str = "data"             # the shard_map path in core/distributed
+    local_capacity: int = 1 << 14  # frontier rows per device
+    balance_block: int = 256       # diffusion donation block (rows)
+    balance_every: int = 1         # rounds between balance steps
+    checkpoint_every: int = 0      # 0 = off
+    checkpoint_dir: str = "/tmp/repro_enum_ckpt"
+
+    def __post_init__(self):
+        if self.formulation not in FORMULATIONS:
+            raise ValueError(
+                f"unknown formulation {self.formulation!r}; allowed: "
+                f"{FORMULATIONS}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; allowed: {BACKENDS}")
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; allowed: {ENGINES}")
+        for field in ("growth_bits", "superstep_rounds", "cycle_buffer_rows",
+                      "local_capacity", "balance_block", "balance_every"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be >= 1, got "
+                                 f"{getattr(self, field)}")
+        if self.grow_headroom < 0:
+            raise ValueError(
+                f"grow_headroom must be >= 0, got {self.grow_headroom}")
+        if self.mesh is not None:
+            # the shard_map path is slot/jnp/count-only (DESIGN.md §5);
+            # anything else would fail deep inside shard_map tracing.
+            bad = []
+            if self.formulation != "slot":
+                bad.append(f"formulation={self.formulation!r} (allowed: "
+                           f"'slot')")
+            if self.backend != "jnp":
+                bad.append(f"backend={self.backend!r} (allowed: 'jnp')")
+            if self.store:
+                bad.append("store=True (allowed: False — counting is the "
+                           "scalable output)")
+            if bad:
+                raise ValueError(
+                    "mesh-sharded enumeration only supports the "
+                    "slot/jnp/count-only combination; got "
+                    + "; ".join(bad))
 
     def bucket(self, c: int) -> int:
         return _bucket(c, growth_bits=self.growth_bits)
@@ -102,13 +167,14 @@ class EnumerationResult:
 _RUN, _DONE, _GROW, _DRAIN, _SHRINK = 0, 1, 2, 3, 4
 
 
-@partial(jax.jit,
-         static_argnames=("delta", "store", "formulation", "backend",
-                          "k_max"))
-def _wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
-                    rounds_limit: jnp.ndarray, *, delta: int, store: bool,
-                    formulation: str, backend: str, k_max: int):
+def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
+                   rounds_limit: jnp.ndarray, *, delta: int, store: bool,
+                   formulation: str, backend: str, k_max: int):
     """Run up to min(k_max, rounds_limit) fused rounds fully on device.
+
+    UNJITTED device algorithm — compilation (jit + buffer donation + the
+    cross-graph program cache + vmap over a graph batch axis) is owned by
+    ``core.plan``; execution (the host driver loop) by ``core.service``.
 
     Returns (f', buf', rounds_done, status, t_hist, c_hist, pending_new,
     pending_cyc). ``pending_*`` carry the aborted round's exact sizes so the
@@ -154,104 +220,6 @@ def _wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
 def _new_stats() -> dict:
     return dict(n_dispatches=0, n_host_syncs=0, n_bucket_transitions=0,
                 n_drains=0)
-
-
-def _enumerate_wave(g: BitsetGraph, cfg: EngineConfig,
-                    progress: Callable[[dict], None] | None
-                    ) -> EnumerationResult:
-    if cfg.backend == "pallas":
-        from ..kernels import ops as kops
-        trip_flags = kops.triplet_flags
-    else:
-        trip_flags = T.triplet_flags
-
-    delta = max(g.max_degree, 1)
-    nw = g.adj_bits.shape[1]
-    frontier, tri_masks, n_tri = T.initial_frontier(
-        g, bucket=cfg.bucket, flags_fn=trip_flags)
-
-    stats = _new_stats()
-    cycles: list[np.ndarray] = [tri_masks] if cfg.store else []
-    n_cycles = n_tri
-    cnt = int(frontier.count)
-    stats["n_host_syncs"] += 1
-    history = [dict(step=0, T=cnt, C=n_tri)]
-    limit = cfg.max_iters if cfg.max_iters is not None else max(g.n - 3, 0)
-
-    cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
-    buf = empty_cycle_buffer(cyc_cap, nw)
-
-    it = 0
-    relaunches = 0
-    while it < limit and cnt > 0:
-        relaunches += 1
-        if relaunches > 4 * limit + 16:
-            raise RuntimeError("wave engine: no progress across relaunches")
-        k = min(cfg.superstep_rounds, limit - it)
-        frontier, buf, r, status, th, ch, pn, pc = _wave_superstep(
-            g, frontier, buf, jnp.int32(k), delta=delta, store=cfg.store,
-            formulation=cfg.formulation, backend=cfg.backend,
-            k_max=cfg.superstep_rounds)
-        stats["n_dispatches"] += 1
-        status_h, r_h, th_h, ch_h, pn_h, pc_h, cnt_h, bc_h = jax.device_get(
-            (status, r, th, ch, pn, pc, frontier.count, buf.count))
-        stats["n_host_syncs"] += 1
-
-        for i in range(int(r_h)):
-            n_cycles += int(ch_h[i])
-            rec = dict(step=it + i + 1, T=int(th_h[i]), C=n_cycles)
-            history.append(rec)
-            if progress:
-                progress(rec)
-        it += int(r_h)
-        cnt = int(cnt_h)
-        status_h = int(status_h)
-
-        if status_h == _DRAIN:
-            # cycle buffer full: drain to host, regrow if one round alone
-            # exceeds the current buffer.
-            if int(bc_h):
-                cycles.append(np.asarray(buf.masks[:int(bc_h)]))
-                stats["n_host_syncs"] += 1
-                stats["n_drains"] += 1
-            cyc_cap = max(cyc_cap, cfg.bucket(max(int(pc_h), 1)))
-            buf = empty_cycle_buffer(cyc_cap, nw)
-        elif status_h == _GROW:
-            # re-bucket the headroom'd size so the shape stays inside the
-            # growth_bits bucket family (off-family shapes would churn
-            # recompiles against the SHRINK path).
-            new_cap = cfg.bucket(
-                cfg.bucket(max(int(pn_h), 1)) << max(cfg.grow_headroom, 0))
-            frontier = with_capacity(frontier, new_cap)
-            stats["n_bucket_transitions"] += 1
-        elif status_h in (_RUN, _SHRINK) and cnt > 0:
-            # round budget exhausted / wave decayed below the bucket: shrink
-            # as the wave dies down (bounds dead-row work, like the host
-            # loop does every round).
-            new_cap = cfg.bucket(max(cnt, 1))
-            if new_cap < frontier.capacity:
-                frontier = with_capacity(frontier, new_cap)
-                stats["n_bucket_transitions"] += 1
-        elif status_h == _DONE:
-            break
-
-    if cfg.store:
-        bc = int(jax.device_get(buf.count))
-        if bc:
-            cycles.append(np.asarray(buf.masks[:bc]))
-            stats["n_drains"] += 1
-        stats["n_host_syncs"] += 1
-
-    cycle_masks = None
-    if cfg.store:
-        cycle_masks = (np.concatenate(cycles, axis=0) if cycles
-                       else np.zeros((0, nw), np.uint32))
-    stats["rounds"] = it
-    stats["rounds_per_dispatch"] = it / max(stats["n_dispatches"], 1)
-    stats["syncs_per_round"] = stats["n_host_syncs"] / max(it, 1)
-    return EnumerationResult(
-        n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=cycle_masks,
-        iterations=it, history=history, stats=stats)
 
 
 # ---------------------------------------------------------------------------
@@ -384,12 +352,12 @@ def enumerate_chordless_cycles(
 ) -> EnumerationResult:
     """Enumerate (or count) all chordless cycles of ``g``.
 
-    ``config`` overrides the individual keyword knobs when given."""
+    Thin compat wrapper over the module-level default ``CycleService``
+    (core/service.py) — the session API is the primary surface; this keeps
+    one-shot calls working AND warm (they share the default service's
+    program cache). ``config`` overrides the individual keyword knobs."""
+    from .service import default_service
     cfg = config if config is not None else EngineConfig(
         store=store, formulation=formulation, backend=backend, engine=engine,
         max_iters=max_iters)
-    if cfg.engine == "host":
-        return _enumerate_host(g, cfg, progress)
-    if cfg.engine != "wave":
-        raise ValueError(f"unknown engine {cfg.engine!r}")
-    return _enumerate_wave(g, cfg, progress)
+    return default_service().enumerate(g, config=cfg, progress=progress)

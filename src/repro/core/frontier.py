@@ -85,6 +85,36 @@ def with_capacity(f: Frontier, capacity: int) -> Frontier:
     )
 
 
+def stack_frontiers(fs) -> Frontier:
+    """Stack same-capacity frontiers on a new leading batch axis (the
+    multi-graph batch path: leaves become (B, cap, nw) / (B, cap) / (B,))."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *fs)
+
+
+def with_capacity_batched(f: Frontier, capacity: int) -> Frontier:
+    """Batched ``with_capacity``: re-bucket every lane of a stacked frontier
+    (leaves (B, cap, nw) / (B, cap); count stays (B,))."""
+    cap0 = f.path.shape[1]
+    if capacity == cap0:
+        return f
+    if capacity > cap0:
+        pad = capacity - cap0
+        return Frontier(
+            path=jnp.pad(f.path, ((0, 0), (0, pad), (0, 0))),
+            blocked=jnp.pad(f.blocked, ((0, 0), (0, pad), (0, 0))),
+            v1=jnp.pad(f.v1, ((0, 0), (0, pad)), constant_values=-1),
+            l2=jnp.pad(f.l2, ((0, 0), (0, pad))),
+            vlast=jnp.pad(f.vlast, ((0, 0), (0, pad))),
+            count=f.count,
+        )
+    return Frontier(
+        path=f.path[:, :capacity], blocked=f.blocked[:, :capacity],
+        v1=f.v1[:, :capacity], l2=f.l2[:, :capacity],
+        vlast=f.vlast[:, :capacity],
+        count=jnp.minimum(f.count, capacity).astype(jnp.int32),
+    )
+
+
 def scatter_frontier(dest: jnp.ndarray, path_rows: jnp.ndarray,
                      blocked_rows: jnp.ndarray, v1: jnp.ndarray,
                      l2: jnp.ndarray, vlast: jnp.ndarray,
@@ -142,7 +172,15 @@ class CycleBuffer:
         return self.masks.shape[1]
 
 
-def empty_cycle_buffer(capacity: int, n_words: int) -> CycleBuffer:
+def empty_cycle_buffer(capacity: int, n_words: int,
+                       batch: int = 0) -> CycleBuffer:
+    """Fresh cycle ring. ``batch=B`` builds the stacked multi-graph variant:
+    masks (B, cap, nw), count (B,)."""
+    if batch:
+        return CycleBuffer(
+            masks=jnp.zeros((batch, max(capacity, 1), n_words), jnp.uint32),
+            count=jnp.zeros((batch,), jnp.int32),
+        )
     return CycleBuffer(
         masks=jnp.zeros((max(capacity, 1), n_words), jnp.uint32),
         count=jnp.zeros((), jnp.int32),

@@ -1,0 +1,189 @@
+"""Plan layer — the *compile* half of the plan/execute split (DESIGN.md
+§"Service layer").
+
+The paper amortizes ONE kernel build over |V|−3 expansion launches; the JAX
+analogue is amortizing one trace+compile of the wave superstep over every
+same-shaped request a service ever sees. This module owns that amortization:
+
+* ``PlanKey``    — the cache key: (bucket, nw, cycle-ring rows, Δ, store,
+                   formulation, backend, K, batch). One key ↔ one shape ↔
+                   exactly one trace.
+* ``WavePlan``   — a compiled superstep: ``jax.jit`` with the frontier and
+                   CycleBuffer arguments DONATED (``donate_argnums=(1, 2)``)
+                   so the two big (cap, nw) operands are updated in place —
+                   ~2× lower peak device memory than copy-out. A Python-side
+                   ``n_traces`` counter increments only while tracing, so a
+                   warm cache is *observable*: repeated same-bucket calls
+                   must leave it untouched.
+* ``ProgramCache`` — the per-service dict of plans with hit/miss counters
+                   (``CycleService.stats``). Distinct services deliberately
+                   do NOT share plans: a fresh service models the old
+                   rebuild-per-call world and is what the serving benchmark
+                   measures against.
+* ``pad_graph`` / ``batch_graphs`` — the batch padding rules: graphs are
+                   padded to the batch maxima (n→n_pad, m→m_pad, Δ→Δ_pad,
+                   labels extended bijectively, padding vertices isolated)
+                   so a whole batch is ONE stacked pytree the superstep can
+                   be vmapped over.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bitset_graph import BitsetGraph, n_words_for, pack_bits
+from . import engine as _engine
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Identity of one compiled program. ``batch=0`` means unbatched;
+    ``batch=B`` is the vmapped multi-graph superstep. ``extra`` carries
+    kind-specific statics (e.g. the dist step's mesh/axis)."""
+    kind: str                # 'wave' | 'dist'
+    bucket: int              # frontier capacity (rows)
+    nw: int                  # mask words per row
+    cyc_rows: int            # CycleBuffer capacity (1 in count-only mode)
+    delta: int               # max degree Δ (static in the slot formulation)
+    store: bool
+    formulation: str
+    backend: str
+    k_max: int               # superstep round budget K
+    batch: int = 0
+    donate: bool = True      # buffer-donation is part of program identity
+    extra: tuple = ()
+
+
+class WavePlan:
+    """One compiled wave superstep (plan half of plan/execute).
+
+    Calling the plan executes it; ``n_traces`` counts how many times jax
+    actually (re)traced the wrapped function — the zero-retrace assertion
+    of the warm path. ``lower(*args)`` exposes the jit lowering so tests
+    can assert the donation aliasing made it into the program
+    (an ``XLA_FLAGS=--log-donation``-style check without log scraping).
+    """
+
+    def __init__(self, key: PlanKey, *, donate: bool | None = None):
+        donate = key.donate if donate is None else donate
+        self.key = key
+        self.n_traces = 0
+        self.n_calls = 0
+        self.donated = donate
+
+        statics = dict(delta=key.delta, store=key.store,
+                       formulation=key.formulation, backend=key.backend,
+                       k_max=key.k_max)
+
+        def _traced(g, f, buf, rounds_limit):
+            # runs once per TRACE (not per call): the retrace observer
+            self.n_traces += 1
+            return _engine.wave_superstep(g, f, buf, rounds_limit, **statics)
+
+        fn = _traced
+        if key.batch:
+            # one graph per lane; rounds_limit is per-lane (each graph has
+            # its own |V|−3 budget). jax masks lanes whose while-cond ended.
+            fn = jax.vmap(_traced, in_axes=(0, 0, 0, 0))
+        self.fn = jax.jit(fn, donate_argnums=(1, 2) if donate else ())
+
+    def __call__(self, g, f, buf, rounds_limit):
+        self.n_calls += 1
+        return self.fn(g, f, buf, rounds_limit)
+
+    def lower(self, g, f, buf, rounds_limit):
+        return self.fn.lower(g, f, buf, rounds_limit)
+
+
+class ProgramCache:
+    """Keyed store of compiled plans with hit/miss accounting."""
+
+    def __init__(self):
+        self._plans: dict[PlanKey, object] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key: PlanKey, builder):
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan
+        self.misses += 1
+        plan = builder()
+        self._plans[key] = plan
+        return plan
+
+    def __len__(self):
+        return len(self._plans)
+
+    def __contains__(self, key):
+        return key in self._plans
+
+    @property
+    def n_traces(self) -> int:
+        return sum(getattr(p, "n_traces", 0) for p in self._plans.values())
+
+    def stats(self) -> dict:
+        return dict(programs=len(self._plans), cache_hits=self.hits,
+                    cache_misses=self.misses, n_traces=self.n_traces)
+
+
+# ---------------------------------------------------------------------------
+# Batch padding rules (DESIGN.md §"Service layer")
+# ---------------------------------------------------------------------------
+
+def pad_graph(g: BitsetGraph, n_pad: int, m_pad: int,
+              delta_pad: int) -> BitsetGraph:
+    """Pad a graph to shared static shapes so a batch stacks into one pytree.
+
+    Rules: padding vertices are isolated (degree 0, no adjacency bits) and
+    take the top labels n..n_pad−1 — the labeling stays a bijection and
+    every real vertex keeps its label, so expansion order (and therefore
+    every count and mask) is unchanged. ``labelgt_bits`` is recomputed from
+    the extended labels; CSR arrays are length-padded (never dereferenced
+    for padding vertices: their degree masks every slot)."""
+    n, nw_old = g.n, g.adj_bits.shape[1]
+    if n_pad < n or m_pad < g.m or delta_pad < g.max_degree:
+        raise ValueError(f"pad target ({n_pad}, {m_pad}, {delta_pad}) below "
+                         f"graph shape ({n}, {g.m}, {g.max_degree})")
+    nw = n_words_for(n_pad)
+
+    offs = np.asarray(g.offsets)
+    offsets = np.concatenate(
+        [offs, np.full(n_pad - n, offs[-1], np.int32)]).astype(np.int32)
+    nbr = np.asarray(g.neighbors)
+    neighbors = np.concatenate(
+        [nbr, np.zeros(2 * m_pad - len(nbr), np.int32)]).astype(np.int32)
+    labels = np.concatenate(
+        [np.asarray(g.labels), np.arange(n, n_pad, dtype=np.int32)])
+    degrees = np.concatenate(
+        [np.asarray(g.degrees), np.zeros(n_pad - n, np.int32)])
+
+    adj = np.zeros((n_pad, nw), np.uint32)
+    adj[:n, :nw_old] = np.asarray(g.adj_bits)
+    gt = labels[None, :] > np.arange(n_pad)[:, None]
+    labelgt = pack_bits(gt.astype(np.uint8))
+
+    return BitsetGraph(
+        offsets=jnp.asarray(offsets), neighbors=jnp.asarray(neighbors),
+        labels=jnp.asarray(labels), adj_bits=jnp.asarray(adj),
+        labelgt_bits=jnp.asarray(labelgt), degrees=jnp.asarray(degrees),
+        n=n_pad, m=m_pad, max_degree=delta_pad)
+
+
+def batch_shape(graphs) -> tuple[int, int, int]:
+    """Shared (n_pad, m_pad, delta_pad) for a batch of graphs."""
+    n_pad = max(g.n for g in graphs)
+    m_pad = max(max(g.m, 1) for g in graphs)
+    delta_pad = max(max(g.max_degree, 1) for g in graphs)
+    return n_pad, m_pad, delta_pad
+
+
+def batch_graphs(graphs) -> BitsetGraph:
+    """Pad every graph to the batch maxima and stack leaves on axis 0."""
+    n_pad, m_pad, delta_pad = batch_shape(graphs)
+    padded = [pad_graph(g, n_pad, m_pad, delta_pad) for g in graphs]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)

@@ -1,0 +1,459 @@
+"""CycleService — the *execute* half of the plan/execute split.
+
+Public session API (DESIGN.md §"Service layer"). One service owns one
+``ProgramCache`` of compiled wave supersteps; every request — single graph,
+graph batch, or stream — is a cheap *execute* against that cache:
+
+* ``service.enumerate(g)``        — one-shot semantics of the old
+  ``enumerate_chordless_cycles``, but warm: same-bucket graphs reuse the
+  compiled program (cache-hit counters on ``service.stats``).
+* ``service.enumerate_batch(gs)`` — multi-tenant workload: graphs are padded
+  to shared shapes (core/plan.py padding rules), stacked, and the superstep
+  is vmapped over the batch axis; ONE device program advances every tenant.
+* ``service.stream(g)``           — generator yielding cycle-mask chunks as
+  the device CycleBuffer drains, instead of materializing everything at the
+  end; chunks concatenate bit-identically to ``EnumerationResult.cycle_masks``.
+* ``service.plan(g)``             — explicit plan step: compile (or fetch)
+  the program the first superstep of ``g`` will use, without enumerating.
+
+``cfg.mesh`` non-None routes the request through the shard_map path in
+``core/distributed.py`` (the former ``DistEnumConfig`` knobs now live on
+``EngineConfig``); ``cfg.engine == 'host'`` routes to the legacy per-round
+A/B engine. ``enumerate_chordless_cycles`` is a thin wrapper over the
+module-level ``default_service()``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bitset_graph import BitsetGraph
+from . import triplets as T
+from .engine import (EngineConfig, EnumerationResult, _DONE, _DRAIN, _GROW,
+                     _RUN, _SHRINK, _enumerate_host, _new_stats)
+from .frontier import (empty_cycle_buffer, empty_frontier, stack_frontiers,
+                       with_capacity, with_capacity_batched)
+from .plan import PlanKey, ProgramCache, WavePlan, batch_graphs, batch_shape
+
+
+class CycleService:
+    """A session: build jitted wave programs once, execute them per request.
+
+    The paper builds its kernel once and relaunches it |V|−3 times; a
+    service extends that amortization ACROSS graphs — every graph whose
+    shapes match an already-seen program (same (n, m, Δ) graph shape AND
+    same (bucket, nw, mode) frontier shape) executes it with zero
+    retraces. Different-sized graphs compile their own programs (jit
+    shapes are static); the win is for same-shaped tenant traffic.
+    """
+
+    def __init__(self, config: EngineConfig | None = None):
+        self.cfg = config if config is not None else EngineConfig()
+        self._cache = ProgramCache()
+        self._counters = dict(requests=0, graphs=0, batches=0, streams=0)
+
+    # -- stats ------------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        """Program-cache hit/miss/trace counters + request accounting."""
+        out = self._cache.stats()
+        out.update(self._counters)
+        return out
+
+    # -- plan (compile) ---------------------------------------------------
+
+    def _wave_plan(self, g_n: int, g_m: int, cap: int, cyc_cap: int, nw: int,
+                   delta: int, cfg: EngineConfig, batch: int = 0) -> WavePlan:
+        key = PlanKey(kind="wave", bucket=cap, nw=nw, cyc_rows=cyc_cap,
+                      delta=delta, store=cfg.store,
+                      formulation=cfg.formulation, backend=cfg.backend,
+                      k_max=cfg.superstep_rounds, batch=batch,
+                      donate=cfg.donate, extra=(g_n, g_m))
+        return self._cache.get_or_build(key, lambda: WavePlan(key))
+
+    def plan(self, g: BitsetGraph, *, config: EngineConfig | None = None
+             ) -> WavePlan:
+        """Compile (or fetch) the program ``g``'s first superstep will use.
+
+        Runs stage 1 to learn the initial bucket, then executes the plan
+        once on an empty dummy frontier (count 0 → the device loop exits
+        immediately) so trace + compile happen NOW, not on the first
+        request. Later buckets of the wave compile lazily as reached."""
+        cfg = config if config is not None else self.cfg
+        if cfg.mesh is not None or cfg.engine != "wave":
+            # neither path executes a wave superstep: the sharded step is
+            # built (and cached) on first enumerate; the host engine has
+            # no single compiled program to plan.
+            raise ValueError(
+                "plan() supports the single-device wave path only "
+                "(mesh=None, engine='wave'); the sharded step compiles on "
+                "first enumerate, the host engine has no plan")
+        nw = g.adj_bits.shape[1]
+        delta = max(g.max_degree, 1)
+        frontier, _, _ = T.initial_frontier(
+            g, bucket=cfg.bucket, flags_fn=self._trip_flags(cfg))
+        cap = frontier.capacity
+        cyc_cap = (cfg.bucket(max(cfg.cycle_buffer_rows, 16))
+                   if cfg.store else 1)
+        plan = self._wave_plan(g.n, g.m, cap, cyc_cap, nw, delta, cfg)
+        # dummy execute — donation consumes the dummies, nothing else does
+        plan(g, empty_frontier(cap, nw), empty_cycle_buffer(cyc_cap, nw),
+             jnp.int32(0))
+        return plan
+
+    @staticmethod
+    def _trip_flags(cfg: EngineConfig):
+        if cfg.backend == "pallas":
+            from ..kernels import ops as kops
+            return kops.triplet_flags
+        return None  # triplets.initial_frontier defaults to the jnp path
+
+    # -- execute: single graph --------------------------------------------
+
+    def enumerate(self, g: BitsetGraph, *,
+                  config: EngineConfig | None = None,
+                  progress: Callable[[dict], None] | None = None
+                  ) -> EnumerationResult:
+        """Enumerate (or count) all chordless cycles of ``g``."""
+        cfg = config if config is not None else self.cfg
+        self._counters["requests"] += 1
+        self._counters["graphs"] += 1
+        if cfg.mesh is not None:
+            from .distributed import enumerate_sharded
+            out = enumerate_sharded(g, cfg, cache=self._cache)
+            return EnumerationResult(
+                n_cycles=out["n_cycles"], n_triangles=out["n_triangles"],
+                cycle_masks=None, iterations=out["iterations"], history=[],
+                stats=dict(out))
+        if cfg.engine == "host":
+            return _enumerate_host(g, cfg, progress)
+        gen = self._wave_events(g, cfg, progress)
+        chunks: list[np.ndarray] = []
+        while True:
+            try:
+                chunks.append(next(gen))
+            except StopIteration as stop:
+                res = stop.value
+                break
+        if cfg.store:
+            nw = g.adj_bits.shape[1]
+            res.cycle_masks = (np.concatenate(chunks, axis=0) if chunks
+                               else np.zeros((0, nw), np.uint32))
+        return res
+
+    def stream(self, g: BitsetGraph, *,
+               config: EngineConfig | None = None,
+               progress: Callable[[dict], None] | None = None
+               ) -> Iterator[np.ndarray]:
+        """Yield cycle-mask chunks ((k, nw) uint32) as the device CycleBuffer
+        drains. Chunks concatenate bit-identically to the ``cycle_masks`` of
+        ``enumerate`` (both consume the same event generator). The generator's
+        ``StopIteration.value`` is the ``EnumerationResult`` summary (with
+        ``cycle_masks=None`` — the chunks ARE the masks)."""
+        cfg = config if config is not None else self.cfg
+        if not cfg.store:
+            raise ValueError("stream() requires store=True (count-only "
+                             "results have no masks to stream)")
+        if cfg.mesh is not None:
+            raise ValueError("stream() is single-device (mesh must be None);"
+                             " the sharded path is count-only")
+        if cfg.engine != "wave":
+            raise ValueError("stream() requires engine='wave' (the host "
+                             "engine has no device-resident cycle buffer)")
+        self._counters["requests"] += 1
+        self._counters["graphs"] += 1
+        self._counters["streams"] += 1
+        return self._wave_events(g, cfg, progress)
+
+    def _wave_events(self, g: BitsetGraph, cfg: EngineConfig,
+                     progress: Callable[[dict], None] | None):
+        """The wave driver loop as an event generator: yields drained mask
+        chunks (store mode), returns the EnumerationResult (masks unset).
+        Port of the PR-1 ``_enumerate_wave`` with the superstep dispatch
+        replaced by a ProgramCache lookup."""
+        delta = max(g.max_degree, 1)
+        nw = g.adj_bits.shape[1]
+        frontier, tri_masks, n_tri = T.initial_frontier(
+            g, bucket=cfg.bucket, flags_fn=self._trip_flags(cfg))
+
+        stats = _new_stats()
+        n_cycles = n_tri
+        cnt = int(frontier.count)
+        stats["n_host_syncs"] += 1
+        history = [dict(step=0, T=cnt, C=n_tri)]
+        limit = (cfg.max_iters if cfg.max_iters is not None
+                 else max(g.n - 3, 0))
+
+        cyc_cap = (cfg.bucket(max(cfg.cycle_buffer_rows, 16))
+                   if cfg.store else 1)
+        buf = empty_cycle_buffer(cyc_cap, nw)
+        if cfg.store:
+            yield tri_masks
+
+        it = 0
+        relaunches = 0
+        while it < limit and cnt > 0:
+            relaunches += 1
+            if relaunches > 4 * limit + 16:
+                raise RuntimeError(
+                    "wave engine: no progress across relaunches")
+            k = min(cfg.superstep_rounds, limit - it)
+            plan = self._wave_plan(g.n, g.m, frontier.capacity, cyc_cap, nw,
+                                   delta, cfg)
+            frontier, buf, r, status, th, ch, pn, pc = plan(
+                g, frontier, buf, jnp.int32(k))
+            stats["n_dispatches"] += 1
+            (status_h, r_h, th_h, ch_h, pn_h, pc_h, cnt_h,
+             bc_h) = jax.device_get(
+                (status, r, th, ch, pn, pc, frontier.count, buf.count))
+            stats["n_host_syncs"] += 1
+
+            for i in range(int(r_h)):
+                n_cycles += int(ch_h[i])
+                rec = dict(step=it + i + 1, T=int(th_h[i]), C=n_cycles)
+                history.append(rec)
+                if progress:
+                    progress(rec)
+            it += int(r_h)
+            cnt = int(cnt_h)
+            status_h = int(status_h)
+
+            if status_h == _DRAIN:
+                # cycle buffer full: drain to host, regrow if one round
+                # alone exceeds the current buffer.
+                if int(bc_h):
+                    yield np.asarray(buf.masks[:int(bc_h)])
+                    stats["n_host_syncs"] += 1
+                    stats["n_drains"] += 1
+                cyc_cap = max(cyc_cap, cfg.bucket(max(int(pc_h), 1)))
+                buf = empty_cycle_buffer(cyc_cap, nw)
+            elif status_h == _GROW:
+                # re-bucket the headroom'd size so the shape stays inside
+                # the growth_bits bucket family (off-family shapes would
+                # churn recompiles against the SHRINK path).
+                new_cap = cfg.bucket(
+                    cfg.bucket(max(int(pn_h), 1))
+                    << max(cfg.grow_headroom, 0))
+                frontier = with_capacity(frontier, new_cap)
+                stats["n_bucket_transitions"] += 1
+            elif status_h in (_RUN, _SHRINK) and cnt > 0:
+                # round budget exhausted / wave decayed below the bucket:
+                # shrink as the wave dies down (bounds dead-row work, like
+                # the host loop does every round).
+                new_cap = cfg.bucket(max(cnt, 1))
+                if new_cap < frontier.capacity:
+                    frontier = with_capacity(frontier, new_cap)
+                    stats["n_bucket_transitions"] += 1
+            elif status_h == _DONE:
+                break
+
+        if cfg.store:
+            bc = int(jax.device_get(buf.count))
+            if bc:
+                yield np.asarray(buf.masks[:bc])
+                stats["n_drains"] += 1
+            stats["n_host_syncs"] += 1
+
+        stats["rounds"] = it
+        stats["rounds_per_dispatch"] = it / max(stats["n_dispatches"], 1)
+        stats["syncs_per_round"] = stats["n_host_syncs"] / max(it, 1)
+        return EnumerationResult(
+            n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=None,
+            iterations=it, history=history, stats=stats)
+
+    # -- execute: graph batch ---------------------------------------------
+
+    def enumerate_batch(self, graphs: Sequence[BitsetGraph], *,
+                        config: EngineConfig | None = None
+                        ) -> list[EnumerationResult]:
+        """Enumerate a batch of graphs with ONE vmapped device program.
+
+        Padding rules (core/plan.py): every graph is padded to the batch
+        maxima (n, m, Δ), frontiers share one capacity bucket, and the
+        superstep advances all lanes per dispatch; per-lane |V|−3 budgets
+        and exit statuses keep semantics identical to per-graph calls.
+        The pallas backend and the host engine fall back to a per-graph
+        loop (pallas kernels are not vmap-batched)."""
+        cfg = config if config is not None else self.cfg
+        if cfg.mesh is not None:
+            raise ValueError("enumerate_batch is single-device; use one "
+                             "request per mesh instead")
+        graphs = list(graphs)
+        if not graphs:
+            return []
+        if len(graphs) == 1 or cfg.engine == "host" \
+                or cfg.backend == "pallas":
+            return [self.enumerate(g, config=cfg) for g in graphs]
+
+        self._counters["requests"] += 1
+        self._counters["graphs"] += len(graphs)
+        self._counters["batches"] += 1
+
+        B = len(graphs)
+        n_pad, m_pad, delta = batch_shape(graphs)
+        gbat = batch_graphs(graphs)
+        nw = gbat.adj_bits.shape[-1]
+
+        # stage 1 per lane on the host (compaction is host-side anyway),
+        # then re-bucket everyone to the shared capacity and stack.
+        fronts, tris, ntris = [], [], []
+        from .plan import pad_graph
+        for g in graphs:
+            pg = pad_graph(g, n_pad, m_pad, delta)
+            f, tri_masks, n_tri = T.initial_frontier(pg, bucket=cfg.bucket)
+            fronts.append(f)
+            tris.append(tri_masks)
+            ntris.append(n_tri)
+        cap = max(f.capacity for f in fronts)
+        fbat = stack_frontiers([with_capacity(f, cap) for f in fronts])
+
+        cyc_cap = (cfg.bucket(max(cfg.cycle_buffer_rows, 16))
+                   if cfg.store else 1)
+        bufbat = empty_cycle_buffer(cyc_cap, nw, batch=B)
+
+        stats = _new_stats()
+        cnts = np.asarray(jax.device_get(fbat.count), np.int64)
+        stats["n_host_syncs"] += 1
+        limits = np.array([max(g.n - 3, 0) for g in graphs], np.int64)
+        if cfg.max_iters is not None:
+            limits = np.minimum(limits, cfg.max_iters)
+        its = np.zeros(B, np.int64)
+        n_cycles = [int(t) for t in ntris]
+        histories = [[dict(step=0, T=int(cnts[i]), C=int(ntris[i]))]
+                     for i in range(B)]
+        chunks: list[list[np.ndarray]] = [[tris[i]] if cfg.store else []
+                                          for i in range(B)]
+
+        K = cfg.superstep_rounds
+        relaunches = 0
+        active = (its < limits) & (cnts > 0)
+        while active.any():
+            relaunches += 1
+            if relaunches > 4 * int(limits.max()) + 16:
+                raise RuntimeError(
+                    "batched wave engine: no progress across relaunches")
+            k_i = np.where(active, np.minimum(K, limits - its), 0)
+            plan = self._wave_plan(n_pad, m_pad, cap, cyc_cap, nw, delta,
+                                   cfg, batch=B)
+            fbat, bufbat, r, status, th, ch, pn, pc = plan(
+                gbat, fbat, bufbat, jnp.asarray(k_i, jnp.int32))
+            stats["n_dispatches"] += 1
+            (status_h, r_h, th_h, ch_h, pn_h, pc_h, cnt_h,
+             bc_h) = jax.device_get(
+                (status, r, th, ch, pn, pc, fbat.count, bufbat.count))
+            stats["n_host_syncs"] += 1
+
+            for i in range(B):
+                for j in range(int(r_h[i])):
+                    n_cycles[i] += int(ch_h[i, j])
+                    histories[i].append(dict(step=int(its[i]) + j + 1,
+                                             T=int(th_h[i, j]),
+                                             C=n_cycles[i]))
+            its += np.asarray(r_h, np.int64)
+            cnts = np.asarray(cnt_h, np.int64)
+            status_h = np.asarray(status_h)
+
+            drains = status_h == _DRAIN
+            grows = status_h == _GROW
+            if drains.any():
+                # drain EVERY lane with pending masks in one host copy;
+                # per-lane chunk order stays discovery order.
+                masks_h = np.asarray(bufbat.masks)
+                for i in range(B):
+                    bc = int(bc_h[i])
+                    if bc:
+                        chunks[i].append(masks_h[i, :bc].copy())
+                        stats["n_drains"] += 1
+                stats["n_host_syncs"] += 1
+                # regrow only from the lanes that actually overflowed —
+                # a simultaneous GROW lane's pending_cyc is an aborted
+                # round's size, not a drain signal.
+                cyc_cap = max(cyc_cap,
+                              cfg.bucket(max(int(pc_h[drains].max()), 1)))
+                bufbat = empty_cycle_buffer(cyc_cap, nw, batch=B)
+            if grows.any():
+                # shared bucket must cover the largest pending lane (a
+                # growing lane's need always exceeds the current bucket,
+                # so everyone fits afterwards).
+                need = max(int(pn_h[i]) for i in np.flatnonzero(grows))
+                new_cap = cfg.bucket(
+                    cfg.bucket(max(need, 1)) << max(cfg.grow_headroom, 0))
+                if new_cap != cap:
+                    fbat = with_capacity_batched(fbat, new_cap)
+                    cap = new_cap
+                    stats["n_bucket_transitions"] += 1
+            elif not drains.any() and cnts.max() > 0:
+                # no transition forced a relaunch size-up: shrink to the
+                # largest live lane as the waves die down (skip on the
+                # terminal relaunch — mirrors the single-graph cnt > 0
+                # guard).
+                new_cap = cfg.bucket(max(int(cnts.max()), 1))
+                if new_cap < cap:
+                    fbat = with_capacity_batched(fbat, new_cap)
+                    cap = new_cap
+                    stats["n_bucket_transitions"] += 1
+            active = (its < limits) & (cnts > 0)
+
+        if cfg.store:
+            bc_h = np.asarray(jax.device_get(bufbat.count))
+            if bc_h.any():
+                masks_h = np.asarray(bufbat.masks)
+                for i in range(B):
+                    if int(bc_h[i]):
+                        chunks[i].append(masks_h[i, :int(bc_h[i])].copy())
+                        stats["n_drains"] += 1
+            stats["n_host_syncs"] += 1
+
+        stats["rounds"] = int(its.max())
+        stats["rounds_per_dispatch"] = (int(its.max())
+                                        / max(stats["n_dispatches"], 1))
+        stats["syncs_per_round"] = (stats["n_host_syncs"]
+                                    / max(int(its.max()), 1))
+        results = []
+        for i in range(B):
+            masks = None
+            if cfg.store:
+                masks = (np.concatenate(chunks[i], axis=0) if chunks[i]
+                         else np.zeros((0, nw), np.uint32))
+            # dispatch/sync/drain counters are SHARED across the batch
+            # (one device program advanced all lanes) — `batch`/`lane`
+            # flag that; `rounds` is this lane's own.
+            results.append(EnumerationResult(
+                n_cycles=n_cycles[i], n_triangles=int(ntris[i]),
+                cycle_masks=masks, iterations=int(its[i]),
+                history=histories[i],
+                stats=dict(stats, batch=B, lane=i, rounds=int(its[i]),
+                           rounds_per_dispatch=(
+                               int(its[i])
+                               / max(stats["n_dispatches"], 1)),
+                           syncs_per_round=(
+                               stats["n_host_syncs"]
+                               / max(int(its[i]), 1)))))
+        return results
+
+
+# ---------------------------------------------------------------------------
+# Module-level default service (the compat wrapper's session)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: CycleService | None = None
+
+
+def default_service() -> CycleService:
+    """The shared session behind ``enumerate_chordless_cycles`` — one-shot
+    calls stay warm across invocations because they all execute against
+    this service's program cache."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = CycleService()
+    return _DEFAULT
+
+
+def reset_default_service() -> None:
+    """Drop the shared session (tests / benchmarks that need a cold path)."""
+    global _DEFAULT
+    _DEFAULT = None

@@ -1,12 +1,19 @@
-"""Serving launcher: continuous-batching decode loop.
+"""Serving launcher: continuous-batching graph-request scheduler over ONE
+shared CycleService.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --requests 12 --max-new 8
+    PYTHONPATH=src python -m repro.launch.serve --requests 24 --slots 4
 
-A toy scheduler with production structure: a request queue feeds fixed-size
-decode slots; finished sequences free their slot for the next request
-(continuous batching); prefill and decode are separate jitted programs, as
-in the prefill_32k / decode_32k dry-run cells.
+Production structure on the paper's workload: a queue of enumeration
+requests (mixed-size graphs) feeds fixed-size batch slots; each wave of
+up-to-``slots`` requests is submitted as ONE vmapped device program
+(``CycleService.enumerate_batch``); finished requests free their slots for
+the next wave (continuous batching). Every wave executes against the same
+service, so same-shaped graphs hit the cross-graph program cache — the
+amortization the ROADMAP's million-user north star needs (warm ms/graph
+and cache hit rate are printed at the end).
+
+(The LM decode-loop demo this file used to host lives on in
+``examples/serve_lm.py``.)
 """
 from __future__ import annotations
 
@@ -14,52 +21,72 @@ import argparse
 import time
 
 
+def build_request_queue(n_requests: int, seed: int):
+    """Mixed multi-tenant traffic: small grids + G(n, p) instances."""
+    import numpy as np
+    from ..core import build_graph
+    from ..core.graphs import grid_graph, random_gnp
+
+    rng = np.random.default_rng(seed)
+    queue = []
+    for i in range(n_requests):
+        kind = i % 3
+        if kind == 0:
+            r, c = rng.integers(3, 5), rng.integers(3, 6)
+            n, edges = grid_graph(int(r), int(c))
+        elif kind == 1:
+            n, edges = random_gnp(int(rng.integers(10, 18)), 0.3,
+                                  int(rng.integers(1 << 30)))
+        else:  # repeat shape → exercises the warm program cache
+            n, edges = grid_graph(4, 4)
+        queue.append(build_graph(n, edges))
+    return queue
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="max graphs batched into one device program")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store", action="store_true",
+                    help="materialize cycle masks (default: count-only)")
+    ap.add_argument("--formulation", default="bitword",
+                    choices=("slot", "bitword"))
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
+    from ..core import CycleService, EngineConfig
 
-    from ..configs.base import get_config, shapes_for
-    from ..models import transformer as T
-    from . import specs as S
+    service = CycleService(EngineConfig(store=args.store,
+                                        formulation=args.formulation))
+    queue = build_request_queue(args.requests, args.seed)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = S.reduced_config(cfg)
-    max_seq = args.prompt_len + args.max_new
-
-    params = S.model_init(cfg, shapes_for(cfg)[0], jax.random.PRNGKey(0))
-    prefill = jax.jit(lambda p, t: T.prefill_step(p, t, cfg, max_seq=max_seq))
-    decode = jax.jit(lambda p, c, t: T.decode_step(p, c, t, cfg))
-
-    rng = np.random.default_rng(0)
-    queue = [rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
-             for _ in range(args.requests)]
-    done, t0 = 0, time.perf_counter()
-
-    # slot state: per-slot caches created by one batched prefill at a time
+    done, waves, t0 = 0, 0, time.perf_counter()
+    latencies = []
     while queue:
         batch = [queue.pop(0) for _ in range(min(args.slots, len(queue)))]
-        toks = jnp.asarray(np.stack(batch))
-        logits, cache = prefill(params, toks)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        for _ in range(args.max_new - 1):
-            logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        jax.block_until_ready(tok)
+        t1 = time.perf_counter()
+        results = (service.enumerate_batch(batch) if len(batch) > 1
+                   else [service.enumerate(batch[0])])
+        dt = time.perf_counter() - t1
+        latencies.append(dt / len(batch))
         done += len(batch)
-        print(f"served {done}/{args.requests} "
-              f"({done * args.max_new / (time.perf_counter() - t0):.1f} tok/s)")
-    print("all requests served")
+        waves += 1
+        total = sum(r.n_cycles for r in results)
+        print(f"wave {waves}: served {done}/{args.requests} "
+              f"({len(batch)} slots, {total} cycles, "
+              f"{dt * 1e3 / len(batch):.1f} ms/graph)")
+
+    wall = time.perf_counter() - t0
+    s = service.stats
+    hit_rate = s["cache_hits"] / max(s["cache_hits"] + s["cache_misses"], 1)
+    steady = f"{min(latencies) * 1e3:.1f} ms/graph" if latencies else "n/a"
+    print(f"all {done} requests served in {wall:.2f}s "
+          f"({done / max(wall, 1e-9):.1f} graphs/s; "
+          f"steady-state {steady})")
+    print(f"service: {s['programs']} compiled programs, "
+          f"{s['cache_hits']} hits / {s['cache_misses']} misses "
+          f"({hit_rate:.0%} hit rate), {s['n_traces']} traces")
 
 
 if __name__ == "__main__":
