@@ -6,6 +6,9 @@ perf trajectory is tracked by (us/round, rounds/dispatch, syncs/round).
 
 Emits ``benchmarks/results/BENCH_engine.json`` (machine-readable; one entry
 per graph × engine) so every future PR can diff against this one.
+``tune_smoke`` adds the autotuner's tuned-vs-default A/B
+(→ ``results/BENCH_tune_smoke.json``); ``benchmarks/run.py --check`` gates
+regressions against the committed baselines.
 """
 from __future__ import annotations
 
@@ -102,7 +105,7 @@ def smoke():
     return ref
 
 
-def service_smoke(n_graphs: int = 6):
+def service_smoke(n_graphs: int = 6, out_path: str | None = None):
     """Warm-cache serving scenario: N same-bucket graphs through ONE shared
     CycleService vs N one-shot calls that each rebuild their programs (a
     fresh service per graph — the pre-service world). Reports amortized
@@ -142,8 +145,8 @@ def service_smoke(n_graphs: int = 6):
                batch_ms_per_graph=round(batch_ms, 2),
                warm_speedup=round(speedup, 2),
                cache=warm_stats)
-    path = os.path.join(RESULTS_DIR, "BENCH_service_smoke.json")
-    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = out_path or os.path.join(RESULTS_DIR, "BENCH_service_smoke.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
         json.dump(row, f, indent=2)
     print(f"service smoke: one-shot {oneshot_ms:.1f} ms/graph, "
@@ -154,8 +157,121 @@ def service_smoke(n_graphs: int = 6):
     return row
 
 
-# paper's footnote scale, wave engine count-only — nightly, NOT in --smoke
-NIGHTLY_GRAPHS = ["Grid_7x10"]
+def tune_smoke(out_path: str | None = None):
+    """Tuned-vs-default A/B for the ``repro.tune`` subsystem.
+
+    Per smoke grid: record a traced default run, let the ``AutoTuner`` fit
+    its cost model and run measured trials (default config always in the
+    trial pool, so the chosen knobs can never have measured worse than the
+    default), then independently re-measure both configs warm. Writes
+    ``results/BENCH_tune_smoke.json``. Asserts (a) the tuner's pick met or
+    beat the default inside the trials — exact by argmin construction — and
+    (b) the independent re-measurement stays within noise of the default
+    (regression tripwire).
+    """
+    import time as _time
+
+    from repro.core import CycleService, EngineConfig
+    from repro.tune import AutoTuner, TUNED_KNOBS, TuneStore, WaveProfile
+
+    smoke_grids = [("Grid_4x4", (4, 4)), ("Grid_5x6", (5, 6))]
+    cfg = EngineConfig(store=False, formulation="bitword")
+    store = TuneStore()
+    rows = []
+    for name, (r_, c_) in smoke_grids:
+        n, edges = grid_graph(r_, c_)
+        g = build_graph(n, edges)
+
+        # one traced default run: the profile + cost-model fit input
+        rec = CycleService(cfg, trace=True)
+        res = rec.enumerate(g)
+        profile = WaveProfile.from_history(res.history, n=g.n,
+                                           nw=g.adj_bits.shape[1])
+
+        # measured trials run warm against one shared service
+        svc = CycleService(cfg)
+        trial_log: list[tuple[dict, float]] = []
+
+        def measure(c, _svc=svc, _g=g, _log=trial_log):
+            _svc.enumerate(_g, config=c)          # compile/warm
+            best = float("inf")
+            for _ in range(3):
+                t0 = _time.perf_counter()
+                _svc.enumerate(_g, config=c)
+                best = min(best, _time.perf_counter() - t0)
+            ms = best * 1e3
+            _log.append(({k: getattr(c, k) for k in TUNED_KNOBS}, ms))
+            return ms
+
+        tuner = AutoTuner(store=store, trials=4)
+        key = tuner.key_for(g.n, g.m, max(g.max_degree, 1), cfg)
+        tuned_cfg = tuner.tune(profile, cfg, key=key, traces=(res.trace,),
+                               measure=measure)
+        n_trials = len(trial_log)   # before the re-measurements below
+
+        base_knobs = {k: getattr(cfg, k) for k in TUNED_KNOBS}
+        tuned_knobs = {k: getattr(tuned_cfg, k) for k in base_knobs}
+        # headline ms/graph come from the SAME trial block (one warm
+        # service, interleaved candidates) — the apples-to-apples numbers
+        # the argmin ran over; tuned <= default is exact by construction
+        # because the default is always in the pool.
+        default_ms = next(ms for kn, ms in trial_log if kn == base_knobs)
+        tuned_ms = min(ms for _, ms in trial_log)
+        assert tuned_ms <= default_ms, (name, trial_log)
+
+        # independent warm re-measurement of both arms (noise tripwire)
+        re_default = measure(cfg)
+        re_tuned = (re_default if tuned_knobs == base_knobs
+                    else measure(tuned_cfg))
+        res_t = svc.enumerate(g, config=tuned_cfg)
+        assert res_t.n_cycles == res.n_cycles, (name, "tuned count differs")
+        # noise tripwire with an absolute slack floor — these are
+        # single-digit-ms measurements where shared-CPU scheduling noise
+        # alone exceeds 15% (same rationale as run.py's CHECK_ABS_SLACK_MS)
+        assert re_tuned <= re_default * 1.15 + 5.0, (
+            f"{name}: tuned {re_tuned:.2f} ms vs default "
+            f"{re_default:.2f} ms on re-measurement")
+
+        rows.append(dict(
+            graph=name, n=n, m=len(edges), n_cycles=res.n_cycles,
+            default_knobs=base_knobs, tuned_knobs=tuned_knobs,
+            default_ms_per_graph=round(default_ms, 2),
+            tuned_ms_per_graph=round(tuned_ms, 2),
+            speedup=round(default_ms / max(tuned_ms, 1e-9), 3),
+            remeasured_default_ms=round(re_default, 2),
+            remeasured_tuned_ms=round(re_tuned, 2),
+            n_trials=n_trials, tune_key=key.as_str()))
+        print(f"tune smoke {name}: default {default_ms:.1f} ms, "
+              f"tuned {tuned_ms:.1f} ms ({rows[-1]['speedup']}x) "
+              f"knobs={tuned_knobs}")
+
+    # warm-hit path: a second service sharing the store executes tuned
+    # configs straight away — no search, no trace
+    warm_svc = CycleService(cfg, tuner=AutoTuner(store=store))
+    g = build_graph(*grid_graph(4, 4))
+    warm_res = warm_svc.enumerate(g)
+    ts = warm_svc.stats["tune"]
+    assert ts["searches"] == 0 and ts["warm_hits"] >= 1, ts
+    assert warm_svc.stats["traces_recorded"] == 0, "warm hit re-traced"
+
+    doc = dict(benchmark="tune_smoke",
+               base_config=dict(store=False, formulation="bitword",
+                                engine="wave", backend="jnp"),
+               rows=rows,
+               warm_hit=dict(n_cycles=warm_res.n_cycles,
+                             tune_stats=ts,
+                             traces_recorded=0))
+    path = out_path or os.path.join(RESULTS_DIR, "BENCH_tune_smoke.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {path}")
+    return doc
+
+
+# paper's footnote scale, wave engine count-only — nightly, NOT in --smoke.
+# Grid_8x10 is the paper's 71.5M-cycle footnote graph (Table 1).
+NIGHTLY_GRAPHS = ["Grid_7x10", "Grid_8x10"]
 
 
 def nightly():
@@ -206,6 +322,7 @@ if __name__ == "__main__":
     if "--smoke" in sys.argv:
         smoke()
         service_smoke()
+        tune_smoke()
     elif "--nightly" in sys.argv:
         nightly()
     else:

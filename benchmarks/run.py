@@ -1,6 +1,7 @@
 """Benchmark harness — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--nightly]
+                                            [--check]
 
 Sections:
   engine   — host vs fused wave engine A/B → results/BENCH_engine.json
@@ -12,25 +13,123 @@ Sections:
 
 ``--smoke`` runs only the CI-time subset: table1-style validation on the
 4×4 mesh, the warm-cache serving scenario (shared CycleService vs one-shot,
-→ results/BENCH_service_smoke.json), plus the engine A/B JSON emission on
+→ results/BENCH_service_smoke.json), the tuned-vs-default autotuner A/B
+(→ results/BENCH_tune_smoke.json), plus the engine A/B JSON emission on
 the two smallest graphs. ``--nightly`` runs the paper's footnote-scale
-Grid_7x10 count-only target via the wave engine.
+Grid_7x10 + Grid_8x10 count-only targets via the wave engine. ``--check``
+is the CI regression gate: it re-runs the smoke suite into a temp dir and
+fails (exit 1) if any tracked ms/graph metric regressed >25% against the
+committed ``results/BENCH_*.json`` baselines.
 
 Output: ``name,us_per_call,derived`` CSV blocks + BENCH_engine.json.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+import tempfile
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# >25% ms/graph regression vs the committed baseline fails the gate —
+# but only when the absolute slowdown also exceeds the slack floor:
+# the smoke metrics are single-digit-ms measurements where shared-CPU
+# scheduling noise alone exceeds 25%, and a sub-5ms delta is never the
+# regression this gate exists to catch.
+CHECK_TOLERANCE = 1.25
+CHECK_ABS_SLACK_MS = 5.0
+
+
+def _load_baseline(name: str) -> dict | None:
+    path = os.path.join(RESULTS_DIR, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check() -> int:
+    """Regression gate: fresh smoke metrics vs committed BENCH_* baselines.
+
+    Compares, per metric: engine-A/B warm ms (per graph × engine), the
+    serving scenario's warm ms/graph, and the autotuner's tuned ms/graph.
+    A missing baseline file skips its section (first run records it via
+    ``--smoke``); a >25% slowdown on any metric fails. Returns the number
+    of failures (the CLI exits nonzero on any).
+    """
+    from . import engine_bench
+    failures: list[str] = []
+    checked = 0
+
+    def cmp(label: str, fresh_ms: float, base_ms: float):
+        nonlocal checked
+        checked += 1
+        ratio = fresh_ms / max(base_ms, 1e-9)
+        bad = (ratio > CHECK_TOLERANCE
+               and fresh_ms - base_ms > CHECK_ABS_SLACK_MS)
+        flag = "FAIL" if bad else "ok"
+        print(f"  {flag:4s} {label}: fresh {fresh_ms:.2f} ms vs baseline "
+              f"{base_ms:.2f} ms ({ratio:.2f}x)")
+        if bad:
+            failures.append(label)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        base = _load_baseline("BENCH_engine_smoke.json")
+        if base:
+            print("== check: engine A/B (warm ms) ==")
+            by_key = {(r["graph"], r["engine"]): r for r in base["rows"]}
+            for fresh in engine_bench.run(["Grid_5x6", "K_8_8"]):
+                b = by_key.get((fresh["graph"], fresh["engine"]))
+                if b:
+                    cmp(f"engine[{fresh['graph']},{fresh['engine']}]",
+                        fresh["t_warm_ms"], b["t_warm_ms"])
+        base = _load_baseline("BENCH_service_smoke.json")
+        if base:
+            print("== check: warm-cache serving (ms/graph) ==")
+            row = engine_bench.service_smoke(
+                out_path=os.path.join(tmp, "service.json"))
+            cmp("service.warm", row["warm_ms_per_graph"],
+                base["warm_ms_per_graph"])
+            cmp("service.batch", row["batch_ms_per_graph"],
+                base["batch_ms_per_graph"])
+        base = _load_baseline("BENCH_tune_smoke.json")
+        if base:
+            print("== check: autotuner (tuned ms/graph) ==")
+            doc = engine_bench.tune_smoke(
+                out_path=os.path.join(tmp, "tune.json"))
+            by_graph = {r["graph"]: r for r in base["rows"]}
+            for fresh in doc["rows"]:
+                b = by_graph.get(fresh["graph"])
+                if b:
+                    cmp(f"tune[{fresh['graph']}]",
+                        fresh["tuned_ms_per_graph"],
+                        b["tuned_ms_per_graph"])
+
+    if not checked:
+        print("check: no committed baselines found — run --smoke first")
+    if failures:
+        print(f"check: {len(failures)} regression(s) >"
+              f"{(CHECK_TOLERANCE - 1):.0%}: {failures}")
+    else:
+        print(f"check: {checked} metric(s) within "
+              f"{(CHECK_TOLERANCE - 1):.0%} of baseline")
+    return len(failures)
 
 
 def main() -> None:
     full = "--full" in sys.argv
+    if "--check" in sys.argv:
+        sys.exit(1 if check() else 0)
+
     if "--smoke" in sys.argv:
         from . import engine_bench
         print("== smoke (4x4 mesh) ==")
         engine_bench.smoke()
         print("\n== warm-cache serving (shared CycleService vs one-shot) ==")
         engine_bench.service_smoke()
+        print("\n== autotuner (tuned vs default) ==")
+        engine_bench.tune_smoke()
         print("\n== engine A/B (smoke subset) ==")
         # separate file: must not clobber the tracked full-suite baseline
         engine_bench.main(["Grid_5x6", "K_8_8"],

@@ -44,6 +44,7 @@ from .bitset_graph import BitsetGraph
 from . import expand as E
 from . import triplets as T
 from .frontier import CycleBuffer, Frontier
+from ..tune.telemetry import STATUSES, WaveTrace, disabled_trace
 
 
 def _bucket(c: int, *, growth_bits: int = 1) -> int:
@@ -151,6 +152,8 @@ class EnumerationResult:
     iterations: int
     history: list[dict]           # per-iteration |T|, |C| (paper Fig. 4)
     stats: dict | None = None     # dispatch / host-sync accounting
+    trace: WaveTrace | None = None  # structured per-dispatch telemetry
+    # (repro.tune; populated only when recording was enabled for the run)
 
     def cycles_as_sets(self, n: int) -> list[frozenset[int]]:
         from .bitset_graph import unpack_bits
@@ -163,8 +166,10 @@ class EnumerationResult:
 # Wave engine (device-resident superstep)
 # ---------------------------------------------------------------------------
 
-# superstep exit codes
-_RUN, _DONE, _GROW, _DRAIN, _SHRINK = 0, 1, 2, 3, 4
+# superstep exit codes; tune.telemetry.STATUSES is the single source of the
+# name vocabulary (code i ↔ STATUSES[i]; DESIGN.md §6.6)
+_RUN, _DONE, _GROW, _DRAIN, _SHRINK = range(len(STATUSES))
+STATUS_NAMES = dict(enumerate(STATUSES))
 
 
 def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
@@ -217,18 +222,13 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
     return f, buf, r, status, th, ch, pn, pc
 
 
-def _new_stats() -> dict:
-    return dict(n_dispatches=0, n_host_syncs=0, n_bucket_transitions=0,
-                n_drains=0)
-
-
 # ---------------------------------------------------------------------------
 # Legacy host-driven engine (per-round dispatch, batched readbacks)
 # ---------------------------------------------------------------------------
 
 def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
-                    progress: Callable[[dict], None] | None
-                    ) -> EnumerationResult:
+                    progress: Callable[[dict], None] | None,
+                    trace: WaveTrace | None = None) -> EnumerationResult:
     if cfg.backend == "pallas":
         from ..kernels import ops as kops
         slot_flags = kops.expand_flags_slot
@@ -246,11 +246,11 @@ def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
     frontier, tri_masks, n_tri = T.initial_frontier(
         g, bucket=cfg.bucket, flags_fn=trip_flags)
 
-    stats = _new_stats()
+    trace = trace if trace is not None else disabled_trace()
     cycles: list[np.ndarray] = [tri_masks] if store else []
     n_cycles = n_tri
     cnt = int(frontier.count)
-    stats["n_host_syncs"] += 1
+    trace.sync()
     history = [dict(step=0, T=cnt, C=n_tri)]
     limit = cfg.max_iters if cfg.max_iters is not None else max(g.n - 3, 0)
 
@@ -261,24 +261,31 @@ def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
     it = 0
     while it < limit and cnt > 0:
         it += 1
+        cap_in, cnt_in = frontier.capacity, cnt
+        trace.tic()
 
         if formulation == "bitword" and not store:
             # fast path (§Perf engine hillclimb): popcount-only cycle
             # counting, exact output sizing, ONE readback per round.
             ext_w, n_cyc_j, n_new_j = bitword_count(g, frontier)
-            stats["n_dispatches"] += 1
+            trace.launch()
             fetch = (n_cyc_j, n_new_j) + (
                 () if prev_dropped is None else (prev_dropped,))
             got = jax.device_get(fetch)
-            stats["n_host_syncs"] += 1
+            trace.sync()
             n_cyc, n_new = int(got[0]), int(got[1])
             if prev_dropped is not None:
                 assert int(got[2]) == 0
             n_cycles += n_cyc
             frontier, prev_dropped = E.bitword_compact(
                 g, frontier, ext_w, delta, cfg.bucket(max(n_new, 1)))
-            stats["n_dispatches"] += 1
+            trace.launch()
             cnt = n_new
+            trace.dispatch(
+                kind="round", bucket=cap_in, cyc_cap=0, budget=1, rounds=1,
+                status="DONE" if n_new == 0 else "RUN", t_sizes=(n_new,),
+                c_counts=(n_cyc,), enter_count=cnt_in, exit_count=n_new,
+                t_ms=trace.toc_ms(), launches=0)
             rec = dict(step=it, T=n_new, C=n_cycles)
             history.append(rec)
             if progress:
@@ -296,11 +303,11 @@ def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
             cand_v, is_cyc, is_ext = slot_flags(g, frontier, delta)
             cyc_src, cyc_flags = cand_v, is_cyc
         n_new_j, n_cyc_j = E.count_ext_and_cycles(is_cyc, is_ext)
-        stats["n_dispatches"] += 1
+        trace.launch()
         fetch = (n_cyc_j, n_new_j) + (
             () if prev_dropped is None else (prev_dropped,))
         got = jax.device_get(fetch)
-        stats["n_host_syncs"] += 1
+        trace.sync()
         n_cyc, n_new = int(got[0]), int(got[1])
         if prev_dropped is not None:
             assert int(got[2]) == 0
@@ -309,14 +316,19 @@ def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
             masks, _ = E.gather_cycles(frontier, cyc_src, cyc_flags,
                                        cfg.bucket(n_cyc))
             cycles.append(np.asarray(masks)[:n_cyc])
-            stats["n_dispatches"] += 1
-            stats["n_host_syncs"] += 1
+            trace.launch()
+            trace.sync()
         n_cycles += n_cyc
 
         frontier, prev_dropped = E.compact_extensions(
             g, frontier, cand_v, is_ext, cfg.bucket(max(n_new, 1)))
-        stats["n_dispatches"] += 1
+        trace.launch()
         cnt = n_new
+        trace.dispatch(
+            kind="round", bucket=cap_in, cyc_cap=0, budget=1, rounds=1,
+            status="DONE" if n_new == 0 else "RUN", t_sizes=(n_new,),
+            c_counts=(n_cyc,), enter_count=cnt_in, exit_count=n_new,
+            cyc_fill=n_cyc, t_ms=trace.toc_ms(), launches=0)
         rec = dict(step=it, T=n_new, C=n_cycles)
         history.append(rec)
         if progress:
@@ -324,19 +336,17 @@ def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
 
     if prev_dropped is not None:
         assert int(jax.device_get(prev_dropped)) == 0
-        stats["n_host_syncs"] += 1
+        trace.sync()
 
     cycle_masks = None
     if store:
         nw = g.adj_bits.shape[1]
         cycle_masks = (np.concatenate(cycles, axis=0) if cycles
                        else np.zeros((0, nw), np.uint32))
-    stats["rounds"] = it
-    stats["rounds_per_dispatch"] = it / max(stats["n_dispatches"], 1)
-    stats["syncs_per_round"] = stats["n_host_syncs"] / max(it, 1)
     return EnumerationResult(
         n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=cycle_masks,
-        iterations=it, history=history, stats=stats)
+        iterations=it, history=history, stats=trace.finalize(rounds=it),
+        trace=trace if trace.enabled else None)
 
 
 def enumerate_chordless_cycles(

@@ -15,8 +15,9 @@ same-shaped request a service ever sees. This module owns that amortization:
                    ``n_traces`` counter increments only while tracing, so a
                    warm cache is *observable*: repeated same-bucket calls
                    must leave it untouched.
-* ``ProgramCache`` — the per-service dict of plans with hit/miss counters
-                   (``CycleService.stats``). Distinct services deliberately
+* ``ProgramCache`` — the per-service LRU of plans with hit/miss/eviction
+                   counters (``CycleService.stats``); ``max_plans`` bounds
+                   long-lived services. Distinct services deliberately
                    do NOT share plans: a fresh service models the old
                    rebuild-per-call world and is what the serving benchmark
                    measures against.
@@ -29,6 +30,7 @@ same-shaped request a service ever sees. This module owns that amortization:
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import numpy as np
 import jax
@@ -99,21 +101,39 @@ class WavePlan:
 
 
 class ProgramCache:
-    """Keyed store of compiled plans with hit/miss accounting."""
+    """Keyed store of compiled plans with hit/miss accounting.
 
-    def __init__(self):
-        self._plans: dict[PlanKey, object] = {}
+    ``max_plans`` bounds a long-lived service's cache with LRU eviction
+    (plans were previously never freed): a hit refreshes recency, a miss
+    beyond the bound evicts the least-recently-used plan — XLA drops the
+    compiled executable with it, and a later same-shape request simply
+    recompiles (counted in ``evictions``/``cache_misses``). ``None`` keeps
+    the unbounded pre-eviction behaviour."""
+
+    def __init__(self, max_plans: int | None = None):
+        if max_plans is not None and max_plans < 1:
+            raise ValueError(f"max_plans must be >= 1 or None, "
+                             f"got {max_plans}")
+        self._plans: "OrderedDict[PlanKey, object]" = OrderedDict()
+        self.max_plans = max_plans
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self._retired_traces = 0  # n_traces stays monotonic across evictions
 
     def get_or_build(self, key: PlanKey, builder):
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
+            self._plans.move_to_end(key)
             return plan
         self.misses += 1
         plan = builder()
         self._plans[key] = plan
+        while self.max_plans is not None and len(self._plans) > self.max_plans:
+            _, evicted = self._plans.popitem(last=False)
+            self._retired_traces += getattr(evicted, "n_traces", 0)
+            self.evictions += 1
         return plan
 
     def __len__(self):
@@ -124,11 +144,13 @@ class ProgramCache:
 
     @property
     def n_traces(self) -> int:
-        return sum(getattr(p, "n_traces", 0) for p in self._plans.values())
+        return (sum(getattr(p, "n_traces", 0) for p in self._plans.values())
+                + self._retired_traces)
 
     def stats(self) -> dict:
         return dict(programs=len(self._plans), cache_hits=self.hits,
-                    cache_misses=self.misses, n_traces=self.n_traces)
+                    cache_misses=self.misses, n_traces=self.n_traces,
+                    evictions=self.evictions, max_plans=self.max_plans)
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,13 @@ graph batch, or stream — is a cheap *execute* against that cache:
 ``EngineConfig``); ``cfg.engine == 'host'`` routes to the legacy per-round
 A/B engine. ``enumerate_chordless_cycles`` is a thin wrapper over the
 module-level ``default_service()``.
+
+``CycleService(auto_tune=True)`` additionally resolves every request's
+config through ``repro.tune`` (DESIGN.md §6.6): first visit of a workload
+class records a ``WaveTrace`` and searches the knob space, later visits
+execute the stored tuned config with no search and no re-trace;
+``trace=True`` records telemetry on every request and ``max_plans``
+LRU-bounds the program cache.
 """
 from __future__ import annotations
 
@@ -32,11 +39,12 @@ import jax.numpy as jnp
 
 from .bitset_graph import BitsetGraph
 from . import triplets as T
-from .engine import (EngineConfig, EnumerationResult, _DONE, _DRAIN, _GROW,
-                     _RUN, _SHRINK, _enumerate_host, _new_stats)
+from .engine import (STATUS_NAMES, EngineConfig, EnumerationResult, _DONE,
+                     _DRAIN, _GROW, _RUN, _SHRINK, _enumerate_host)
 from .frontier import (empty_cycle_buffer, empty_frontier, stack_frontiers,
                        with_capacity, with_capacity_batched)
 from .plan import PlanKey, ProgramCache, WavePlan, batch_graphs, batch_shape
+from ..tune.telemetry import WaveTrace, disabled_trace
 
 
 class CycleService:
@@ -50,10 +58,41 @@ class CycleService:
     shapes are static); the win is for same-shaped tenant traffic.
     """
 
-    def __init__(self, config: EngineConfig | None = None):
+    def __init__(self, config: EngineConfig | None = None, *,
+                 auto_tune: bool = False, tuner=None,
+                 tune_store: "str | object | None" = None,
+                 trace: bool = False, max_plans: int | None = None):
+        """``auto_tune=True`` resolves every request's config through an
+        ``repro.tune.AutoTuner``: the first request of a workload class runs
+        the base config while recording a ``WaveTrace``, the tuner fits its
+        cost model on it and stores the winning knobs, and every later
+        same-class request executes the tuned config straight from the
+        store (no search, no re-trace). ``tuner`` injects a configured
+        ``AutoTuner`` (e.g. with measured trials); ``tune_store`` is a
+        ``TuneStore`` or a JSON path for persistence across processes.
+        ``trace=True`` records telemetry on every request
+        (``service.last_trace``); ``max_plans`` LRU-bounds the program
+        cache for long-lived services.
+        """
         self.cfg = config if config is not None else EngineConfig()
-        self._cache = ProgramCache()
-        self._counters = dict(requests=0, graphs=0, batches=0, streams=0)
+        self._cache = ProgramCache(max_plans=max_plans)
+        self._counters = dict(requests=0, graphs=0, batches=0, streams=0,
+                              traces_recorded=0, tuned_requests=0)
+        self._trace_enabled = bool(trace)
+        self.last_trace: WaveTrace | None = None
+        self._tuner = tuner
+        if tuner is not None and tune_store is not None:
+            raise ValueError(
+                "pass tune_store to the AutoTuner itself when injecting a "
+                "tuner (tuner= already carries its own store)")
+        if self._tuner is None and (auto_tune or tune_store is not None):
+            # a tune_store alone implies auto_tune: a persistence path the
+            # service silently never wrote to would be worse than tuning
+            from ..tune import AutoTuner, TuneStore
+            store = tune_store
+            if isinstance(store, str):
+                store = TuneStore(path=store)
+            self._tuner = AutoTuner(store=store)
 
     # -- stats ------------------------------------------------------------
 
@@ -62,7 +101,61 @@ class CycleService:
         """Program-cache hit/miss/trace counters + request accounting."""
         out = self._cache.stats()
         out.update(self._counters)
+        if self._tuner is not None:
+            out["tune"] = self._tuner.stats()
         return out
+
+    # -- tuning (repro.tune integration) ----------------------------------
+
+    def _resolve_config(self, n: int, m: int, delta: int, cfg: EngineConfig,
+                        explicit: bool = False):
+        """Route a request's config through the tuner (DESIGN.md §6.6).
+
+        Returns ``(cfg, tune_key, observe)``: with a stored tuned entry for
+        this workload class the tuned config comes back and ``observe`` is
+        False (warm hit — no search, no trace); on first visit the base
+        config comes back with ``observe=True`` so the run is recorded and
+        fed to the tuner afterwards. Three kinds of request pass through
+        untouched: ``explicit`` per-request configs (the caller pinned the
+        knobs — e.g. a memory-bounding ``cycle_buffer_rows`` — and a stored
+        entry keyed only by workload class must not override them),
+        mesh-sharded configs (the searched knobs are single-device knobs;
+        dist-path tuning is a ROADMAP follow-up), and ``engine='host'``
+        requests (the cost model's replay is a twin of the WAVE driver, so
+        its ranking is meaningless for the per-round host loop — tuning it
+        untried could slow it down).
+        """
+        if (self._tuner is None or explicit or cfg.mesh is not None
+                or cfg.engine != "wave"):
+            return cfg, None, False
+        key = self._tuner.key_for(n, m, delta, cfg)
+        tuned = self._tuner.lookup(key, cfg)
+        if tuned is not None:
+            self._counters["tuned_requests"] += 1
+            return tuned, key, False
+        return cfg, key, True
+
+    def _new_trace(self, observing: bool) -> WaveTrace:
+        """Telemetry recorder for one run: retains events when the service
+        records traces OR this run feeds the tuner; counters-only (near-zero
+        overhead) otherwise."""
+        if self._trace_enabled or observing:
+            tr = WaveTrace(enabled=True)
+            self._counters["traces_recorded"] += 1
+            self.last_trace = tr
+            return tr
+        return disabled_trace()
+
+    def _after_run(self, g: BitsetGraph, cfg: EngineConfig, tune_key,
+                   observe: bool, trace: WaveTrace,
+                   res: EnumerationResult) -> None:
+        """First-visit hook: hand the recorded run to the tuner (profile →
+        cost-model fit → search → store) so the NEXT same-class request
+        executes tuned."""
+        if not observe or tune_key is None:
+            return
+        self._tuner.observe(tune_key, cfg, res.history, n=g.n,
+                            nw=g.adj_bits.shape[1], traces=(trace,))
 
     # -- plan (compile) ---------------------------------------------------
 
@@ -129,9 +222,14 @@ class CycleService:
                 n_cycles=out["n_cycles"], n_triangles=out["n_triangles"],
                 cycle_masks=None, iterations=out["iterations"], history=[],
                 stats=dict(out))
+        cfg, tkey, observe = self._resolve_config(
+            g.n, g.m, max(g.max_degree, 1), cfg, explicit=config is not None)
+        trace = self._new_trace(observe)
         if cfg.engine == "host":
-            return _enumerate_host(g, cfg, progress)
-        gen = self._wave_events(g, cfg, progress)
+            res = _enumerate_host(g, cfg, progress, trace=trace)
+            self._after_run(g, cfg, tkey, observe, trace, res)
+            return res
+        gen = self._wave_events(g, cfg, progress, trace)
         chunks: list[np.ndarray] = []
         while True:
             try:
@@ -143,6 +241,7 @@ class CycleService:
             nw = g.adj_bits.shape[1]
             res.cycle_masks = (np.concatenate(chunks, axis=0) if chunks
                                else np.zeros((0, nw), np.uint32))
+        self._after_run(g, cfg, tkey, observe, trace, res)
         return res
 
     def stream(self, g: BitsetGraph, *,
@@ -155,22 +254,43 @@ class CycleService:
         ``StopIteration.value`` is the ``EnumerationResult`` summary (with
         ``cycle_masks=None`` — the chunks ARE the masks)."""
         cfg = config if config is not None else self.cfg
+        # mesh first: a mesh-routed config is count-only by construction, so
+        # the store check below would otherwise mask the real problem with a
+        # misleading "store=True required" error.
+        if cfg.mesh is not None:
+            raise NotImplementedError(
+                "stream() over the mesh-sharded (shard_map) path is not "
+                "implemented: the sharded engine is count-only and keeps no "
+                "device-resident CycleBuffer to drain. Use mesh=None for "
+                "streaming, or enumerate(config=<mesh cfg>) for sharded "
+                "counting.")
         if not cfg.store:
             raise ValueError("stream() requires store=True (count-only "
                              "results have no masks to stream)")
-        if cfg.mesh is not None:
-            raise ValueError("stream() is single-device (mesh must be None);"
-                             " the sharded path is count-only")
         if cfg.engine != "wave":
             raise ValueError("stream() requires engine='wave' (the host "
                              "engine has no device-resident cycle buffer)")
         self._counters["requests"] += 1
         self._counters["graphs"] += 1
         self._counters["streams"] += 1
-        return self._wave_events(g, cfg, progress)
+        cfg, tkey, observe = self._resolve_config(
+            g.n, g.m, max(g.max_degree, 1), cfg, explicit=config is not None)
+        trace = self._new_trace(observe)
+        gen = self._wave_events(g, cfg, progress, trace)
+        if tkey is None:
+            return gen
+        return self._observed_stream(gen, g, cfg, tkey, observe, trace)
+
+    def _observed_stream(self, gen, g, cfg, tkey, observe, trace):
+        """Forward a stream's chunks, then run the tuner's first-visit hook
+        on the summary (streams feed the tuner like enumerate does)."""
+        res = yield from gen
+        self._after_run(g, cfg, tkey, observe, trace, res)
+        return res
 
     def _wave_events(self, g: BitsetGraph, cfg: EngineConfig,
-                     progress: Callable[[dict], None] | None):
+                     progress: Callable[[dict], None] | None,
+                     trace: WaveTrace | None = None):
         """The wave driver loop as an event generator: yields drained mask
         chunks (store mode), returns the EnumerationResult (masks unset).
         Port of the PR-1 ``_enumerate_wave`` with the superstep dispatch
@@ -180,10 +300,10 @@ class CycleService:
         frontier, tri_masks, n_tri = T.initial_frontier(
             g, bucket=cfg.bucket, flags_fn=self._trip_flags(cfg))
 
-        stats = _new_stats()
+        trace = trace if trace is not None else disabled_trace()
         n_cycles = n_tri
         cnt = int(frontier.count)
-        stats["n_host_syncs"] += 1
+        trace.sync()
         history = [dict(step=0, T=cnt, C=n_tri)]
         limit = (cfg.max_iters if cfg.max_iters is not None
                  else max(g.n - 3, 0))
@@ -202,15 +322,24 @@ class CycleService:
                 raise RuntimeError(
                     "wave engine: no progress across relaunches")
             k = min(cfg.superstep_rounds, limit - it)
+            cap_in, cnt_in = frontier.capacity, cnt
             plan = self._wave_plan(g.n, g.m, frontier.capacity, cyc_cap, nw,
                                    delta, cfg)
+            fresh = plan.n_calls == 0
+            trace.tic()
             frontier, buf, r, status, th, ch, pn, pc = plan(
                 g, frontier, buf, jnp.int32(k))
-            stats["n_dispatches"] += 1
             (status_h, r_h, th_h, ch_h, pn_h, pc_h, cnt_h,
              bc_h) = jax.device_get(
                 (status, r, th, ch, pn, pc, frontier.count, buf.count))
-            stats["n_host_syncs"] += 1
+            trace.sync()
+            trace.dispatch(
+                kind="superstep", bucket=cap_in, cyc_cap=cyc_cap, budget=k,
+                rounds=int(r_h), status=STATUS_NAMES[int(status_h)],
+                t_sizes=th_h[:int(r_h)], c_counts=ch_h[:int(r_h)],
+                enter_count=cnt_in, exit_count=int(cnt_h),
+                pending_new=int(pn_h), pending_cyc=int(pc_h),
+                cyc_fill=int(bc_h), t_ms=trace.toc_ms(), fresh=fresh)
 
             for i in range(int(r_h)):
                 n_cycles += int(ch_h[i])
@@ -227,8 +356,8 @@ class CycleService:
                 # alone exceeds the current buffer.
                 if int(bc_h):
                     yield np.asarray(buf.masks[:int(bc_h)])
-                    stats["n_host_syncs"] += 1
-                    stats["n_drains"] += 1
+                    trace.sync()
+                    trace.drain()
                 cyc_cap = max(cyc_cap, cfg.bucket(max(int(pc_h), 1)))
                 buf = empty_cycle_buffer(cyc_cap, nw)
             elif status_h == _GROW:
@@ -239,7 +368,7 @@ class CycleService:
                     cfg.bucket(max(int(pn_h), 1))
                     << max(cfg.grow_headroom, 0))
                 frontier = with_capacity(frontier, new_cap)
-                stats["n_bucket_transitions"] += 1
+                trace.transition()
             elif status_h in (_RUN, _SHRINK) and cnt > 0:
                 # round budget exhausted / wave decayed below the bucket:
                 # shrink as the wave dies down (bounds dead-row work, like
@@ -247,7 +376,7 @@ class CycleService:
                 new_cap = cfg.bucket(max(cnt, 1))
                 if new_cap < frontier.capacity:
                     frontier = with_capacity(frontier, new_cap)
-                    stats["n_bucket_transitions"] += 1
+                    trace.transition()
             elif status_h == _DONE:
                 break
 
@@ -255,15 +384,13 @@ class CycleService:
             bc = int(jax.device_get(buf.count))
             if bc:
                 yield np.asarray(buf.masks[:bc])
-                stats["n_drains"] += 1
-            stats["n_host_syncs"] += 1
+                trace.drain()
+            trace.sync()
 
-        stats["rounds"] = it
-        stats["rounds_per_dispatch"] = it / max(stats["n_dispatches"], 1)
-        stats["syncs_per_round"] = stats["n_host_syncs"] / max(it, 1)
         return EnumerationResult(
             n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=None,
-            iterations=it, history=history, stats=stats)
+            iterations=it, history=history, stats=trace.finalize(rounds=it),
+            trace=trace if trace.enabled else None)
 
     # -- execute: graph batch ---------------------------------------------
 
@@ -295,6 +422,12 @@ class CycleService:
 
         B = len(graphs)
         n_pad, m_pad, delta = batch_shape(graphs)
+        # the whole batch runs at the padded shape, so the padded shape IS
+        # the workload class: tuned knobs resolve from it (lookup-only —
+        # per-lane histories are not observed back into the tuner).
+        cfg, _, _ = self._resolve_config(n_pad, m_pad, delta, cfg,
+                                         explicit=config is not None)
+        trace = self._new_trace(False)
         gbat = batch_graphs(graphs)
         nw = gbat.adj_bits.shape[-1]
 
@@ -315,9 +448,8 @@ class CycleService:
                    if cfg.store else 1)
         bufbat = empty_cycle_buffer(cyc_cap, nw, batch=B)
 
-        stats = _new_stats()
         cnts = np.asarray(jax.device_get(fbat.count), np.int64)
-        stats["n_host_syncs"] += 1
+        trace.sync()
         limits = np.array([max(g.n - 3, 0) for g in graphs], np.int64)
         if cfg.max_iters is not None:
             limits = np.minimum(limits, cfg.max_iters)
@@ -337,15 +469,28 @@ class CycleService:
                 raise RuntimeError(
                     "batched wave engine: no progress across relaunches")
             k_i = np.where(active, np.minimum(K, limits - its), 0)
+            cap_in, live_in = cap, int(cnts.sum())
             plan = self._wave_plan(n_pad, m_pad, cap, cyc_cap, nw, delta,
                                    cfg, batch=B)
+            fresh = plan.n_calls == 0
+            trace.tic()
             fbat, bufbat, r, status, th, ch, pn, pc = plan(
                 gbat, fbat, bufbat, jnp.asarray(k_i, jnp.int32))
-            stats["n_dispatches"] += 1
             (status_h, r_h, th_h, ch_h, pn_h, pc_h, cnt_h,
              bc_h) = jax.device_get(
                 (status, r, th, ch, pn, pc, fbat.count, bufbat.count))
-            stats["n_host_syncs"] += 1
+            trace.sync()
+            lane_statuses = {int(s) for s in np.asarray(status_h)}
+            agg = next(s for s in (_DRAIN, _GROW, _SHRINK, _RUN, _DONE)
+                       if s in lane_statuses)
+            trace.dispatch(
+                kind="batch", bucket=cap_in, cyc_cap=cyc_cap,
+                budget=int(k_i.max()), rounds=int(np.asarray(r_h).max()),
+                status=STATUS_NAMES[agg],
+                enter_count=live_in,
+                exit_count=int(np.asarray(cnt_h).sum()),
+                cyc_fill=int(np.asarray(bc_h).sum()),
+                t_ms=trace.toc_ms(), fresh=fresh)
 
             for i in range(B):
                 for j in range(int(r_h[i])):
@@ -367,8 +512,8 @@ class CycleService:
                     bc = int(bc_h[i])
                     if bc:
                         chunks[i].append(masks_h[i, :bc].copy())
-                        stats["n_drains"] += 1
-                stats["n_host_syncs"] += 1
+                        trace.drain()
+                trace.sync()
                 # regrow only from the lanes that actually overflowed —
                 # a simultaneous GROW lane's pending_cyc is an aborted
                 # round's size, not a drain signal.
@@ -385,7 +530,7 @@ class CycleService:
                 if new_cap != cap:
                     fbat = with_capacity_batched(fbat, new_cap)
                     cap = new_cap
-                    stats["n_bucket_transitions"] += 1
+                    trace.transition()
             elif not drains.any() and cnts.max() > 0:
                 # no transition forced a relaunch size-up: shrink to the
                 # largest live lane as the waves die down (skip on the
@@ -395,7 +540,7 @@ class CycleService:
                 if new_cap < cap:
                     fbat = with_capacity_batched(fbat, new_cap)
                     cap = new_cap
-                    stats["n_bucket_transitions"] += 1
+                    trace.transition()
             active = (its < limits) & (cnts > 0)
 
         if cfg.store:
@@ -405,14 +550,10 @@ class CycleService:
                 for i in range(B):
                     if int(bc_h[i]):
                         chunks[i].append(masks_h[i, :int(bc_h[i])].copy())
-                        stats["n_drains"] += 1
-            stats["n_host_syncs"] += 1
+                        trace.drain()
+            trace.sync()
 
-        stats["rounds"] = int(its.max())
-        stats["rounds_per_dispatch"] = (int(its.max())
-                                        / max(stats["n_dispatches"], 1))
-        stats["syncs_per_round"] = (stats["n_host_syncs"]
-                                    / max(int(its.max()), 1))
+        stats = trace.finalize(rounds=int(its.max()))
         results = []
         for i in range(B):
             masks = None

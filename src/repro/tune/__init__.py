@@ -1,0 +1,46 @@
+"""repro.tune — wave-shape telemetry, cost model, and persistent autotuner.
+
+The first subsystem that closes the loop from measurement to configuration
+(DESIGN.md §6.6). Four layers:
+
+* ``telemetry``  — ``WaveTrace`` / ``TraceEvent``: structured per-dispatch
+                   wave-shape recording (near-zero overhead when disabled);
+* ``cost_model`` — ``WaveProfile`` + ``replay`` + ``CostModel``: score a
+                   candidate ``EngineConfig`` without running it;
+* ``autotune``   — ``AutoTuner``: model-guided knob search with optional
+                   measured trials, per workload class;
+* ``store``      — ``TuneStore`` / ``TuneKey``: versioned on-disk JSON
+                   cache of tuned knobs (LRU-bounded), the warm-hit path.
+
+Exports resolve lazily so ``repro.core`` modules can import
+``repro.tune.telemetry`` without triggering the autotuner (which would
+otherwise re-enter ``repro.core`` mid-import).
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "TraceEvent": ".telemetry", "WaveTrace": ".telemetry",
+    "disabled_trace": ".telemetry", "STATUSES": ".telemetry",
+    "WaveProfile": ".cost_model", "ReplaySummary": ".cost_model",
+    "replay": ".cost_model", "CostModel": ".cost_model",
+    "DEFAULT_COEFFS": ".cost_model",
+    "AutoTuner": ".autotune", "TuneSpace": ".autotune",
+    "TUNED_KNOBS": ".autotune",
+    "TuneStore": ".store", "TuneKey": ".store", "shape_class": ".store",
+    "SCHEMA_VERSION": ".store",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.tune' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod, __name__), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,182 @@
+"""Autotuner — the search layer of ``repro.tune``.
+
+Closes the loop from measurement to configuration: a recorded wave profile
+(telemetry) is replayed under every candidate knob set (cost model), the
+candidates are ranked, optionally the top few are actually run and timed
+(measured trials), and the winner is written to the persistent store so the
+next same-class request skips everything.
+
+The searched knobs are exactly the ones DESIGN.md §6.4 flags as
+shape-dependent — ``superstep_rounds`` (K), ``growth_bits``,
+``grow_headroom``, and (store mode) ``cycle_buffer_rows``. All four are
+equivalence-preserving by construction (a guarded round is never applied;
+the relaunch re-executes it bit-identically), which is property-tested in
+``tests/test_tune.py``: a tuned config must produce bit-identical
+``cycle_masks`` to the default config.
+
+The base config is always one of the candidates, so with measured trials
+the tuner can never pick a knob set that measured WORSE than the default —
+the invariant ``benchmarks/engine_bench.py::tune_smoke`` asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from .cost_model import CostModel, WaveProfile
+from .store import TuneKey, TuneStore, shape_class
+
+# the shape-dependent, equivalence-preserving knobs the tuner may touch
+TUNED_KNOBS = ("superstep_rounds", "growth_bits", "grow_headroom",
+               "cycle_buffer_rows")
+
+
+def _device_kind() -> str:
+    import jax
+    try:
+        return jax.devices()[0].platform
+    except Exception:  # pragma: no cover - no backend at all
+        return "unknown"
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpace:
+    """The searched knob grid (defaults span the regimes §6.4 measured:
+    small K for CPU-interpret dispatch costs, large K for accelerators;
+    fine vs coarse buckets; headroom 0-2)."""
+    superstep_rounds: tuple = (4, 8, 16, 32)
+    growth_bits: tuple = (1, 2)
+    grow_headroom: tuple = (0, 1, 2)
+    cycle_buffer_rows: tuple = (1024, 4096, 16384)
+
+    def knob_sets(self, base_cfg) -> list[dict]:
+        """Every candidate as a knob dict; the base config's own knobs are
+        always candidate 0 (the do-nothing option)."""
+        axes = dict(superstep_rounds=self.superstep_rounds,
+                    growth_bits=self.growth_bits,
+                    grow_headroom=self.grow_headroom)
+        if base_cfg.store:
+            axes["cycle_buffer_rows"] = self.cycle_buffer_rows
+        base = {k: getattr(base_cfg, k) for k in axes}
+        names = list(axes)
+        out, seen = [base], {tuple(base[k] for k in names)}
+        for combo in itertools.product(*(axes[k] for k in names)):
+            if combo in seen:
+                continue
+            seen.add(combo)
+            out.append(dict(zip(names, combo)))
+        return out
+
+
+class AutoTuner:
+    """Per-workload-class knob search with a persistent warm path.
+
+    ``trials=0`` (default) ranks purely by the cost model — cheap enough to
+    run inline in a service request. ``trials=N`` with a ``measure``
+    callable additionally times the model's top-N candidates (base config
+    included) and picks the measured winner.
+    """
+
+    def __init__(self, store: TuneStore | None = None,
+                 model: CostModel | None = None,
+                 space: TuneSpace | None = None,
+                 trials: int = 0, objective: str = "warm",
+                 device_kind: str | None = None):
+        self.store = store if store is not None else TuneStore()
+        self.model = model if model is not None else CostModel()
+        self.space = space if space is not None else TuneSpace()
+        self.trials = trials
+        self.objective = objective
+        self._device_kind = device_kind
+        self._counters = dict(searches=0, candidates_scored=0, trials_run=0,
+                              warm_hits=0, lookup_misses=0, observations=0)
+
+    # -- identity --------------------------------------------------------
+
+    @property
+    def device_kind(self) -> str:
+        if self._device_kind is None:
+            self._device_kind = _device_kind()
+        return self._device_kind
+
+    def key_for(self, n: int, m: int, delta: int, cfg) -> TuneKey:
+        return TuneKey(shape=shape_class(n, m, delta), store=cfg.store,
+                       formulation=cfg.formulation, backend=cfg.backend,
+                       engine=cfg.engine, device_kind=self.device_kind)
+
+    # -- warm path -------------------------------------------------------
+
+    def lookup(self, key: TuneKey, cfg):
+        """Stored tuned config for ``key`` (no search, no trace), or None."""
+        knobs = self.store.get(key)
+        if knobs is None:
+            self._counters["lookup_misses"] += 1
+            return None
+        self._counters["warm_hits"] += 1
+        return self.apply(knobs, cfg)
+
+    @staticmethod
+    def apply(knobs: dict, cfg):
+        """Overlay tuned knobs on a base config (only TUNED_KNOBS; every
+        correctness-relevant field of ``cfg`` is preserved verbatim)."""
+        tuned = {k: v for k, v in knobs.items() if k in TUNED_KNOBS}
+        return dataclasses.replace(cfg, **tuned)
+
+    # -- search ----------------------------------------------------------
+
+    def tune(self, profile: WaveProfile, base_cfg, *,
+             key: TuneKey | None = None, traces=(), measure=None):
+        """Search the knob space for ``profile``; returns the tuned config.
+
+        ``traces`` (recorded ``WaveTrace``s with timings) refit the cost
+        model first; ``measure(cfg) -> ms`` enables measured trials of the
+        model's top candidates. With ``key``, the winner is persisted.
+        """
+        self._counters["searches"] += 1
+        if traces:
+            self.model.fit(traces)
+        candidates = self.space.knob_sets(base_cfg)
+        scored = sorted(
+            ((self.model.score(profile, self.apply(kn, base_cfg),
+                               objective=self.objective), i, kn)
+             for i, kn in enumerate(candidates)),
+            key=lambda t: (t[0], t[1]))
+        self._counters["candidates_scored"] += len(scored)
+        source, best_ms, best = "model", scored[0][0], scored[0][2]
+        if measure is not None and self.trials > 0:
+            pool = [kn for _, _, kn in scored[:self.trials]]
+            if candidates[0] not in pool:   # base config always measured
+                pool.append(candidates[0])
+            timed = []
+            for kn in pool:
+                ms = float(measure(self.apply(kn, base_cfg)))
+                timed.append((ms, kn))
+                self._counters["trials_run"] += 1
+            best_ms, best = min(timed, key=lambda t: t[0])
+            source = "measured"
+        if key is not None:
+            self.store.put(key, best, meta=dict(
+                source=source, score_ms=round(best_ms, 4),
+                objective=self.objective,
+                n_candidates=len(candidates),
+                profile=dict(rounds=len(profile.t_sizes),
+                             peak=profile.peak, n0=profile.n0),
+                model=self.model.to_json()))
+        return self.apply(best, base_cfg)
+
+    def observe(self, key: TuneKey, base_cfg, history, *, n: int, nw: int,
+                traces=(), measure=None):
+        """Convenience: profile a finished run's history, then ``tune``.
+        This is the service's first-visit hook (record → model → store)."""
+        self._counters["observations"] += 1
+        profile = WaveProfile.from_history(
+            history, n=n, nw=nw, max_iters=base_cfg.max_iters)
+        return self.tune(profile, base_cfg, key=key, traces=traces,
+                         measure=measure)
+
+    # -- stats -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        out = dict(self._counters)
+        out["store"] = self.store.stats()
+        return out

@@ -1,0 +1,297 @@
+"""Analytic dispatch-cost model — the scoring layer of ``repro.tune``.
+
+Key observation (DESIGN.md §6.6): the per-round wave shape — how many
+chordless paths are alive after each expansion round, how many cycles each
+round closes — is a property of the GRAPH, not of the engine knobs. A
+guarded round that overflows is never applied (the relaunch re-executes it
+bit-identically), so every knob assignment walks the exact same |T|/|C|
+sequence; knobs only change HOW the walk is chopped into dispatches and how
+much padding each dispatch drags along. That makes candidate scoring a pure
+host-side computation:
+
+* ``WaveProfile``  — the knob-independent wave shape, extracted from any
+                    run's ``history`` (or a recorded ``WaveTrace``).
+* ``replay``       — a digital twin of the host driver loop
+                    (``core.service._wave_events`` + the superstep's guard
+                    logic): chops a profile into dispatches under a
+                    candidate config and returns the dispatch/sync/waste
+                    accounting that run WOULD have had.
+* ``CostModel``    — converts a replay into milliseconds:
+                    ``a·dispatches + b·row_work + c·syncs (+ d·programs)``,
+                    with (a, b) least-squares fitted from recorded traces
+                    (warm dispatches only; fresh-program dispatches fit the
+                    compile term ``d``). Falls back to conservative CPU
+                    defaults when no timed traces exist, so model-guided
+                    ranking works even trace-free.
+
+The replay is exact by construction and is property-tested against the real
+driver's counters (``tests/test_tune.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .telemetry import STATUSES
+
+# exit statuses by canonical name (single source: telemetry.STATUSES)
+_RUN, _DONE, _GROW, _DRAIN, _SHRINK = STATUSES
+
+
+# ---------------------------------------------------------------------------
+# The knob-independent wave shape
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WaveProfile:
+    """Per-round wave shape of one enumeration, independent of engine knobs.
+
+    ``t_sizes[i]`` is |T| after round i+1; ``c_counts[i]`` the cycles closed
+    by round i+1 (triangles are stage-1 output and never touch the ring).
+    """
+    n: int                     # |V| (sets the |V|-3 round budget)
+    nw: int                    # mask words per row
+    n0: int                    # initial frontier size (stage-1 triplets)
+    t_sizes: tuple[int, ...]
+    c_counts: tuple[int, ...]
+    max_iters: int | None = None
+
+    @property
+    def limit(self) -> int:
+        lim = max(self.n - 3, 0)
+        return lim if self.max_iters is None else min(lim, self.max_iters)
+
+    @property
+    def peak(self) -> int:
+        return max((self.n0,) + self.t_sizes, default=0)
+
+    @classmethod
+    def from_history(cls, history, *, n: int, nw: int,
+                     max_iters: int | None = None) -> "WaveProfile":
+        """Build from ``EnumerationResult.history`` (step-0 entry holds the
+        initial |T| and the triangle count; later C entries are cumulative)."""
+        if not history:
+            return cls(n=n, nw=nw, n0=0, t_sizes=(), c_counts=())
+        t = tuple(int(h["T"]) for h in history[1:])
+        cum = [int(h["C"]) for h in history]
+        c = tuple(cum[i + 1] - cum[i] for i in range(len(cum) - 1))
+        return cls(n=n, nw=nw, n0=int(history[0]["T"]), t_sizes=t,
+                   c_counts=c, max_iters=max_iters)
+
+    def to_json(self) -> dict:
+        return dict(n=self.n, nw=self.nw, n0=self.n0,
+                    t_sizes=list(self.t_sizes), c_counts=list(self.c_counts),
+                    max_iters=self.max_iters)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WaveProfile":
+        return cls(n=int(d["n"]), nw=int(d["nw"]), n0=int(d["n0"]),
+                   t_sizes=tuple(d["t_sizes"]), c_counts=tuple(d["c_counts"]),
+                   max_iters=d.get("max_iters"))
+
+
+# ---------------------------------------------------------------------------
+# Replay: the host driver as a pure function of (profile, config)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplaySummary:
+    """What one (profile, config) run would cost, in driver events."""
+    n_dispatches: int
+    n_host_syncs: int
+    n_bucket_transitions: int
+    n_drains: int
+    rounds: int
+    row_work: int             # row·word units over every attempted round
+    padded_waste: int         # the dead-row share of row_work
+    n_programs: int           # distinct (bucket, cyc_cap) shapes → compiles
+    peak_bucket: int
+    by_cause: dict
+
+
+def replay(profile: WaveProfile, cfg) -> ReplaySummary:
+    """Digital twin of ``core.service._wave_events`` for a candidate config.
+
+    ``cfg`` is duck-typed: needs ``bucket()``, ``store``,
+    ``superstep_rounds``, ``grow_headroom``, ``cycle_buffer_rows``. Mirrors
+    the driver exactly — superstep guard order (ring check happens with the
+    frontier check; GROW outranks DRAIN on a double overflow), SHRINK decay
+    threshold at cap//4 (buckets ≤16 never shrink), pending sizes choosing
+    the next bucket, and the ring carrying its fill across dispatches.
+    """
+    limit = profile.limit
+    t, c = profile.t_sizes, profile.c_counts
+    nw = max(profile.nw, 1)
+    cnt = profile.n0
+    cap = cfg.bucket(max(cnt, 1))
+    cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
+    K = cfg.superstep_rounds
+
+    dispatches = syncs = transitions = drains = 0
+    row_work = waste = 0
+    by_cause: dict[str, int] = {}
+    programs = set()
+    peak = cap
+    fill = 0
+    syncs += 1                      # stage-1 count readback
+    it = 0
+    # a consistent profile ends with |T|=0 or at the round budget; the
+    # len(t) bound additionally keeps truncated profiles (max_iters probes)
+    # from overrunning
+    while it < min(limit, len(t)) and cnt > 0:
+        k = min(K, limit - it)
+        programs.add((cap, cyc_cap))
+        peak = max(peak, cap)
+        shrink_below = cap // 4 if cap > 16 else 0
+        r = 0
+        status = _RUN
+        pn = pc = 0
+        enter = cnt
+        while status == _RUN and r < k and cnt > 0 and it + r < len(t):
+            n_new, n_cyc = t[it + r], c[it + r]
+            ok_f = n_new <= cap
+            ok_c = (fill + n_cyc <= cyc_cap) if cfg.store else True
+            row_work += cap * nw
+            waste += max(cap - max(cnt, 1), 0) * nw
+            if not (ok_f and ok_c):
+                status = _DRAIN if ok_f else _GROW
+                pn, pc = n_new, n_cyc
+                break
+            r += 1
+            fill += n_cyc if cfg.store else 0
+            cnt = n_new
+            if 0 < n_new <= shrink_below:
+                status = _SHRINK
+        if status in (_RUN, _SHRINK) and cnt == 0:
+            status = _DONE
+        dispatches += 1
+        syncs += 1
+        by_cause[status] = by_cause.get(status, 0) + 1
+        it += r
+        if status == _DRAIN:
+            if fill:
+                syncs += 1
+                drains += 1
+                fill = 0
+            cyc_cap = max(cyc_cap, cfg.bucket(max(pc, 1)))
+        elif status == _GROW:
+            cap = cfg.bucket(cfg.bucket(max(pn, 1))
+                             << max(cfg.grow_headroom, 0))
+            transitions += 1
+        elif status in (_RUN, _SHRINK) and cnt > 0:
+            new_cap = cfg.bucket(max(cnt, 1))
+            if new_cap < cap:
+                cap = new_cap
+                transitions += 1
+        elif status == _DONE:
+            break
+    if cfg.store:
+        syncs += 1
+        if fill:
+            drains += 1
+    return ReplaySummary(
+        n_dispatches=dispatches, n_host_syncs=syncs,
+        n_bucket_transitions=transitions, n_drains=drains, rounds=it,
+        row_work=row_work, padded_waste=waste, n_programs=len(programs),
+        peak_bucket=peak, by_cause=by_cause)
+
+
+# ---------------------------------------------------------------------------
+# Milliseconds: fitted linear model over replay terms
+# ---------------------------------------------------------------------------
+
+# conservative CPU-interpret defaults (measured magnitudes on the smoke
+# grids); relative ranking — the autotuner's need — is robust to these.
+DEFAULT_COEFFS = dict(dispatch_ms=0.6, ms_per_mrow=180.0, sync_ms=0.05,
+                      compile_ms=150.0)
+
+
+@dataclasses.dataclass
+class CostModel:
+    """ms ≈ dispatch_ms·D + ms_per_mrow·(rows_attempted/1e6) + sync_ms·S
+    (+ compile_ms·P when scoring the cold objective)."""
+    dispatch_ms: float = DEFAULT_COEFFS["dispatch_ms"]
+    ms_per_mrow: float = DEFAULT_COEFFS["ms_per_mrow"]
+    sync_ms: float = DEFAULT_COEFFS["sync_ms"]
+    compile_ms: float = DEFAULT_COEFFS["compile_ms"]
+    n_fit_events: int = 0
+
+    # -- fitting ---------------------------------------------------------
+
+    def fit(self, traces) -> "CostModel":
+        """Least-squares (a, b) from warm dispatch events of recorded
+        ``WaveTrace``s; fresh-program events calibrate ``compile_ms``.
+        Traces without timings (or too few points) leave defaults in place.
+        Returns self (chainable)."""
+        warm_x, warm_y, fresh = [], [], []
+        for tr in traces:
+            for e in getattr(tr, "events", []):
+                if e.t_ms <= 0.0:
+                    continue
+                if e.kind != "superstep":
+                    # only single-graph wave dispatches have the 1-event ↔
+                    # 1-launch ↔ bucket·rounds row-work correspondence the
+                    # model assumes: 'batch' events advance B lanes per
+                    # bucket (no lane count in the event), and host 'round'
+                    # events fold 2-3 launches + a sync into one t_ms
+                    continue
+                x = e.rounds_attempted * e.bucket  # frontier-row units
+                if e.fresh:
+                    fresh.append((x, e.t_ms))
+                else:
+                    warm_x.append(x)
+                    warm_y.append(e.t_ms)
+        if len(warm_x) >= 3 and len(set(warm_x)) >= 2:
+            A = np.stack([np.ones(len(warm_x)), np.asarray(warm_x) / 1e6],
+                         axis=1)
+            sol, *_ = np.linalg.lstsq(A, np.asarray(warm_y), rcond=None)
+            a, b = float(sol[0]), float(sol[1])
+            if a > 0 and b > 0:     # degenerate fits keep the defaults
+                self.dispatch_ms, self.ms_per_mrow = a, b
+                self.n_fit_events = len(warm_x)
+        if fresh:
+            over = [t - self.predict_dispatch(x) for x, t in fresh]
+            est = float(np.median(over))
+            if est > 0:
+                self.compile_ms = est
+        return self
+
+    def predict_dispatch(self, row_units: float) -> float:
+        return self.dispatch_ms + self.ms_per_mrow * row_units / 1e6
+
+    # -- scoring ---------------------------------------------------------
+
+    def score(self, profile: WaveProfile, cfg, *,
+              objective: str = "warm") -> float:
+        """Predicted ms for one enumeration of ``profile`` under ``cfg``.
+        ``objective='warm'`` assumes programs are cached (steady-state
+        serving); ``'cold'`` charges each distinct shape a compile."""
+        rep = replay(profile, cfg)
+        rows = rep.row_work / max(profile.nw, 1)  # back to row units
+        ms = (self.dispatch_ms * rep.n_dispatches
+              + self.ms_per_mrow * rows / 1e6
+              + self.sync_ms * rep.n_host_syncs)
+        if objective == "cold":
+            ms += self.compile_ms * rep.n_programs
+        return ms
+
+    def breakdown(self, profile: WaveProfile, cfg, *,
+                  objective: str = "warm") -> dict:
+        rep = replay(profile, cfg)
+        return dict(score_ms=round(self.score(profile, cfg,
+                                              objective=objective), 4),
+                    objective=objective,
+                    n_dispatches=rep.n_dispatches,
+                    n_host_syncs=rep.n_host_syncs,
+                    n_bucket_transitions=rep.n_bucket_transitions,
+                    n_drains=rep.n_drains,
+                    row_work=rep.row_work, padded_waste=rep.padded_waste,
+                    n_programs=rep.n_programs, peak_bucket=rep.peak_bucket,
+                    by_cause=dict(rep.by_cause))
+
+    def to_json(self) -> dict:
+        return dict(dispatch_ms=self.dispatch_ms,
+                    ms_per_mrow=self.ms_per_mrow,
+                    sync_ms=self.sync_ms, compile_ms=self.compile_ms,
+                    n_fit_events=self.n_fit_events)

@@ -1,0 +1,185 @@
+"""Wave-shape telemetry — the measurement layer of ``repro.tune``.
+
+The wave engine's per-dispatch history (frontier occupancy, bucket
+transitions, cycle-buffer fill) used to live in an ad-hoc ``stats`` dict and
+was thrown away after each run. This module turns it into a structured,
+recordable stream:
+
+* ``TraceEvent``  — one host↔device interaction (a wave superstep dispatch,
+                    a legacy host-engine round, or a batched superstep),
+                    carrying the full wave shape of that dispatch: bucket
+                    capacity, per-round frontier sizes and cycle counts,
+                    exit status (by CAUSE: GROW / SHRINK / DRAIN / DONE /
+                    RUN), pending sizes of an aborted round, cycle-buffer
+                    fill, and host wall time.
+* ``WaveTrace``   — the recorder. Aggregate counters (dispatches, syncs,
+                    transitions-by-cause, drains) are ALWAYS maintained —
+                    they are a handful of int adds and back the legacy
+                    ``EnumerationResult.stats`` dict — but per-dispatch
+                    ``TraceEvent`` objects are retained only when the trace
+                    is ``enabled``: the disabled recorder allocates nothing
+                    per dispatch beyond those adds (near-zero overhead).
+
+The schema is deliberately free of any ``repro.core`` import so the engine
+can emit events without an import cycle (core → tune.telemetry only).
+DESIGN.md §6.6 documents the schema; ``cost_model.WaveProfile`` consumes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+# Canonical exit-status names (the wave superstep's transition causes).
+# ``FULL`` in the issue's vocabulary is the cycle-ring overflow — engine
+# code calls it DRAIN; both names resolve to the same cause here.
+STATUSES = ("RUN", "DONE", "GROW", "DRAIN", "SHRINK")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One recorded host↔device interaction (see DESIGN.md §6.6).
+
+    ``t_sizes`` / ``c_counts`` are the per-APPLIED-round frontier sizes and
+    cycle counts inside this dispatch (length == ``rounds``); an aborted
+    round's exact sizes ride in ``pending_new`` / ``pending_cyc`` instead.
+    ``bucket`` is the frontier capacity the dispatch ran at, ``enter_count``
+    the live rows on entry — their difference is the padded-row waste the
+    cost model charges for.
+    """
+    kind: str                  # 'superstep' | 'round' | 'batch' | 'drain'
+    bucket: int                # frontier capacity (rows) during the dispatch
+    cyc_cap: int               # CycleBuffer capacity (1 in count-only mode)
+    budget: int                # round budget k granted to the dispatch
+    rounds: int                # rounds actually applied
+    status: str                # one of STATUSES
+    t_sizes: tuple[int, ...]   # per-round |T'| (frontier size after round)
+    c_counts: tuple[int, ...]  # per-round |C| found
+    enter_count: int           # live frontier rows on entry
+    exit_count: int            # live frontier rows on exit
+    pending_new: int           # aborted round's exact |T'| (GROW) or 0
+    pending_cyc: int           # aborted round's exact |C| (DRAIN) or 0
+    cyc_fill: int              # CycleBuffer fill on exit
+    t_ms: float                # host wall time of the dispatch (incl. sync)
+    fresh: bool = False        # first execution of a fresh program (t_ms
+    #                            includes trace+compile; the cost-model fit
+    #                            separates these from warm dispatches)
+
+    @property
+    def rounds_attempted(self) -> int:
+        """Applied rounds plus the aborted attempt (GROW/DRAIN re-execute
+        the round after the host reacts — that attempt's row work is real)."""
+        return self.rounds + (1 if self.status in ("GROW", "DRAIN") else 0)
+
+    def row_work(self, n_words: int) -> int:
+        """Word-rows touched by this dispatch (dead rows included)."""
+        return self.rounds_attempted * self.bucket * n_words
+
+    def padded_waste(self, n_words: int) -> int:
+        """Word-rows spent on PADDING (bucket minus live rows), the dead-row
+        work the autotuner trades against dispatch count. Round i of the
+        dispatch entered with ``enter_count`` (i=0) or ``t_sizes[i-1]``
+        rows — matching ``cost_model.replay``'s per-round accounting."""
+        entries = ((self.enter_count,) + self.t_sizes)[:self.rounds_attempted]
+        return sum(max(self.bucket - max(e, 1), 0) for e in entries) * n_words
+
+
+class WaveTrace:
+    """Recorder for one enumeration run.
+
+    Counters always accumulate; ``events`` fills only when ``enabled``.
+    ``finalize(rounds)`` renders the legacy stats dict (the exact shape
+    ``EnumerationResult.stats`` has carried since PR 1) so existing
+    consumers — benchmarks, tests, BENCH_*.json baselines — see no change.
+    """
+
+    __slots__ = ("enabled", "events", "n_dispatches", "n_host_syncs",
+                 "n_bucket_transitions", "n_drains", "by_cause", "_t0")
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.events: list[TraceEvent] = []
+        self.n_dispatches = 0
+        self.n_host_syncs = 0
+        self.n_bucket_transitions = 0
+        self.n_drains = 0
+        self.by_cause: dict[str, int] = {}
+        self._t0 = 0.0
+
+    # -- timing ----------------------------------------------------------
+
+    def tic(self) -> None:
+        """Mark the start of a dispatch (cheap even when disabled — the
+        wall time also feeds the fitted cost model)."""
+        self._t0 = time.perf_counter()
+
+    def toc_ms(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e3
+
+    # -- recording -------------------------------------------------------
+
+    def sync(self, n: int = 1) -> None:
+        self.n_host_syncs += n
+
+    def launch(self, n: int = 1) -> None:
+        """Count device-program launches that are part of the CURRENT
+        dispatch event (the legacy host engine issues several per round;
+        pass ``launches=0`` to ``dispatch`` when counting this way)."""
+        self.n_dispatches += n
+
+    def drain(self) -> None:
+        self.n_drains += 1
+
+    def transition(self) -> None:
+        self.n_bucket_transitions += 1
+
+    def dispatch(self, *, kind: str, bucket: int, cyc_cap: int, budget: int,
+                 rounds: int, status: str, t_sizes=(), c_counts=(),
+                 enter_count: int = 0, exit_count: int = 0,
+                 pending_new: int = 0, pending_cyc: int = 0,
+                 cyc_fill: int = 0, t_ms: float = 0.0,
+                 fresh: bool = False, launches: int = 1) -> None:
+        self.n_dispatches += launches
+        self.by_cause[status] = self.by_cause.get(status, 0) + 1
+        if not self.enabled:
+            return
+        self.events.append(TraceEvent(
+            kind=kind, bucket=bucket, cyc_cap=cyc_cap, budget=budget,
+            rounds=rounds, status=status, t_sizes=tuple(int(t) for t in t_sizes),
+            c_counts=tuple(int(c) for c in c_counts),
+            enter_count=int(enter_count), exit_count=int(exit_count),
+            pending_new=int(pending_new), pending_cyc=int(pending_cyc),
+            cyc_fill=int(cyc_fill), t_ms=float(t_ms), fresh=bool(fresh)))
+
+    # -- summaries -------------------------------------------------------
+
+    @property
+    def rounds(self) -> int:
+        return sum(e.rounds for e in self.events)
+
+    def row_work(self, n_words: int) -> int:
+        return sum(e.row_work(n_words) for e in self.events)
+
+    def padded_waste(self, n_words: int) -> int:
+        return sum(e.padded_waste(n_words) for e in self.events)
+
+    def finalize(self, rounds: int) -> dict:
+        """Legacy ``EnumerationResult.stats`` dict + transition causes."""
+        out = dict(n_dispatches=self.n_dispatches,
+                   n_host_syncs=self.n_host_syncs,
+                   n_bucket_transitions=self.n_bucket_transitions,
+                   n_drains=self.n_drains,
+                   rounds=rounds,
+                   rounds_per_dispatch=rounds / max(self.n_dispatches, 1),
+                   syncs_per_round=self.n_host_syncs / max(rounds, 1))
+        if self.by_cause:
+            # one entry per DISPATCH exit status (sums to the number of
+            # recorded dispatch events, incl. RUN/DONE — not a transition
+            # count; n_bucket_transitions is the transition counter)
+            out["exit_causes"] = dict(self.by_cause)
+        return out
+
+
+def disabled_trace() -> WaveTrace:
+    """A counters-only recorder (no event retention)."""
+    return WaveTrace(enabled=False)

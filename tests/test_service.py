@@ -237,6 +237,58 @@ def test_stream_requires_store_mode():
         list(svc.stream(g))
 
 
+def test_stream_mesh_routed_raises_not_implemented():
+    """A mesh-routed config must fail stream() with a clear
+    NotImplementedError at call time — not the misleading store=True
+    error (mesh configs are count-only by construction), and never the
+    silent single-device path."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    svc = CycleService()
+    g = build_graph(*grid_graph(3, 3))
+    with pytest.raises(NotImplementedError, match="shard_map"):
+        svc.stream(g, config=EngineConfig(store=False, mesh=mesh))
+
+
+# ---------------------------------------------------------------------------
+# ProgramCache LRU eviction (max_plans)
+# ---------------------------------------------------------------------------
+
+def test_program_cache_lru_evicts_and_counts():
+    from repro.core.plan import ProgramCache
+    cache = ProgramCache(max_plans=2)
+    keys = [PlanKey(kind="wave", bucket=1 << (4 + i), nw=1, cyc_rows=1,
+                    delta=2, store=False, formulation="bitword",
+                    backend="jnp", k_max=8) for i in range(3)]
+    sentinels = [object() for _ in keys]
+    cache.get_or_build(keys[0], lambda: sentinels[0])
+    cache.get_or_build(keys[1], lambda: sentinels[1])
+    assert cache.get_or_build(keys[0], lambda: None) is sentinels[0]
+    cache.get_or_build(keys[2], lambda: sentinels[2])   # evicts LRU = keys[1]
+    assert cache.evictions == 1 and len(cache) == 2
+    assert keys[1] not in cache and keys[0] in cache
+    rebuilt = object()
+    assert cache.get_or_build(keys[1], lambda: rebuilt) is rebuilt
+    s = cache.stats()
+    assert s["evictions"] == 2 and s["max_plans"] == 2
+    with pytest.raises(ValueError, match="max_plans"):
+        ProgramCache(max_plans=0)
+
+
+def test_service_max_plans_bounds_cache_without_breaking_results():
+    cfg = EngineConfig(store=False, formulation="bitword")
+    bounded = CycleService(cfg, max_plans=1)
+    unbounded = CycleService(cfg)
+    for spec in [grid_graph(4, 4), grid_graph(3, 5), grid_graph(4, 4)]:
+        g = build_graph(*spec)
+        assert (bounded.enumerate(g).n_cycles
+                == unbounded.enumerate(g).n_cycles)
+    s = bounded.stats
+    assert s["programs"] <= 1 and s["evictions"] > 0
+    # trace accounting stays monotonic across evictions
+    assert s["n_traces"] == s["cache_misses"]
+
+
 # ---------------------------------------------------------------------------
 # Oracle equivalence through the new API (acceptance matrix)
 # ---------------------------------------------------------------------------
