@@ -12,8 +12,8 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 CODE = """
 import time, numpy as np, jax
 from jax.sharding import Mesh
-from repro.core import build_graph, enumerate_chordless_cycles
-from repro.core.distributed import enumerate_distributed, DistEnumConfig
+from repro.core import EngineConfig, build_graph
+from repro.core.distributed import enumerate_distributed
 from repro.core.graphs import grid_graph
 
 ndev = {ndev}
@@ -21,7 +21,9 @@ mesh = Mesh(np.array(jax.devices())[:ndev].reshape(ndev,), ('data',))
 n, edges = grid_graph(5, 9)
 g = build_graph(n, edges)
 t0 = time.perf_counter()
-out = enumerate_distributed(g, mesh, cfg=DistEnumConfig(local_capacity=1<<15, balance_block=128))
+out = enumerate_distributed(
+    g, mesh, cfg=EngineConfig(store=False, local_capacity=1<<15,
+                              balance_block=128))
 dt = time.perf_counter() - t0
 print(f"{{out['n_cycles']}},{{dt*1e3:.1f}},{{out['dropped']}}")
 """

@@ -269,6 +269,84 @@ def tune_smoke(out_path: str | None = None):
     return doc
 
 
+_DIST_SMOKE_CODE = """
+import json, time, numpy as np, jax
+from jax.sharding import Mesh
+from repro.core import (CycleService, EngineConfig, build_graph,
+                        enumerate_chordless_cycles)
+from repro.core.graphs import grid_graph
+
+ndev = 4
+mesh = Mesh(np.array(jax.devices())[:ndev].reshape(ndev,), ('data',))
+n, edges = grid_graph(5, 6)
+g = build_graph(n, edges)
+ref = enumerate_chordless_cycles(g, store=False).n_cycles
+rows = {}
+for arm, k in (('per_round', 1), ('superstep', 8)):
+    cfg = EngineConfig(store=False, mesh=mesh, local_capacity=1 << 13,
+                       balance_block=64, superstep_rounds=k)
+    svc = CycleService(cfg)
+    t0 = time.perf_counter()
+    res = svc.enumerate(g)
+    cold = time.perf_counter() - t0
+    warm = float('inf')
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = svc.enumerate(g)
+        warm = min(warm, time.perf_counter() - t0)
+    assert res.n_cycles == ref, (arm, res.n_cycles, ref)
+    s = res.stats
+    assert s['dropped'] == 0 and s['lost'] == 0, s
+    rows[arm] = dict(
+        arm=arm, superstep_rounds=k, n_cycles=res.n_cycles,
+        rounds=s['iterations'], n_dispatches=s['n_dispatches'],
+        n_host_syncs=s['n_host_syncs'],
+        t_cold_ms=round(cold * 1e3, 2), t_warm_ms=round(warm * 1e3, 2))
+print(json.dumps(rows))
+"""
+
+
+def dist_smoke(out_path: str | None = None):
+    """Sharded-path A/B: per-round driver (K=1, one dispatch + one sync per
+    round — the pre-superstep pattern) vs the sharded wave superstep (K=8)
+    on a 4-virtual-device mesh, equal cycle counts enforced. Runs in a
+    subprocess (the bench process must keep seeing 1 device), asserts the
+    >=2x dispatch/sync reduction, and writes
+    ``results/BENCH_dist_smoke.json``."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", _DIST_SMOKE_CODE], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+    pr, ss = rows["per_round"], rows["superstep"]
+    assert pr["n_cycles"] == ss["n_cycles"], rows
+    doc = dict(benchmark="dist_smoke", graph="Grid_5x6", n_devices=4,
+               rows=[pr, ss],
+               dispatch_reduction=round(
+                   pr["n_dispatches"] / max(ss["n_dispatches"], 1), 2),
+               sync_reduction=round(
+                   pr["n_host_syncs"] / max(ss["n_host_syncs"], 1), 2),
+               warm_speedup=round(
+                   pr["t_warm_ms"] / max(ss["t_warm_ms"], 1e-9), 2))
+    assert doc["dispatch_reduction"] >= 2.0, doc
+    path = out_path or os.path.join(RESULTS_DIR, "BENCH_dist_smoke.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"dist smoke: per-round {pr['n_dispatches']} dispatches / "
+          f"{pr['t_warm_ms']:.1f} ms, superstep {ss['n_dispatches']} / "
+          f"{ss['t_warm_ms']:.1f} ms "
+          f"({doc['dispatch_reduction']}x fewer dispatches, "
+          f"{doc['warm_speedup']}x warm) -> {path}")
+    return doc
+
+
 # paper's footnote scale, wave engine count-only — nightly, NOT in --smoke.
 # Grid_8x10 is the paper's 71.5M-cycle footnote graph (Table 1).
 NIGHTLY_GRAPHS = ["Grid_7x10", "Grid_8x10"]

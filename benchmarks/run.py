@@ -16,7 +16,9 @@ Sections:
 → results/BENCH_service_smoke.json), the tuned-vs-default autotuner A/B
 (→ results/BENCH_tune_smoke.json), plus the engine A/B JSON emission on
 the two smallest graphs. ``--nightly`` runs the paper's footnote-scale
-Grid_7x10 + Grid_8x10 count-only targets via the wave engine. ``--check``
+Grid_7x10 + Grid_8x10 count-only targets via the wave engine plus the
+sharded per-round-vs-superstep A/B (→ results/BENCH_dist_smoke.json,
+>=2x dispatch reduction asserted). ``--check``
 is the CI regression gate: it re-runs the smoke suite into a temp dir and
 fails (exit 1) if any tracked ms/graph metric regressed >25% against the
 committed ``results/BENCH_*.json`` baselines.
@@ -105,6 +107,17 @@ def check() -> int:
                     cmp(f"tune[{fresh['graph']}]",
                         fresh["tuned_ms_per_graph"],
                         b["tuned_ms_per_graph"])
+        base = _load_baseline("BENCH_dist_smoke.json")
+        if base:
+            print("== check: sharded wave superstep (warm ms) ==")
+            doc = engine_bench.dist_smoke(
+                out_path=os.path.join(tmp, "dist.json"))
+            by_arm = {r["arm"]: r for r in base["rows"]}
+            for fresh in doc["rows"]:
+                b = by_arm.get(fresh["arm"])
+                if b:
+                    cmp(f"dist[{fresh['arm']}]", fresh["t_warm_ms"],
+                        b["t_warm_ms"])
 
     if not checked:
         print("check: no committed baselines found — run --smoke first")
@@ -140,6 +153,8 @@ def main() -> None:
         from . import engine_bench
         print("== nightly (paper footnote scale, wave engine) ==")
         engine_bench.nightly()
+        print("\n== dist smoke (per-round vs sharded wave superstep) ==")
+        engine_bench.dist_smoke()
         return
 
     print("== engine A/B ==")

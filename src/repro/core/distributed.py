@@ -1,20 +1,45 @@
-"""Distributed chordless-cycle enumeration (shard_map over the data axis).
+"""Distributed chordless-cycle enumeration — the sharded wave superstep.
 
 Scaling story (DESIGN.md §5): the frontier — not the graph — is what
 explodes (14M live paths on Grid 7×10, unbounded in general), so we shard
-frontier ROWS across devices and replicate the (small) graph. Per round each
-device expands its local rows exactly as the single-device engine does.
+frontier ROWS across devices and replicate the (small) graph.
 
-Load balance: initial triplets are dealt round-robin, but DFS trees are
-lopsided, so every round we run one step of *diffusion load balancing*
-(Cybenko '89): each device donates a fixed-size block of tail rows to its
-ring neighbor iff its live count exceeds the neighbor's by more than the
-block size. ``collective_permute`` with static block shapes keeps XLA happy
-(no ragged all-to-all); repeated rounds diffuse load like a heat equation.
+This module is the sharded twin of the single-device wave engine
+(``engine.wave_superstep``): instead of one dispatch per round with a
+blocking ``int(total_live)`` host sync every iteration (the PR-1 pattern
+the wave engine eliminated), the driver fuses up to K expansion rounds PLUS
+in-loop diffusion load balancing into one jitted
+``shard_map(lax.while_loop)`` program. Termination is detected on device
+(the per-round ``psum`` of live counts is carried into the loop condition),
+so the host is re-entered only at superstep boundaries: host syncs drop
+from O(iterations) to O(iterations / K) — the sharded analogue of the wave
+engine's O(bucket transitions).
+
+Stage 1 is a device-side deal: the jitted triplet flags are computed on
+every device (replicated graph), each device takes the triplets whose RANK
+≡ its axis index (mod ndev) — the same round-robin deal the host used to
+perform — and cumsum-scatters them straight into its local shard of the
+frontier. No host-side nonzero, no H2D copy of every initial row.
+
+Load balance: DFS trees are lopsided, so on balance rounds each device
+donates a fixed-size block of tail rows to its ring neighbor iff its live
+count exceeds the neighbor's by more than the block size (diffusion load
+balancing, Cybenko '89). ``collective_permute`` with static block shapes
+keeps XLA happy (no ragged all-to-all). The receiver's live count arrives
+via the reverse permute, so a receiver without room for a full block
+REFUSES the donation (give = 0) — live rows are never dropped by balancing
+(``lost`` is a defensive counter that must stay 0; conservation is
+property-tested).
+
+Compilation and buffer donation are owned by ``core.plan.DistPlan``
+(``kind='dist'`` plans in the same ProgramCache the wave path warms);
+request routing and autotuning by ``core.service.CycleService`` —
+mesh-routed requests resolve ``superstep_rounds`` / ``local_capacity`` /
+``balance_every`` through ``repro.tune`` like single-device requests do.
 
 Fault tolerance: the sharded frontier + counters form a pytree —
-``checkpoint.save_pytree`` snapshots it every K rounds; a restart (possibly
-on a *different* device count) reshards via round-robin re-deal of live rows.
+``checkpoint.save_pytree`` snapshots it at superstep boundaries; a restart
+(possibly on a *different* device count) reshards via re-deal of live rows.
 
 Count-only mode (the paper's Grid 8×10 footnote) — cycle *bitmaps* stay
 device-local and could be all_gathered, but counting is the scalable output.
@@ -23,7 +48,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 import numpy as np
 import jax
@@ -32,29 +56,26 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .bitset_graph import BitsetGraph
-from .engine import EngineConfig
+from .engine import STATUS_NAMES, EngineConfig, EnumerationResult
 from .frontier import Frontier
 from . import expand as E
 from . import triplets as T
+from ..tune.telemetry import disabled_trace
+
+# sharded supersteps exit RUN (round budget spent) or DONE (wave died);
+# codes index telemetry.STATUSES like the single-device engine's.
+_RUN, _DONE = 0, 1
 
 
-@dataclasses.dataclass
-class DistEnumConfig:
-    """DEPRECATED compat shim — these knobs folded into ``EngineConfig``
-    (set ``EngineConfig(mesh=..., axis=..., store=False)`` and go through
-    ``CycleService``). Still accepted by ``enumerate_distributed``."""
-    local_capacity: int = 1 << 14     # frontier rows per device
-    balance_block: int = 256          # diffusion donation block (rows)
-    balance_every: int = 1            # rounds between balance steps
-    checkpoint_every: int = 0         # 0 = off
-    checkpoint_dir: str = "/tmp/repro_enum_ckpt"
-
-
-def as_engine_config(mesh: Mesh, axis: str,
-                     cfg: "EngineConfig | DistEnumConfig | None",
+def as_engine_config(mesh: Mesh, axis: str, cfg: EngineConfig | None,
                      max_iters: int | None = None) -> EngineConfig:
-    """Normalize any legacy config to a mesh-routed ``EngineConfig``."""
-    if isinstance(cfg, EngineConfig):
+    """Normalize to a mesh-routed ``EngineConfig``.
+
+    (The ``DistEnumConfig`` compat shim is gone — construct
+    ``EngineConfig(store=False, mesh=..., axis=...)`` directly.)"""
+    if cfg is None:
+        out = EngineConfig(store=False, mesh=mesh, axis=axis)
+    elif isinstance(cfg, EngineConfig):
         if cfg.mesh is not None and (cfg.mesh is not mesh
                                      or cfg.axis != axis):
             raise ValueError(
@@ -65,17 +86,19 @@ def as_engine_config(mesh: Mesh, axis: str,
         out = cfg if cfg.mesh is not None else dataclasses.replace(
             cfg, mesh=mesh, axis=axis)
     else:
-        kw = {}
-        if cfg is not None:  # DistEnumConfig
-            kw = dict(local_capacity=cfg.local_capacity,
-                      balance_block=cfg.balance_block,
-                      balance_every=cfg.balance_every,
-                      checkpoint_every=cfg.checkpoint_every,
-                      checkpoint_dir=cfg.checkpoint_dir)
-        out = EngineConfig(store=False, mesh=mesh, axis=axis, **kw)
+        raise TypeError(
+            "DistEnumConfig was removed; pass "
+            "EngineConfig(store=False, mesh=..., axis=...) — the old knobs "
+            "(local_capacity, balance_block, balance_every, "
+            "checkpoint_every, checkpoint_dir) live on EngineConfig now")
     if max_iters is not None:
         out = dataclasses.replace(out, max_iters=max_iters)
     return out
+
+
+def _fspec(axis: str) -> Frontier:
+    return Frontier(path=P(axis), blocked=P(axis), v1=P(axis), l2=P(axis),
+                    vlast=P(axis), count=P(axis))
 
 
 def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int):
@@ -93,6 +116,11 @@ def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str,
     give ∈ {0,1} per device. Sends are unconditional (static shapes); the
     *receiver* learns how many of the incoming rows are real via the
     permuted (give * k) counter and appends only those.
+
+    Returns (f', moved, lost): ``moved`` is the rows this device donated;
+    ``lost`` counts receiver-side overflow and is provably 0 when the
+    caller's ``give`` carries backpressure (see ``_balance``) — it is kept
+    as a defensive invariant, not a legal outcome.
     """
     cap = f.capacity
     cnt = f.count
@@ -122,143 +150,344 @@ def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str,
         vlast=f.vlast.at[dest].set(rblk.vlast, mode="drop"),
         count=new_cnt + appended,
     )
-    return f2, lost
+    return f2, k, lost
 
 
-def make_dist_step(mesh: Mesh, axis: str, g_spec, cfg, delta: int):
-    """Build the jitted per-round shard_map step (``cfg`` may be an
-    ``EngineConfig`` or the legacy ``DistEnumConfig`` — only
-    ``local_capacity``/``balance_block`` are read)."""
-    cap = cfg.local_capacity
-    block = cfg.balance_block
-    axis_size = int(mesh.shape[axis])  # static (lax.axis_size: newer jax)
-    fspec = Frontier(path=P(axis), blocked=P(axis), v1=P(axis), l2=P(axis),
-                     vlast=P(axis), count=P(axis))
+def _balance(f: Frontier, block: int, axis: str, axis_size: int, cap: int,
+             do_bal: jnp.ndarray):
+    """One diffusion step with receiver backpressure.
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(g_spec, fspec, P(axis)),
-        out_specs=(fspec, P(axis), P()),
-        check_rep=False)
-    def step(g, f, counters):
-        # local shards: path (cap, nw), count (1,), counters (1, 3)
-        f = Frontier(path=f.path, blocked=f.blocked, v1=f.v1, l2=f.l2,
-                     vlast=f.vlast, count=f.count[0])
-        f2, n_cyc, drop = _local_step(g, f, delta, cap)
+    Donate a block of tail rows to the RIGHT ring neighbor iff (a) my live
+    count exceeds theirs by more than the block and (b) they have room for
+    a full block. The neighbor's count arrives via the reverse permute, so
+    a device at capacity refuses donation (give=0) instead of letting the
+    receiver drop live rows. ``do_bal`` gates the whole step (``lax.cond``:
+    the collectives only execute on balance rounds). Returns
+    (f', moved, lost).
+    """
 
-        # diffusion balance: donate a tail block iff my load exceeds my
-        # RIGHT neighbor's by more than one block.
+    def run(f):
+        cnt = f.count
         perm_rev = [((i + 1) % axis_size, i) for i in range(axis_size)]
-        rcnt = jax.lax.ppermute(f2.count, axis, perm_rev)  # right's count
-        give = (f2.count > rcnt + block).astype(jnp.int32)
-        f2, lost = _donate(f2, give, block, axis, axis_size)
+        rcnt = jax.lax.ppermute(cnt, axis, perm_rev)  # right neighbor's count
+        give = ((cnt > rcnt + block)
+                & (cap - rcnt >= block)).astype(jnp.int32)
+        return _donate(f, give, block, axis, axis_size)
 
-        total_live = jax.lax.psum(f2.count, axis)
-        new_counters = counters + jnp.stack(
-            [n_cyc, drop + lost, jnp.int32(0)]).reshape(1, 3)
-        new_counters = new_counters.at[0, 2].set(f2.count)
-        f2 = Frontier(path=f2.path, blocked=f2.blocked, v1=f2.v1, l2=f2.l2,
-                      vlast=f2.vlast, count=f2.count[None])
-        return f2, new_counters, total_live
+    def skip(f):
+        return f, jnp.int32(0), jnp.int32(0)
+
+    return jax.lax.cond(do_bal, run, skip, f)
+
+
+def make_balance_step(mesh: Mesh, axis: str, cap: int, block: int):
+    """One jitted diffusion-balance step over a sharded frontier.
+
+    Test/debug surface: lets the conservation and backpressure properties
+    be probed in isolation (the superstep runs the same ``_balance``).
+    Returns ``step(f) -> (f', moved (ndev,), lost (ndev,))``.
+    """
+    axis_size = int(mesh.shape[axis])
+    fspec = _fspec(axis)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(fspec,),
+                       out_specs=(fspec, P(axis), P(axis)), check_rep=False)
+    def step(f):
+        f = dataclasses.replace(f, count=f.count[0])
+        f2, moved, lost = _balance(f, block, axis, axis_size, cap,
+                                   jnp.bool_(True))
+        return (dataclasses.replace(f2, count=f2.count[None]),
+                moved[None], lost[None])
 
     return jax.jit(step)
 
 
-def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None):
+# ---------------------------------------------------------------------------
+# Stage 1: device-side deal
+# ---------------------------------------------------------------------------
+
+def make_dist_deal(mesh: Mesh, axis: str, g_spec, cap: int, delta: int):
+    """Device-side stage 1: jitted triplet flags → rank-mod-ndev deal →
+    cumsum-scatter straight into the sharded frontier.
+
+    Replaces the host round-robin deal (host nonzero + python loop + H2D of
+    every initial row). Each device evaluates the replicated flag grid,
+    keeps the triplets whose rank ≡ its axis index (mod ndev) — the exact
+    rows the host deal would have sent it — and scatters them into its
+    local frontier shard. Triangles are counted by the same rank-sharing
+    trick and ``psum``-reduced.
+
+    Returns the UNJITTED shard_map callable
+    ``deal(g) -> (frontier, meta)`` with replicated
+    ``meta = [n_triangles, total_live, overflow]``.
+    """
+    axis_size = int(mesh.shape[axis])
+    fspec = _fspec(axis)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(g_spec,),
+                       out_specs=(fspec, P()), check_rep=False)
+    def deal(g):
+        me = jax.lax.axis_index(axis)
+        tri, trip = T.triplet_flags(g, delta)
+        flat_tri = tri.reshape(-1)
+        flat_trip = trip.reshape(-1)
+        n_grid = flat_trip.shape[0]
+        # deal triplet RANKS round-robin (the host deal's rows % ndev == d)
+        rank = jnp.cumsum(flat_trip.astype(jnp.int32)) - 1
+        mine = flat_trip & ((rank % axis_size) == me)
+        dest, total = E.compaction_dests(mine, cap)
+        idx = jnp.zeros((cap,), jnp.int32).at[dest].set(
+            jnp.arange(n_grid, dtype=jnp.int32), mode="drop")
+        f = T.gather_triplets(g, idx, jnp.minimum(total, cap), cap)
+        overflow = jax.lax.psum(jnp.maximum(total - cap, 0), axis)
+        # triangles: count my round-robin share, psum to the global total
+        trank = jnp.cumsum(flat_tri.astype(jnp.int32)) - 1
+        my_tri = (flat_tri & ((trank % axis_size) == me)).sum(dtype=jnp.int32)
+        n_tri = jax.lax.psum(my_tri, axis)
+        live = jax.lax.psum(f.count, axis)
+        f = dataclasses.replace(f, count=f.count[None])
+        return f, jnp.stack([n_tri, live, overflow])
+
+    return deal
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: the sharded wave superstep
+# ---------------------------------------------------------------------------
+
+def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
+                        delta: int, k_max: int):
+    """Build the UNJITTED sharded wave superstep.
+
+    One ``shard_map(lax.while_loop)`` program runs up to
+    min(k_max, rounds_limit) fused rounds: local slot expansion + in-bucket
+    compaction at the fixed ``local_capacity``, a diffusion-balance step
+    every ``balance_every`` rounds (``lax.cond``-gated so the collectives
+    only run on balance rounds), and a per-round ``psum`` of live counts
+    that is carried into the loop condition — the wave terminates ON DEVICE
+    the round the global frontier empties, with no host involvement.
+
+    Compilation (jit + frontier/counter donation + the cross-request
+    program cache) is ``core.plan.DistPlan``'s job; the host driver loop is
+    ``enumerate_sharded``.
+
+    Returns ``superstep(g, f, counters, rounds_limit, round_base) ->
+    (f', counters', rounds_done, status, total_hist, cyc_hist, live_hist)``
+    (``round_base`` = rounds completed by earlier supersteps, so the
+    balance cadence runs over the global round index)
+    where ``total_hist`` (k_max,) is the replicated per-round global live
+    count, and ``cyc_hist`` / ``live_hist`` (ndev, k_max) are the
+    per-device per-round cycle counts and live counts (the per-device wave
+    profiles the tuner's sharded replay twin consumes).
+    """
+    cap = int(cfg.local_capacity)
+    block = int(cfg.balance_block)
+    every = max(int(cfg.balance_every), 1)
+    axis_size = int(mesh.shape[axis])
+    fspec = _fspec(axis)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(g_spec, fspec, P(axis), P(), P()),
+        out_specs=(fspec, P(axis), P(), P(), P(), P(axis), P(axis)),
+        check_rep=False)
+    def superstep(g, f, counters, rounds_limit, round_base):
+        f = dataclasses.replace(f, count=f.count[0])
+        cnts = counters[0]  # (4,) cumulative [cycles, dropped, moved, lost]
+
+        def cond(c):
+            f, cnts, r, total, th, ch, lh = c
+            return (r < rounds_limit) & (total > 0)
+
+        def body(c):
+            f, cnts, r, total, th, ch, lh = c
+            f2, n_cyc, drop = _local_step(g, f, delta, cap)
+            if axis_size > 1:
+                # cadence over the GLOBAL round index (round_base carries
+                # the rounds done by earlier supersteps) — the knob means
+                # "every N rounds of the run", not of this dispatch
+                do_bal = ((round_base + r) % every) == (every - 1)
+                f2, moved, lost = _balance(f2, block, axis, axis_size, cap,
+                                           do_bal)
+            else:
+                moved = lost = jnp.int32(0)
+            total = jax.lax.psum(f2.count, axis)
+            th = th.at[r].set(total)
+            ch = ch.at[r].set(n_cyc)
+            lh = lh.at[r].set(f2.count)
+            cnts = cnts + jnp.stack([n_cyc, drop + lost, moved, lost])
+            return f2, cnts, r + 1, total, th, ch, lh
+
+        zeros = jnp.zeros((k_max,), jnp.int32)
+        total0 = jax.lax.psum(f.count, axis)
+        f, cnts, r, total, th, ch, lh = jax.lax.while_loop(
+            cond, body,
+            (f, cnts, jnp.int32(0), total0, zeros, zeros, zeros))
+        status = jnp.where(total == 0, jnp.int32(_DONE), jnp.int32(_RUN))
+        f = dataclasses.replace(f, count=f.count[None])
+        return f, cnts[None], r, status, th, ch[None], lh[None]
+
+    return superstep
+
+
+# ---------------------------------------------------------------------------
+# Host driver
+# ---------------------------------------------------------------------------
+
+def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
+                      trace=None, progress=None) -> EnumerationResult:
     """Count all chordless cycles using every device on ``cfg.axis`` of
     ``cfg.mesh`` (the CycleService sharded path; cfg validated eagerly to
     slot/jnp/count-only at construction).
 
-    Returns dict(n_cycles, n_triangles, iterations, dropped, per_device_live).
-    ``cache`` (a core.plan.ProgramCache) memoizes the jitted shard_map step
-    across requests on the same mesh/shape."""
+    The host loop relaunches the sharded superstep until the wave dies or
+    the |V|−3 budget runs out — one batched readback per superstep, so host
+    syncs are O(iterations / superstep_rounds) + O(1). ``cache`` (a
+    ``core.plan.ProgramCache``) memoizes the jitted deal + superstep across
+    requests on the same mesh/shape; ``trace`` (a ``tune.telemetry
+    .WaveTrace``) records per-dispatch events incl. per-device wave peaks.
+    """
     mesh, axis = cfg.mesh, cfg.axis
-    max_iters = cfg.max_iters
-    ndev = mesh.shape[axis]
-    cap = cfg.local_capacity
+    ndev = int(mesh.shape[axis])
+    cap = int(cfg.local_capacity)
+    k_max = int(cfg.superstep_rounds)
     delta = max(g.max_degree, 1)
-
-    # --- stage 1 on host, round-robin deal to devices -----------------------
-    f0, _, n_tri = T.initial_frontier(g)
-    cnt = int(f0.count)
-    rows = np.arange(cnt)
-    per_dev = [rows[rows % ndev == d] for d in range(ndev)]
-    local = max((len(r) for r in per_dev), default=0)
-    if local > cap:
-        raise ValueError(f"initial triplets {local}/device exceed capacity {cap}")
-
     nw = g.adj_bits.shape[1]
-    host = lambda a: np.asarray(a)
-    path_h, blocked_h = host(f0.path), host(f0.blocked)
-    v1_h, l2_h, vl_h = host(f0.v1), host(f0.l2), host(f0.vlast)
+    trace = trace if trace is not None else disabled_trace()
 
-    def deal(arr, fill=0):
-        out = np.full((ndev, cap) + arr.shape[1:], fill, arr.dtype)
-        for d, r in enumerate(per_dev):
-            out[d, :len(r)] = arr[r]
-        return out
+    if g.m == 0:  # edgeless: nothing to deal (flag kernels need neighbors)
+        return EnumerationResult(
+            n_cycles=0, n_triangles=0, cycle_masks=None, iterations=0,
+            history=[dict(step=0, T=0, C=0)], stats=dict(
+                trace.finalize(rounds=0), n_cycles=0, n_triangles=0,
+                iterations=0, dropped=0, moved=0, lost=0, n_devices=ndev,
+                per_device_live=[0] * ndev, superstep_rounds=k_max),
+            trace=trace if trace.enabled else None)
 
-    fshard = Frontier(
-        path=jnp.asarray(deal(path_h).reshape(ndev * cap, nw)),
-        blocked=jnp.asarray(deal(blocked_h).reshape(ndev * cap, nw)),
-        v1=jnp.asarray(deal(v1_h, -1).reshape(ndev * cap)),
-        l2=jnp.asarray(deal(l2_h).reshape(ndev * cap)),
-        vlast=jnp.asarray(deal(vl_h).reshape(ndev * cap)),
-        count=jnp.asarray(np.array([len(r) for r in per_dev], np.int32)),
-    )
-    counters = jnp.zeros((ndev, 3), jnp.int32)
-
-    g_spec = jax.tree_util.tree_map(lambda _: P(), g)
-    if cache is not None:
-        from .plan import PlanKey
-        key = PlanKey(kind="dist", bucket=cap, nw=nw, cyc_rows=0,
-                      delta=delta, store=False, formulation="slot",
-                      backend="jnp", k_max=0, batch=int(ndev),
-                      extra=(mesh, axis, cfg.balance_block, g.n, g.m))
-        step = cache.get_or_build(
-            key, lambda: make_dist_step(mesh, axis, g_spec, cfg, delta))
-    else:
-        step = make_dist_step(mesh, axis, g_spec, cfg, delta)
-
-    sh = jax.sharding.NamedSharding(mesh, P(axis))
     rep = jax.sharding.NamedSharding(mesh, P())
-    fshard = Frontier(
-        path=jax.device_put(fshard.path, sh),
-        blocked=jax.device_put(fshard.blocked, sh),
-        v1=jax.device_put(fshard.v1, sh),
-        l2=jax.device_put(fshard.l2, sh),
-        vlast=jax.device_put(fshard.vlast, sh),
-        count=jax.device_put(fshard.count, sh),
-    )
     g = jax.tree_util.tree_map(lambda x: jax.device_put(x, rep), g)
-    counters = jax.device_put(counters, sh)
+    g_spec = jax.tree_util.tree_map(lambda _: P(), g)
 
-    limit = max_iters if max_iters is not None else max(g.n - 3, 0)
+    from .plan import DistPlan, PlanKey
+
+    def _plan(tag, builder, donate=()):
+        key = PlanKey(kind="dist", bucket=cap, nw=nw, cyc_rows=0,
+                      delta=delta, store=False, formulation=cfg.formulation,
+                      backend=cfg.backend, k_max=k_max, batch=ndev,
+                      donate=bool(donate),
+                      extra=(tag, mesh, axis, cfg.balance_block,
+                             cfg.balance_every, g.n, g.m))
+        if cache is None:
+            return DistPlan(key, builder(), donate_argnums=donate)
+        return cache.get_or_build(
+            key, lambda: DistPlan(key, builder(), donate_argnums=donate))
+
+    deal = _plan("deal",
+                 lambda: make_dist_deal(mesh, axis, g_spec, cap, delta))
+    step = _plan("step",
+                 lambda: make_dist_superstep(mesh, axis, g_spec, cfg, delta,
+                                             k_max),
+                 donate=(1, 2))
+
+    fresh = deal.n_calls == 0
+    trace.tic()
+    fshard, meta = deal(g)
+    n_tri, live, overflow = (int(x) for x in jax.device_get(meta))
+    trace.sync()
+    trace.dispatch(kind="deal", bucket=cap, cyc_cap=0, budget=0, rounds=0,
+                   status="RUN", enter_count=live, exit_count=live,
+                   t_ms=trace.toc_ms(), fresh=fresh, ndev=ndev)
+    if overflow:
+        raise ValueError(
+            f"initial triplets overflow local_capacity={cap} by {overflow} "
+            f"rows across {ndev} devices; raise cfg.local_capacity")
+
+    history = [dict(step=0, T=live, C=n_tri)]
+    n_cycles = n_tri
+    counters = jax.device_put(np.zeros((ndev, 4), np.int32),
+                              jax.sharding.NamedSharding(mesh, P(axis)))
+    limit = cfg.max_iters if cfg.max_iters is not None else max(g.n - 3, 0)
     it = 0
-    while it < limit:
-        fshard, counters, total_live = step(g, fshard, counters)
-        it += 1
-        if cfg.checkpoint_every and it % cfg.checkpoint_every == 0:
+    next_ckpt = cfg.checkpoint_every or 0
+    prev_moved = prev_lost = 0
+    while it < limit and live > 0:
+        k = min(k_max, limit - it)
+        fresh = step.n_calls == 0
+        trace.tic()
+        fshard, counters, r, status, th, ch, lh = step(
+            g, fshard, counters, jnp.int32(k), jnp.int32(it))
+        r_h, status_h, th_h, ch_h, lh_h, c_h = jax.device_get(
+            (r, status, th, ch, lh, counters))
+        trace.sync()
+        r_h = int(r_h)
+        if r_h == 0:    # defensive: cond refused on entry (live went stale)
+            break
+        ch_round = np.asarray(ch_h)[:, :r_h].sum(axis=0)
+        peak_dev = np.asarray(lh_h)[:, :r_h].max(axis=1)
+        c_now = np.asarray(c_h)
+        dropped_now = int(c_now[:, 1].sum())
+        if dropped_now:
+            # a dropped row means every later count is silently wrong —
+            # fail loudly (the deal-overflow ValueError's stage-2 twin)
+            raise RuntimeError(
+                f"sharded frontier overflow: {dropped_now} live rows "
+                f"dropped by compaction at local_capacity={cap} "
+                f"(per-device peaks {[int(x) for x in peak_dev]}); raise "
+                "cfg.local_capacity — a count computed past a drop would "
+                "be silently wrong")
+        moved_d = int(c_now[:, 2].sum()) - prev_moved
+        lost_d = int(c_now[:, 3].sum()) - prev_lost
+        prev_moved += moved_d
+        prev_lost += lost_d
+        trace.dispatch(
+            kind="dist", bucket=cap, cyc_cap=0, budget=k, rounds=r_h,
+            status=STATUS_NAMES[int(status_h)],
+            t_sizes=np.asarray(th_h)[:r_h], c_counts=ch_round,
+            enter_count=live, exit_count=int(th_h[r_h - 1]),
+            t_ms=trace.toc_ms(), fresh=fresh, ndev=ndev,
+            per_device=tuple(int(x) for x in peak_dev),
+            moved=moved_d, lost=lost_d)
+        for i in range(r_h):
+            n_cycles += int(ch_round[i])
+            rec = dict(step=it + i + 1, T=int(th_h[i]), C=n_cycles)
+            history.append(rec)
+            if progress:
+                progress(rec)
+        it += r_h
+        live = int(th_h[r_h - 1])
+        if cfg.checkpoint_every and it >= next_ckpt:
             from .. import checkpoint as ckpt
             ckpt.save_pytree(cfg.checkpoint_dir, it,
                              dict(frontier=fshard, counters=counters))
-        if int(total_live) == 0:
-            break
+            next_ckpt = it + cfg.checkpoint_every
 
-    c = np.asarray(counters)
-    return dict(n_cycles=int(c[:, 0].sum()) + n_tri, n_triangles=n_tri,
-                iterations=it, dropped=int(c[:, 1].sum()),
-                per_device_live=c[:, 2].tolist())
+    c_h, live_h = jax.device_get((counters, fshard.count))
+    trace.sync()
+    c = np.asarray(c_h)
+    assert int(c[:, 0].sum()) == n_cycles - n_tri, \
+        "device cycle counter disagrees with history accumulation"
+    stats = trace.finalize(rounds=it)
+    stats.update(
+        n_cycles=n_cycles, n_triangles=n_tri, iterations=it,
+        dropped=int(c[:, 1].sum()), moved=int(c[:, 2].sum()),
+        lost=int(c[:, 3].sum()), n_devices=ndev,
+        per_device_live=[int(x) for x in np.asarray(live_h)],
+        superstep_rounds=k_max)
+    return EnumerationResult(
+        n_cycles=n_cycles, n_triangles=n_tri, cycle_masks=None,
+        iterations=it, history=history, stats=stats,
+        trace=trace if trace.enabled else None)
 
 
 def enumerate_distributed(g: BitsetGraph, mesh: Mesh, axis: str = "data",
-                          cfg: "DistEnumConfig | EngineConfig | None" = None,
+                          cfg: EngineConfig | None = None,
                           max_iters: int | None = None):
     """Compat wrapper: count all chordless cycles using every device on
     ``axis``. Routes through the default ``CycleService`` (so the jitted
-    shard_map step is cached across calls on the same mesh).
+    deal + superstep programs are cached across calls on the same mesh).
 
-    Returns dict(n_cycles, n_triangles, iterations, dropped, per_device_live).
+    Returns dict(n_cycles, n_triangles, iterations, dropped, moved, lost,
+    per_device_live, ...) — ``EnumerationResult.stats`` of the run.
     """
     from .service import default_service
     ecfg = as_engine_config(mesh, axis, cfg, max_iters)

@@ -70,9 +70,12 @@ class EngineConfig:
 
     ``superstep_rounds`` (K) bounds rounds per wave dispatch — it is the
     history-buffer length, NOT a correctness bound: the loop exits early on
-    any bucket transition and the host relaunches. ``cycle_buffer_rows``
-    sizes the device-resident cycle ring; a single round producing more
-    cycles than the whole buffer triggers a host-side buffer regrow.
+    any bucket transition and the host relaunches. The SAME knob budgets
+    the sharded wave superstep (``core/distributed.py``), whose loop exits
+    only on budget exhaustion or device-detected termination.
+    ``cycle_buffer_rows`` sizes the device-resident cycle ring; a single
+    round producing more cycles than the whole buffer triggers a host-side
+    buffer regrow.
 
     Validation is EAGER: unknown ``formulation``/``backend``/``engine`` and
     cross-field mismatches raise ``ValueError`` here, at construction, with
@@ -122,6 +125,11 @@ class EngineConfig:
         if self.grow_headroom < 0:
             raise ValueError(
                 f"grow_headroom must be >= 0, got {self.grow_headroom}")
+        if self.balance_block > self.local_capacity:
+            raise ValueError(
+                f"balance_block={self.balance_block} exceeds "
+                f"local_capacity={self.local_capacity}: a donation block "
+                "must fit inside one device's frontier shard")
         if self.mesh is not None:
             # the shard_map path is slot/jnp/count-only (DESIGN.md §5);
             # anything else would fail deep inside shard_map tracing.

@@ -15,6 +15,12 @@ same-shaped request a service ever sees. This module owns that amortization:
                    ``n_traces`` counter increments only while tracing, so a
                    warm cache is *observable*: repeated same-bucket calls
                    must leave it untouched.
+* ``DistPlan``   — the sharded twin: ``jax.jit`` of a
+                   ``core.distributed`` shard_map program (the device-side
+                   deal or the sharded wave superstep) with the sharded
+                   frontier and counter arguments donated, plus the same
+                   ``n_traces`` retrace observer. ``PlanKey(kind='dist')``
+                   keys them in the same cache the wave path warms.
 * ``ProgramCache`` — the per-service LRU of plans with hit/miss/eviction
                    counters (``CycleService.stats``); ``max_plans`` bounds
                    long-lived services. Distinct services deliberately
@@ -43,8 +49,10 @@ from . import engine as _engine
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
     """Identity of one compiled program. ``batch=0`` means unbatched;
-    ``batch=B`` is the vmapped multi-graph superstep. ``extra`` carries
-    kind-specific statics (e.g. the dist step's mesh/axis)."""
+    ``batch=B`` is the vmapped multi-graph superstep (for ``kind='dist'``
+    it carries the device count). ``extra`` carries kind-specific statics
+    (the dist programs put ``('deal'|'step', mesh, axis, balance_block,
+    balance_every, n, m)`` there)."""
     kind: str                # 'wave' | 'dist'
     bucket: int              # frontier capacity (rows)
     nw: int                  # mask words per row
@@ -98,6 +106,39 @@ class WavePlan:
 
     def lower(self, g, f, buf, rounds_limit):
         return self.fn.lower(g, f, buf, rounds_limit)
+
+
+class DistPlan:
+    """One compiled sharded program (deal or superstep; plan half of the
+    sharded plan/execute split).
+
+    Wraps an UNJITTED ``core.distributed`` shard_map callable in the same
+    observability contract as ``WavePlan``: ``n_traces`` increments only
+    while jax traces (the zero-retrace warm-path assertion), ``n_calls``
+    counts executions, and ``donate_argnums`` donates the sharded frontier
+    + counter buffers so the big per-device operands alias in place across
+    supersteps.
+    """
+
+    def __init__(self, key: PlanKey, fn, *, donate_argnums: tuple = ()):
+        self.key = key
+        self.n_traces = 0
+        self.n_calls = 0
+        self.donated = bool(donate_argnums)
+
+        def _traced(*args):
+            # runs once per TRACE (not per call): the retrace observer
+            self.n_traces += 1
+            return fn(*args)
+
+        self.fn = jax.jit(_traced, donate_argnums=donate_argnums)
+
+    def __call__(self, *args):
+        self.n_calls += 1
+        return self.fn(*args)
+
+    def lower(self, *args):
+        return self.fn.lower(*args)
 
 
 class ProgramCache:

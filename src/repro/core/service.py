@@ -16,11 +16,12 @@ graph batch, or stream — is a cheap *execute* against that cache:
 * ``service.plan(g)``             — explicit plan step: compile (or fetch)
   the program the first superstep of ``g`` will use, without enumerating.
 
-``cfg.mesh`` non-None routes the request through the shard_map path in
-``core/distributed.py`` (the former ``DistEnumConfig`` knobs now live on
-``EngineConfig``); ``cfg.engine == 'host'`` routes to the legacy per-round
-A/B engine. ``enumerate_chordless_cycles`` is a thin wrapper over the
-module-level ``default_service()``.
+``cfg.mesh`` non-None routes the request through the sharded wave
+superstep in ``core/distributed.py`` — the same ProgramCache warms its
+deal + superstep programs (``PlanKey(kind='dist')``) and the same tuner
+resolves its knobs; ``cfg.engine == 'host'`` routes to the legacy
+per-round A/B engine. ``enumerate_chordless_cycles`` is a thin wrapper
+over the module-level ``default_service()``.
 
 ``CycleService(auto_tune=True)`` additionally resolves every request's
 config through ``repro.tune`` (DESIGN.md §6.6): first visit of a workload
@@ -115,18 +116,20 @@ class CycleService:
         this workload class the tuned config comes back and ``observe`` is
         False (warm hit — no search, no trace); on first visit the base
         config comes back with ``observe=True`` so the run is recorded and
-        fed to the tuner afterwards. Three kinds of request pass through
-        untouched: ``explicit`` per-request configs (the caller pinned the
-        knobs — e.g. a memory-bounding ``cycle_buffer_rows`` — and a stored
-        entry keyed only by workload class must not override them),
-        mesh-sharded configs (the searched knobs are single-device knobs;
-        dist-path tuning is a ROADMAP follow-up), and ``engine='host'``
-        requests (the cost model's replay is a twin of the WAVE driver, so
-        its ranking is meaningless for the per-round host loop — tuning it
-        untried could slow it down).
+        fed to the tuner afterwards. Mesh-sharded configs resolve like
+        single-device ones, against the sharded knob set
+        (``superstep_rounds`` × ``local_capacity`` × ``balance_every``,
+        keyed by device count — ``tune.DIST_TUNED_KNOBS``). Two kinds of
+        request pass through untouched: ``explicit`` per-request configs
+        (the caller pinned the knobs — e.g. a memory-bounding
+        ``cycle_buffer_rows`` — and a stored entry keyed only by workload
+        class must not override them) and ``engine='host'`` requests (the
+        cost model's replay twins the WAVE drivers, so its ranking is
+        meaningless for the per-round host loop — tuning it untried could
+        slow it down).
         """
-        if (self._tuner is None or explicit or cfg.mesh is not None
-                or cfg.engine != "wave"):
+        if (self._tuner is None or explicit
+                or (cfg.mesh is None and cfg.engine != "wave")):
             return cfg, None, False
         key = self._tuner.key_for(n, m, delta, cfg)
         tuned = self._tuner.lookup(key, cfg)
@@ -215,16 +218,15 @@ class CycleService:
         cfg = config if config is not None else self.cfg
         self._counters["requests"] += 1
         self._counters["graphs"] += 1
-        if cfg.mesh is not None:
-            from .distributed import enumerate_sharded
-            out = enumerate_sharded(g, cfg, cache=self._cache)
-            return EnumerationResult(
-                n_cycles=out["n_cycles"], n_triangles=out["n_triangles"],
-                cycle_masks=None, iterations=out["iterations"], history=[],
-                stats=dict(out))
         cfg, tkey, observe = self._resolve_config(
             g.n, g.m, max(g.max_degree, 1), cfg, explicit=config is not None)
         trace = self._new_trace(observe)
+        if cfg.mesh is not None:
+            from .distributed import enumerate_sharded
+            res = enumerate_sharded(g, cfg, cache=self._cache, trace=trace,
+                                    progress=progress)
+            self._after_run(g, cfg, tkey, observe, trace, res)
+            return res
         if cfg.engine == "host":
             res = _enumerate_host(g, cfg, progress, trace=trace)
             self._after_run(g, cfg, tkey, observe, trace, res)

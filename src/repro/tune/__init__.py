@@ -26,8 +26,9 @@ _EXPORTS = {
     "WaveProfile": ".cost_model", "ReplaySummary": ".cost_model",
     "replay": ".cost_model", "CostModel": ".cost_model",
     "DEFAULT_COEFFS": ".cost_model",
+    "DistProfile": ".cost_model", "replay_dist": ".cost_model",
     "AutoTuner": ".autotune", "TuneSpace": ".autotune",
-    "TUNED_KNOBS": ".autotune",
+    "TUNED_KNOBS": ".autotune", "DIST_TUNED_KNOBS": ".autotune",
     "TuneStore": ".store", "TuneKey": ".store", "shape_class": ".store",
     "SCHEMA_VERSION": ".store",
 }

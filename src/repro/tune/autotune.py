@@ -14,6 +14,12 @@ the relaunch re-executes it bit-identically), which is property-tested in
 ``tests/test_tune.py``: a tuned config must produce bit-identical
 ``cycle_masks`` to the default config.
 
+Mesh-routed configs search the SHARDED knob set instead
+(``DIST_TUNED_KNOBS``: ``superstep_rounds`` × ``local_capacity`` ×
+``balance_every``, DESIGN.md §5) through ``cost_model.replay_dist`` — the
+sharded twin's feasibility guard keeps capacity candidates that could drop
+rows out of the running.
+
 The base config is always one of the candidates, so with measured trials
 the tuner can never pick a knob set that measured WORSE than the default —
 the invariant ``benchmarks/engine_bench.py::tune_smoke`` asserts.
@@ -23,12 +29,18 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
-from .cost_model import CostModel, WaveProfile
+from .cost_model import CostModel, DistProfile, WaveProfile
 from .store import TuneKey, TuneStore, shape_class
 
 # the shape-dependent, equivalence-preserving knobs the tuner may touch
 TUNED_KNOBS = ("superstep_rounds", "growth_bits", "grow_headroom",
                "cycle_buffer_rows")
+# the mesh-routed (sharded) knob set: round budget per superstep, frontier
+# rows per device, and the diffusion-balance cadence. local_capacity is
+# equivalence-preserving only while nothing overflows — the replay twin's
+# feasibility guard scores risky candidates infinite, and the driver counts
+# any drop it could not prevent.
+DIST_TUNED_KNOBS = ("superstep_rounds", "local_capacity", "balance_every")
 
 
 def _device_kind() -> str:
@@ -43,28 +55,43 @@ def _device_kind() -> str:
 class TuneSpace:
     """The searched knob grid (defaults span the regimes §6.4 measured:
     small K for CPU-interpret dispatch costs, large K for accelerators;
-    fine vs coarse buckets; headroom 0-2)."""
+    fine vs coarse buckets; headroom 0-2). Mesh-routed configs search the
+    sharded axes (``DIST_TUNED_KNOBS``) instead."""
     superstep_rounds: tuple = (4, 8, 16, 32)
     growth_bits: tuple = (1, 2)
     grow_headroom: tuple = (0, 1, 2)
     cycle_buffer_rows: tuple = (1024, 4096, 16384)
+    # sharded axes
+    local_capacity: tuple = (1 << 12, 1 << 14, 1 << 16)
+    balance_every: tuple = (1, 2, 4)
 
     def knob_sets(self, base_cfg) -> list[dict]:
         """Every candidate as a knob dict; the base config's own knobs are
         always candidate 0 (the do-nothing option)."""
-        axes = dict(superstep_rounds=self.superstep_rounds,
-                    growth_bits=self.growth_bits,
-                    grow_headroom=self.grow_headroom)
-        if base_cfg.store:
-            axes["cycle_buffer_rows"] = self.cycle_buffer_rows
+        if getattr(base_cfg, "mesh", None) is not None:
+            axes = dict(superstep_rounds=self.superstep_rounds,
+                        local_capacity=self.local_capacity,
+                        balance_every=self.balance_every)
+        else:
+            axes = dict(superstep_rounds=self.superstep_rounds,
+                        growth_bits=self.growth_bits,
+                        grow_headroom=self.grow_headroom)
+            if base_cfg.store:
+                axes["cycle_buffer_rows"] = self.cycle_buffer_rows
         base = {k: getattr(base_cfg, k) for k in axes}
         names = list(axes)
         out, seen = [base], {tuple(base[k] for k in names)}
         for combo in itertools.product(*(axes[k] for k in names)):
             if combo in seen:
                 continue
+            kn = dict(zip(names, combo))
+            # EngineConfig rejects local_capacity < balance_block eagerly;
+            # never emit a candidate that cannot even construct
+            if kn.get("local_capacity", base_cfg.balance_block) \
+                    < base_cfg.balance_block:
+                continue
             seen.add(combo)
-            out.append(dict(zip(names, combo)))
+            out.append(kn)
         return out
 
 
@@ -100,9 +127,12 @@ class AutoTuner:
         return self._device_kind
 
     def key_for(self, n: int, m: int, delta: int, cfg) -> TuneKey:
+        mesh = getattr(cfg, "mesh", None)
+        ndev = int(mesh.shape[cfg.axis]) if mesh is not None else 0
         return TuneKey(shape=shape_class(n, m, delta), store=cfg.store,
                        formulation=cfg.formulation, backend=cfg.backend,
-                       engine=cfg.engine, device_kind=self.device_kind)
+                       engine="dist" if ndev else cfg.engine,
+                       device_kind=self.device_kind, ndev=ndev)
 
     # -- warm path -------------------------------------------------------
 
@@ -117,9 +147,18 @@ class AutoTuner:
 
     @staticmethod
     def apply(knobs: dict, cfg):
-        """Overlay tuned knobs on a base config (only TUNED_KNOBS; every
-        correctness-relevant field of ``cfg`` is preserved verbatim)."""
-        tuned = {k: v for k, v in knobs.items() if k in TUNED_KNOBS}
+        """Overlay tuned knobs on a base config (only TUNED_KNOBS /
+        DIST_TUNED_KNOBS; every correctness-relevant field of ``cfg`` is
+        preserved verbatim). A stored ``local_capacity`` below THIS base
+        config's ``balance_block`` is dropped rather than applied —
+        ``TuneKey`` does not carry ``balance_block``, so an entry tuned
+        under a smaller block must not make a warm lookup raise (or
+        shrink) on a base config with a bigger one."""
+        allowed = TUNED_KNOBS + DIST_TUNED_KNOBS
+        tuned = {k: v for k, v in knobs.items() if k in allowed}
+        if tuned.get("local_capacity", 0) and \
+                tuned["local_capacity"] < getattr(cfg, "balance_block", 0):
+            tuned.pop("local_capacity")
         return dataclasses.replace(cfg, **tuned)
 
     # -- search ----------------------------------------------------------
@@ -144,7 +183,11 @@ class AutoTuner:
         self._counters["candidates_scored"] += len(scored)
         source, best_ms, best = "model", scored[0][0], scored[0][2]
         if measure is not None and self.trials > 0:
-            pool = [kn for _, _, kn in scored[:self.trials]]
+            # never TIME an infeasible candidate: a config that drops
+            # frontier rows does less work and would measure fastest —
+            # wall time alone cannot veto incorrectness
+            pool = [kn for ms, _, kn in scored[:self.trials]
+                    if ms != float("inf")]
             if candidates[0] not in pool:   # base config always measured
                 pool.append(candidates[0])
             timed = []
@@ -167,10 +210,19 @@ class AutoTuner:
     def observe(self, key: TuneKey, base_cfg, history, *, n: int, nw: int,
                 traces=(), measure=None):
         """Convenience: profile a finished run's history, then ``tune``.
-        This is the service's first-visit hook (record → model → store)."""
+        This is the service's first-visit hook (record → model → store).
+        Mesh-routed configs profile into a ``DistProfile`` (per-device
+        peaks from the recorded trace) and replay through the sharded twin."""
         self._counters["observations"] += 1
-        profile = WaveProfile.from_history(
-            history, n=n, nw=nw, max_iters=base_cfg.max_iters)
+        mesh = getattr(base_cfg, "mesh", None)
+        if mesh is not None:
+            profile = DistProfile.from_run(
+                history, n=n, nw=nw,
+                ndev=int(mesh.shape[base_cfg.axis]), cfg=base_cfg,
+                traces=traces)
+        else:
+            profile = WaveProfile.from_history(
+                history, n=n, nw=nw, max_iters=base_cfg.max_iters)
         return self.tune(profile, base_cfg, key=key, traces=traces,
                          measure=measure)
 

@@ -16,6 +16,18 @@ host-side computation:
                     logic): chops a profile into dispatches under a
                     candidate config and returns the dispatch/sync/waste
                     accounting that run WOULD have had.
+* ``DistProfile`` / ``replay_dist`` — the sharded twin: the same wave shape
+                    plus the observed per-device peaks and balance cadence
+                    of a ``core.distributed`` run. The dispatch/sync/round
+                    chop is exact (the sharded driver has no buckets to
+                    guess); per-device placement under a DIFFERENT
+                    ``balance_every`` / ``local_capacity`` is not
+                    replayable without re-running the diffusion, so the
+                    twin carries a conservative *feasibility guard*: a
+                    candidate whose local capacity cannot provably hold the
+                    estimated per-device peak scores infinite and is never
+                    picked over the base config (which ran, so is always
+                    feasible).
 * ``CostModel``    — converts a replay into milliseconds:
                     ``a·dispatches + b·row_work + c·syncs (+ d·programs)``,
                     with (a, b) least-squares fitted from recorded traces
@@ -108,6 +120,11 @@ class ReplaySummary:
     n_programs: int           # distinct (bucket, cyc_cap) shapes → compiles
     peak_bucket: int
     by_cause: dict
+    # sharded-twin extras (single-device replays leave the defaults)
+    feasible: bool = True     # False: candidate capacity cannot provably
+    #                           hold the estimated per-device peak → scored
+    #                           infinite, never picked over the base config
+    est_peak_device: int = 0  # the guard's per-device peak estimate
 
 
 def replay(profile: WaveProfile, cfg) -> ReplaySummary:
@@ -198,6 +215,145 @@ def replay(profile: WaveProfile, cfg) -> ReplaySummary:
 
 
 # ---------------------------------------------------------------------------
+# Sharded twin (core/distributed.py's superstep driver)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DistProfile:
+    """Wave shape of one SHARDED enumeration plus the placement facts the
+    feasibility guard needs.
+
+    ``t_sizes`` / ``c_counts`` are GLOBAL per-round totals (knob-independent
+    exactly like the single-device profile — placement does not change what
+    expands); ``peak_device_live`` is the observed per-device peak of the
+    profiling run, valid under ``base_balance_every`` /
+    ``base_local_capacity``.
+    """
+    n: int
+    nw: int
+    ndev: int
+    n0: int                    # initial frontier size (global)
+    t_sizes: tuple[int, ...]
+    c_counts: tuple[int, ...]
+    peak_device_live: int
+    base_local_capacity: int
+    base_balance_every: int
+    balance_block: int
+    max_iters: int | None = None
+
+    @property
+    def limit(self) -> int:
+        lim = max(self.n - 3, 0)
+        return lim if self.max_iters is None else min(lim, self.max_iters)
+
+    @property
+    def peak(self) -> int:
+        return max((self.n0,) + self.t_sizes, default=0)
+
+    @classmethod
+    def from_run(cls, history, *, n: int, nw: int, ndev: int, cfg,
+                 traces=()) -> "DistProfile":
+        """Build from a sharded run's ``history`` + recorded ``WaveTrace``s
+        (whose 'dist' events carry the per-device peaks). Without any
+        per-device observation the peak falls back to the GLOBAL peak —
+        the worst case (everything on one device), which only makes the
+        feasibility guard stricter."""
+        base = WaveProfile.from_history(history, n=n, nw=nw,
+                                        max_iters=cfg.max_iters)
+        peak_dev = 0
+        for tr in traces:
+            for e in getattr(tr, "events", []):
+                if e.kind == "dist" and e.per_device:
+                    peak_dev = max(peak_dev, max(e.per_device))
+        if peak_dev == 0:
+            peak_dev = base.peak
+        return cls(n=n, nw=nw, ndev=max(int(ndev), 1), n0=base.n0,
+                   t_sizes=base.t_sizes, c_counts=base.c_counts,
+                   peak_device_live=peak_dev,
+                   base_local_capacity=int(cfg.local_capacity),
+                   base_balance_every=max(int(cfg.balance_every), 1),
+                   balance_block=int(cfg.balance_block),
+                   max_iters=cfg.max_iters)
+
+
+def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
+    """Digital twin of ``core.distributed.enumerate_sharded`` for a
+    candidate config.
+
+    ``cfg`` is duck-typed: needs ``superstep_rounds``, ``local_capacity``,
+    ``balance_every``, ``balance_block``. Mirrors the driver exactly where
+    the driver is deterministic — the K-round dispatch chop with on-device
+    termination (a superstep ends on budget or the round the global wave
+    dies), one deal dispatch + one readback per superstep + one final
+    counter fetch — and conservatively where it is not: per-device peaks
+    under a different balance cadence are ESTIMATED (scaled linearly with
+    the cadence ratio) and a candidate is marked infeasible unless its
+    capacity holds twice the estimate (capacities at or above the base
+    config's, which demonstrably ran, are always feasible). Balance traffic
+    is charged as block·ndev row-work per balance round.
+    """
+    limit = profile.limit
+    t = profile.t_sizes
+    nw = max(profile.nw, 1)
+    ndev = max(profile.ndev, 1)
+    cap = int(cfg.local_capacity)
+    K = max(int(cfg.superstep_rounds), 1)
+    every = max(int(cfg.balance_every), 1)
+    block = int(cfg.balance_block)
+
+    # --- feasibility guard ------------------------------------------------
+    # the base config's capacity is only known-safe at the base BALANCE
+    # CADENCE — a sparser cadence lets per-device peaks grow between
+    # balance steps, so it must re-pass the headroom check against the
+    # cadence-scaled peak estimate like any other candidate.
+    n0_dev = -(-profile.n0 // ndev)          # deal is an even split
+    cadence = -(-every // profile.base_balance_every)
+    est_peak = min(profile.peak,
+                   max(profile.peak_device_live, n0_dev) * max(cadence, 1))
+    feasible = (cap >= n0_dev
+                and ((cap >= profile.base_local_capacity
+                      and every <= profile.base_balance_every)
+                     or cap >= 2 * est_peak))
+
+    dispatches = syncs = 0
+    row_work = waste = balance_rounds = 0
+    by_cause: dict[str, int] = {}
+    cnt = profile.n0
+    dispatches += 1                           # stage-1 device-side deal
+    syncs += 1                                # ... and its meta readback
+    by_cause["RUN"] = by_cause.get("RUN", 0) + 1
+    it = 0
+    while it < min(limit, len(t)) and cnt > 0:
+        k = min(K, limit - it)
+        r = 0
+        while r < k and cnt > 0 and it + r < len(t):
+            enter = cnt
+            cnt = t[it + r]
+            row_work += cap * ndev * nw
+            waste += max(cap * ndev - max(enter, 1), 0) * nw
+            r += 1
+            # global-round cadence, matching the driver's round_base + r
+            if ndev > 1 and (it + r) % every == 0:
+                balance_rounds += 1
+        dispatches += 1
+        syncs += 1
+        status = _DONE if cnt == 0 else _RUN
+        by_cause[status] = by_cause.get(status, 0) + 1
+        it += r
+        if r == 0:
+            break
+    syncs += 1                                # final counter readback
+    row_work += balance_rounds * block * ndev * nw
+    return ReplaySummary(
+        n_dispatches=dispatches, n_host_syncs=syncs,
+        n_bucket_transitions=0, n_drains=0, rounds=it,
+        row_work=row_work, padded_waste=waste,
+        n_programs=2,                         # the deal + the superstep
+        peak_bucket=cap, by_cause=by_cause,
+        feasible=feasible, est_peak_device=int(est_peak))
+
+
+# ---------------------------------------------------------------------------
 # Milliseconds: fitted linear model over replay terms
 # ---------------------------------------------------------------------------
 
@@ -233,8 +389,12 @@ class CostModel:
                     # only single-graph wave dispatches have the 1-event ↔
                     # 1-launch ↔ bucket·rounds row-work correspondence the
                     # model assumes: 'batch' events advance B lanes per
-                    # bucket (no lane count in the event), and host 'round'
-                    # events fold 2-3 launches + a sync into one t_ms
+                    # bucket (no lane count in the event), host 'round'
+                    # events fold 2-3 launches + a sync into one t_ms, and
+                    # 'dist' events fold ndev-way parallel row work plus
+                    # per-round collectives into one wall time (the sharded
+                    # twin reuses the fitted coefficients for RANKING, which
+                    # is robust to the absolute scale being off)
                     continue
                 x = e.rounds_attempted * e.bucket  # frontier-row units
                 if e.fresh:
@@ -262,12 +422,22 @@ class CostModel:
 
     # -- scoring ---------------------------------------------------------
 
-    def score(self, profile: WaveProfile, cfg, *,
-              objective: str = "warm") -> float:
+    @staticmethod
+    def _replay_for(profile, cfg):
+        """Route to the twin matching the profile: sharded profiles (or any
+        mesh-routed cfg) replay through the dist twin."""
+        if isinstance(profile, DistProfile):
+            return replay_dist(profile, cfg)
+        return replay(profile, cfg)
+
+    def score(self, profile, cfg, *, objective: str = "warm") -> float:
         """Predicted ms for one enumeration of ``profile`` under ``cfg``.
         ``objective='warm'`` assumes programs are cached (steady-state
-        serving); ``'cold'`` charges each distinct shape a compile."""
-        rep = replay(profile, cfg)
+        serving); ``'cold'`` charges each distinct shape a compile.
+        Infeasible sharded candidates score ``inf`` (never picked)."""
+        rep = self._replay_for(profile, cfg)
+        if not rep.feasible:
+            return float("inf")
         rows = rep.row_work / max(profile.nw, 1)  # back to row units
         ms = (self.dispatch_ms * rep.n_dispatches
               + self.ms_per_mrow * rows / 1e6
@@ -276,9 +446,8 @@ class CostModel:
             ms += self.compile_ms * rep.n_programs
         return ms
 
-    def breakdown(self, profile: WaveProfile, cfg, *,
-                  objective: str = "warm") -> dict:
-        rep = replay(profile, cfg)
+    def breakdown(self, profile, cfg, *, objective: str = "warm") -> dict:
+        rep = self._replay_for(profile, cfg)
         return dict(score_ms=round(self.score(profile, cfg,
                                               objective=objective), 4),
                     objective=objective,
@@ -288,7 +457,8 @@ class CostModel:
                     n_drains=rep.n_drains,
                     row_work=rep.row_work, padded_waste=rep.padded_waste,
                     n_programs=rep.n_programs, peak_bucket=rep.peak_bucket,
-                    by_cause=dict(rep.by_cause))
+                    by_cause=dict(rep.by_cause), feasible=rep.feasible,
+                    est_peak_device=rep.est_peak_device)
 
     def to_json(self) -> dict:
         return dict(dispatch_ms=self.dispatch_ms,

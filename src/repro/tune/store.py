@@ -13,16 +13,44 @@ The store carries the same LRU bound as the ``ProgramCache`` it feeds
 workload classes evict the least-recently-used entry instead of growing
 without bound. Writes are atomic (tmp + ``os.replace``, the
 ``repro/checkpoint`` idiom); a version mismatch on load drops the stale
-file's entries rather than misapplying old-schema knobs.
+file's entries rather than misapplying old-schema knobs; the
+read→merge→replace window of ``save`` is serialized by an ``fcntl``
+advisory lock on ``<path>.lock`` so concurrent writers sharing one path
+cannot interleave inside it and lose each other's updates (falls back to
+lock-free merge-on-save where ``fcntl`` does not exist).
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import json
 import os
 
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: lock-free fallback
+    fcntl = None
+
 SCHEMA_VERSION = 1
+
+
+@contextlib.contextmanager
+def _file_lock(path: str | None):
+    """Exclusive advisory lock on ``<path>.lock`` (no-op without fcntl or
+    path). Guards the whole read→merge→replace window of ``save`` — two
+    racing writers serialize, so neither can lose the other's entries."""
+    if fcntl is None or not path:
+        yield
+        return
+    lock_path = path + ".lock"
+    os.makedirs(os.path.dirname(os.path.abspath(lock_path)), exist_ok=True)
+    with open(lock_path, "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
 
 
 def _p2(x: int) -> int:
@@ -42,25 +70,33 @@ def shape_class(n: int, m: int, delta: int) -> str:
 @dataclasses.dataclass(frozen=True)
 class TuneKey:
     """Identity of one tuned workload class:
-    graph-shape class × backend × formulation × engine × mode × device."""
+    graph-shape class × backend × formulation × engine × mode × device
+    (× device count for mesh-routed classes — the sharded knobs scale with
+    how many devices split the frontier)."""
     shape: str            # shape_class(n, m, Δ)
     store: bool           # store vs count-only mode
     formulation: str
     backend: str
-    engine: str
+    engine: str           # 'wave' | 'host' | 'dist' (mesh-routed)
     device_kind: str      # jax platform: 'cpu' | 'gpu' | 'tpu'
+    ndev: int = 0         # mesh axis size (0: unsharded)
 
     def as_str(self) -> str:
         mode = "store" if self.store else "count"
-        return "|".join((self.shape, mode, self.formulation, self.backend,
-                         self.engine, self.device_kind))
+        parts = [self.shape, mode, self.formulation, self.backend,
+                 self.engine, self.device_kind]
+        if self.ndev:     # unsharded keys keep the pre-dist string format
+            parts.append(f"x{self.ndev}")
+        return "|".join(parts)
 
     @classmethod
     def from_str(cls, s: str) -> "TuneKey":
-        shape, mode, formulation, backend, engine, device = s.split("|")
+        shape, mode, formulation, backend, engine, device, *rest = \
+            s.split("|")
+        ndev = int(rest[0].lstrip("x")) if rest else 0
         return cls(shape=shape, store=(mode == "store"),
                    formulation=formulation, backend=backend, engine=engine,
-                   device_kind=device)
+                   device_kind=device, ndev=ndev)
 
 
 class TuneStore:
@@ -115,25 +151,28 @@ class TuneStore:
                     exist_ok=True)
         # merge-on-save: re-read the file so entries tuned by OTHER
         # processes sharing this path survive our write (our entries win on
-        # key conflict). No file locking — a racing writer can still lose
-        # an update inside the read→replace window, but whole-store
-        # clobbering is gone; the merged file may transiently exceed
-        # max_entries (the bound is enforced on the in-memory LRU).
-        merged: dict = {}
-        if os.path.exists(self.path):
-            try:
-                with open(self.path) as f:
-                    doc = json.load(f)
-                if doc.get("version") == SCHEMA_VERSION:
-                    merged.update(doc.get("entries", {}))
-            except (OSError, json.JSONDecodeError):
-                pass
-        merged.update(self._entries)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(dict(version=SCHEMA_VERSION, entries=merged), f,
-                      indent=2)
-        os.replace(tmp, self.path)
+        # key conflict). The fcntl lock serializes the whole
+        # read→merge→replace window, so a racing writer can no longer lose
+        # an update inside it (lock-free platforms keep merge-on-save,
+        # which still prevents whole-store clobbering). The merged file may
+        # transiently exceed max_entries (the bound is enforced on the
+        # in-memory LRU).
+        with _file_lock(self.path):
+            merged: dict = {}
+            if os.path.exists(self.path):
+                try:
+                    with open(self.path) as f:
+                        doc = json.load(f)
+                    if doc.get("version") == SCHEMA_VERSION:
+                        merged.update(doc.get("entries", {}))
+                except (OSError, json.JSONDecodeError):
+                    pass
+            merged.update(self._entries)
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(dict(version=SCHEMA_VERSION, entries=merged), f,
+                          indent=2)
+            os.replace(tmp, self.path)
 
     # -- LRU dict --------------------------------------------------------
 

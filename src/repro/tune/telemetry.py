@@ -47,7 +47,8 @@ class TraceEvent:
     the live rows on entry — their difference is the padded-row waste the
     cost model charges for.
     """
-    kind: str                  # 'superstep' | 'round' | 'batch' | 'drain'
+    kind: str                  # 'superstep' | 'round' | 'batch' | 'dist'
+    #                            | 'deal'
     bucket: int                # frontier capacity (rows) during the dispatch
     cyc_cap: int               # CycleBuffer capacity (1 in count-only mode)
     budget: int                # round budget k granted to the dispatch
@@ -64,6 +65,15 @@ class TraceEvent:
     fresh: bool = False        # first execution of a fresh program (t_ms
     #                            includes trace+compile; the cost-model fit
     #                            separates these from warm dispatches)
+    # --- sharded dispatches ('dist' / 'deal' events) only ----------------
+    ndev: int = 0              # devices the dispatch spanned (0: unsharded;
+    #                            row-work terms scale by max(ndev, 1))
+    per_device: tuple[int, ...] = ()  # per-device PEAK live rows inside the
+    #                            dispatch — the placement fact the sharded
+    #                            replay twin's feasibility guard consumes
+    moved: int = 0             # rows shipped by diffusion balancing
+    lost: int = 0              # receiver-side balance overflow (must be 0
+    #                            under backpressure; defensive counter)
 
     @property
     def rounds_attempted(self) -> int:
@@ -72,16 +82,20 @@ class TraceEvent:
         return self.rounds + (1 if self.status in ("GROW", "DRAIN") else 0)
 
     def row_work(self, n_words: int) -> int:
-        """Word-rows touched by this dispatch (dead rows included)."""
-        return self.rounds_attempted * self.bucket * n_words
+        """Word-rows touched by this dispatch (dead rows included; sharded
+        dispatches scan ``bucket`` rows on EACH of ``ndev`` devices)."""
+        return (self.rounds_attempted * self.bucket * max(self.ndev, 1)
+                * n_words)
 
     def padded_waste(self, n_words: int) -> int:
-        """Word-rows spent on PADDING (bucket minus live rows), the dead-row
-        work the autotuner trades against dispatch count. Round i of the
-        dispatch entered with ``enter_count`` (i=0) or ``t_sizes[i-1]``
-        rows — matching ``cost_model.replay``'s per-round accounting."""
+        """Word-rows spent on PADDING (capacity minus live rows), the
+        dead-row work the autotuner trades against dispatch count. Round i
+        of the dispatch entered with ``enter_count`` (i=0) or
+        ``t_sizes[i-1]`` rows — matching ``cost_model.replay``'s per-round
+        accounting. Sharded dispatches pad to ``bucket × ndev`` total rows."""
+        cap = self.bucket * max(self.ndev, 1)
         entries = ((self.enter_count,) + self.t_sizes)[:self.rounds_attempted]
-        return sum(max(self.bucket - max(e, 1), 0) for e in entries) * n_words
+        return sum(max(cap - max(e, 1), 0) for e in entries) * n_words
 
 
 class WaveTrace:
@@ -138,7 +152,8 @@ class WaveTrace:
                  enter_count: int = 0, exit_count: int = 0,
                  pending_new: int = 0, pending_cyc: int = 0,
                  cyc_fill: int = 0, t_ms: float = 0.0,
-                 fresh: bool = False, launches: int = 1) -> None:
+                 fresh: bool = False, launches: int = 1, ndev: int = 0,
+                 per_device=(), moved: int = 0, lost: int = 0) -> None:
         self.n_dispatches += launches
         self.by_cause[status] = self.by_cause.get(status, 0) + 1
         if not self.enabled:
@@ -149,7 +164,9 @@ class WaveTrace:
             c_counts=tuple(int(c) for c in c_counts),
             enter_count=int(enter_count), exit_count=int(exit_count),
             pending_new=int(pending_new), pending_cyc=int(pending_cyc),
-            cyc_fill=int(cyc_fill), t_ms=float(t_ms), fresh=bool(fresh)))
+            cyc_fill=int(cyc_fill), t_ms=float(t_ms), fresh=bool(fresh),
+            ndev=int(ndev), per_device=tuple(int(x) for x in per_device),
+            moved=int(moved), lost=int(lost)))
 
     # -- summaries -------------------------------------------------------
 

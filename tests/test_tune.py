@@ -158,6 +158,72 @@ def _synthetic_trace(a=0.5, b=20.0, compile_ms=100.0):
     return tr
 
 
+def test_replay_dist_feasibility_guard():
+    """The sharded twin must keep knob candidates that could drop rows out
+    of the running: sparser balance cadence scales the per-device peak
+    estimate, and even base-capacity candidates must re-pass the headroom
+    check when their cadence is sparser than the profiled run's."""
+    from repro.tune import DistProfile, replay_dist
+
+    prof = DistProfile(n=64, nw=2, ndev=4, n0=400,
+                       t_sizes=(8000, 30000, 12000, 0),
+                       c_counts=(10, 20, 30, 5),
+                       peak_device_live=8000, base_local_capacity=8192,
+                       base_balance_every=1, balance_block=256)
+    base = EngineConfig(store=False, local_capacity=8192, balance_every=1)
+    assert replay_dist(prof, base).feasible          # the run that happened
+    # same capacity, sparser cadence: peaks can grow between balance steps
+    sparser = EngineConfig(store=False, local_capacity=8192, balance_every=4)
+    assert not replay_dist(prof, sparser).feasible
+    # sparser cadence IS feasible with enough headroom for the scaled peak
+    roomy = EngineConfig(store=False, local_capacity=1 << 16,
+                         balance_every=4)
+    assert replay_dist(prof, roomy).feasible
+    # capacity below the initial deal's per-device share can never run
+    tiny = EngineConfig(store=False, local_capacity=64, balance_block=32,
+                        balance_every=1)
+    assert not replay_dist(prof, tiny).feasible
+    # infeasible candidates score infinite — never picked over the base
+    assert CostModel().score(prof, sparser) == float("inf")
+    assert CostModel().score(prof, base) < float("inf")
+
+
+def test_apply_drops_stored_capacity_conflicting_with_balance_block():
+    """TuneKey carries no balance_block, so a stored local_capacity below
+    THIS base config's block must be dropped on lookup, not applied (it
+    would raise in EngineConfig validation and crash a warm hit)."""
+    cfg = EngineConfig(store=False, balance_block=8192,
+                       local_capacity=1 << 16)
+    out = AutoTuner.apply(dict(local_capacity=4096, superstep_rounds=16),
+                          cfg)
+    assert out.local_capacity == 1 << 16
+    assert out.superstep_rounds == 16
+
+
+def test_dist_measured_pool_excludes_infeasible():
+    """Measured trials rank by wall time alone, and a row-dropping config
+    does less work — infeasible candidates must never enter the pool."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.tune import DistProfile, replay_dist
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    prof = DistProfile(n=64, nw=2, ndev=4, n0=400, t_sizes=(60000, 0),
+                       c_counts=(5, 1), peak_device_live=30000,
+                       base_local_capacity=1 << 16, base_balance_every=1,
+                       balance_block=256)
+    base = EngineConfig(store=False, mesh=mesh, local_capacity=1 << 16)
+    seen = []
+
+    def measure(c):
+        assert replay_dist(prof, c).feasible, "timed an infeasible config"
+        seen.append(c)
+        return 1.0
+
+    AutoTuner(trials=4).tune(prof, base, measure=measure)
+    assert seen, "no trials ran"
+
+
 def test_cost_model_fit_recovers_coefficients():
     m = CostModel().fit([_synthetic_trace(a=0.5, b=20.0, compile_ms=100.0)])
     assert m.n_fit_events == 4
@@ -239,6 +305,51 @@ def test_store_save_merges_concurrent_writers(tmp_path):
     merged = TuneStore(path=path)
     assert merged.get(_key(0)) == dict(superstep_rounds=4)
     assert merged.get(_key(1)) == dict(superstep_rounds=32)
+
+
+def test_store_locked_save_survives_racing_writers(tmp_path):
+    """The fcntl lock serializes the read→merge→replace window: many
+    threads hammering one path through separate TuneStore instances must
+    not lose a single update (the pre-lock race could drop one)."""
+    import threading
+
+    path = str(tmp_path / "tune.json")
+    n_writers, n_keys = 8, 6
+    errs = []
+
+    def writer(w):
+        try:
+            s = TuneStore(path=path)
+            for i in range(n_keys):
+                s.put(_key(w * n_keys + i), dict(superstep_rounds=4 + w))
+        except Exception as e:  # pragma: no cover - surfaced via errs
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    merged = TuneStore(path=path)
+    assert len(merged) == n_writers * n_keys
+    for w in range(n_writers):
+        for i in range(n_keys):
+            assert merged.get(_key(w * n_keys + i)) == \
+                dict(superstep_rounds=4 + w)
+
+
+def test_tune_key_ndev_roundtrip_and_legacy_format():
+    """Mesh-routed keys carry the device count; unsharded keys keep the
+    pre-dist string format (old persisted stores parse unchanged)."""
+    k = TuneKey(shape="n32-m64-d4", store=False, formulation="slot",
+                backend="jnp", engine="dist", device_kind="cpu", ndev=4)
+    assert k.as_str().endswith("|x4")
+    assert TuneKey.from_str(k.as_str()) == k
+    legacy = "n32-m64-d4|count|slot|jnp|wave|cpu"
+    parsed = TuneKey.from_str(legacy)
+    assert parsed.ndev == 0 and parsed.as_str() == legacy
 
 
 def test_store_lru_eviction_and_recency_refresh():
