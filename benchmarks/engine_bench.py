@@ -131,10 +131,19 @@ def service_smoke(n_graphs: int = 6, out_path: str | None = None):
     warm_ms = (_time.perf_counter() - t0) * 1e3 / n_graphs
     warm_stats = dict(svc.stats)
 
-    # arm C — the multi-tenant path: whole batch in one vmapped program
+    # arm C — the multi-tenant path: whole batch in one vmapped program.
+    # First call includes the batched-plan + stage-1 seed compiles (cold);
+    # the gate metric is the WARM steady-state ms/graph, matching the
+    # warm-serving story arms A/B measure.
     t0 = _time.perf_counter()
     counts_batch = [r.n_cycles for r in svc.enumerate_batch(graphs)]
-    batch_ms = (_time.perf_counter() - t0) * 1e3 / n_graphs
+    batch_cold_ms = (_time.perf_counter() - t0) * 1e3 / n_graphs
+    batch_t = float("inf")
+    for _ in range(2):
+        t0 = _time.perf_counter()
+        counts_batch = [r.n_cycles for r in svc.enumerate_batch(graphs)]
+        batch_t = min(batch_t, _time.perf_counter() - t0)
+    batch_ms = batch_t * 1e3 / n_graphs
 
     assert counts_cold == counts_warm == counts_batch, "arms disagree"
     speedup = oneshot_ms / max(warm_ms, 1e-9)
@@ -143,6 +152,7 @@ def service_smoke(n_graphs: int = 6, out_path: str | None = None):
                oneshot_ms_per_graph=round(oneshot_ms, 2),
                warm_ms_per_graph=round(warm_ms, 2),
                batch_ms_per_graph=round(batch_ms, 2),
+               batch_cold_ms_per_graph=round(batch_cold_ms, 2),
                warm_speedup=round(speedup, 2),
                cache=warm_stats)
     path = out_path or os.path.join(RESULTS_DIR, "BENCH_service_smoke.json")
@@ -267,6 +277,68 @@ def tune_smoke(out_path: str | None = None):
         json.dump(doc, f, indent=2)
     print(f"wrote {path}")
     return doc
+
+
+def batch_smoke(n_graphs: int = 8, out_path: str | None = None):
+    """Batched-pallas A/B (DESIGN.md §6.7): ``enumerate_batch`` — one
+    lane-gridded device program advancing all lanes — vs the per-graph loop
+    it replaced (the old ``cfg.backend == 'pallas'`` service fallback:
+    warm per-graph ``enumerate`` calls). Same-shape batch, so the whole win
+    is dispatch amortization, not padding luck. Asserts bit-identical
+    results (counts AND per-lane histories), one batched dispatch per
+    superstep via trace counters, and the ≥1.5× amortized ms/graph win;
+    writes ``results/BENCH_batch_smoke.json``."""
+    import time as _time
+
+    from repro.core import CycleService, EngineConfig
+
+    cfg = EngineConfig(store=False, formulation="bitword", backend="pallas")
+    n, edges = grid_graph(4, 4)
+    graphs = [build_graph(n, edges) for _ in range(n_graphs)]
+    svc = CycleService(cfg, trace=True)
+
+    # warm both arms (compile once), checking equivalence on the way
+    loop_res = [svc.enumerate(g) for g in graphs]
+    batch_res = svc.enumerate_batch(graphs)
+    tr = svc.last_trace
+    kinds = [e.kind for e in tr.events]
+    assert kinds.count("seed") == 1, kinds       # ONE stage-1 seeding
+    assert set(kinds) <= {"seed", "batch"}, kinds  # no per-graph dispatches
+    n_supersteps = kinds.count("batch")
+    for a, b in zip(loop_res, batch_res):
+        assert a.n_cycles == b.n_cycles, "batched pallas count differs"
+        assert a.history == b.history, "batched pallas history differs"
+
+    loop_t = batch_t = float("inf")
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        [svc.enumerate(g) for g in graphs]
+        loop_t = min(loop_t, _time.perf_counter() - t0)
+        t0 = _time.perf_counter()
+        svc.enumerate_batch(graphs)
+        batch_t = min(batch_t, _time.perf_counter() - t0)
+    loop_ms = loop_t * 1e3 / n_graphs
+    batch_ms = batch_t * 1e3 / n_graphs
+    speedup = loop_ms / max(batch_ms, 1e-9)
+
+    row = dict(benchmark="batch_smoke", n_graphs=n_graphs, graph="Grid_4x4",
+               backend="pallas", formulation="bitword",
+               n_cycles=batch_res[0].n_cycles,
+               batch_supersteps=n_supersteps,
+               loop_ms_per_graph=round(loop_ms, 2),
+               batch_ms_per_graph=round(batch_ms, 2),
+               batch_speedup=round(speedup, 2))
+    path = out_path or os.path.join(RESULTS_DIR, "BENCH_batch_smoke.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(row, f, indent=2)
+    print(f"batch smoke: per-graph loop {loop_ms:.1f} ms/graph, batched "
+          f"{batch_ms:.1f} ms/graph ({speedup:.2f}x, {n_supersteps} "
+          f"superstep dispatches for {n_graphs} lanes) -> {path}")
+    assert speedup >= 1.5, (
+        f"batched pallas must amortize >=1.5x over the per-graph loop, "
+        f"got {speedup:.2f}")
+    return row
 
 
 _DIST_SMOKE_CODE = """
@@ -403,5 +475,6 @@ if __name__ == "__main__":
         tune_smoke()
     elif "--nightly" in sys.argv:
         nightly()
+        batch_smoke()
     else:
         main()

@@ -44,7 +44,36 @@ def run():
                      _time(E.expand_words_bitword, g, f), f"nw={g.n_words}"))
         rows.append((f"expand_bitword_pallas_{name}",
                      _time(ops.expand_words_bitword, g, f), "interpret=True"))
+    rows += run_lanes()
     return rows
+
+
+def run_lanes(B: int = 4):
+    """Lane-gridded kernel rows (DESIGN.md §6.7): one grid=(B, capp//tp)
+    pallas call for a B-lane frontier stack vs B single-lane calls — the
+    per-call dispatch amortization ``enumerate_batch`` rides."""
+    import jax.numpy as jnp
+    from repro.kernels.bitword_expand import bitword_expand_lanes
+
+    n, edges = grid_graph(5, 8)
+    g = build_graph(n, edges)
+    f, _, _ = initial_frontier(g)
+    stack = lambda a: jnp.stack([a] * B)
+    args1 = (f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+             g.adj_bits, g.labelgt_bits)
+    argsB = tuple(stack(a) for a in args1)
+
+    def loop_single(*args):
+        return [ops.expand_words_bitword(g, f) for _ in range(B)]
+
+    us_lanes = _time(lambda: bitword_expand_lanes(*argsB))
+    us_loop = _time(loop_single)
+    return [
+        (f"bitword_lanes_B{B}_grid5x8", us_lanes,
+         f"grid=({B},cap/tp) one call"),
+        (f"bitword_loop_B{B}_grid5x8", us_loop,
+         f"{B} single calls; lanes={us_loop / max(us_lanes, 1e-9):.2f}x"),
+    ]
 
 
 def main():

@@ -16,9 +16,11 @@ Sections:
 → results/BENCH_service_smoke.json), the tuned-vs-default autotuner A/B
 (→ results/BENCH_tune_smoke.json), plus the engine A/B JSON emission on
 the two smallest graphs. ``--nightly`` runs the paper's footnote-scale
-Grid_7x10 + Grid_8x10 count-only targets via the wave engine plus the
+Grid_7x10 + Grid_8x10 count-only targets via the wave engine, the
 sharded per-round-vs-superstep A/B (→ results/BENCH_dist_smoke.json,
->=2x dispatch reduction asserted). ``--check``
+>=2x dispatch reduction asserted), and the batched-pallas vs per-graph
+loop A/B (→ results/BENCH_batch_smoke.json, >=1.5x amortized ms/graph
+asserted). ``--check``
 is the CI regression gate: it re-runs the smoke suite into a temp dir and
 fails (exit 1) if any tracked ms/graph metric regressed >25% against the
 committed ``results/BENCH_*.json`` baselines.
@@ -118,6 +120,15 @@ def check() -> int:
                 if b:
                     cmp(f"dist[{fresh['arm']}]", fresh["t_warm_ms"],
                         b["t_warm_ms"])
+        base = _load_baseline("BENCH_batch_smoke.json")
+        if base:
+            print("== check: batched pallas (ms/graph) ==")
+            row = engine_bench.batch_smoke(
+                out_path=os.path.join(tmp, "batch.json"))
+            cmp("batch.batched", row["batch_ms_per_graph"],
+                base["batch_ms_per_graph"])
+            cmp("batch.loop", row["loop_ms_per_graph"],
+                base["loop_ms_per_graph"])
 
     if not checked:
         print("check: no committed baselines found — run --smoke first")
@@ -155,6 +166,8 @@ def main() -> None:
         engine_bench.nightly()
         print("\n== dist smoke (per-round vs sharded wave superstep) ==")
         engine_bench.dist_smoke()
+        print("\n== batch smoke (batched pallas vs per-graph loop) ==")
+        engine_bench.batch_smoke()
         return
 
     print("== engine A/B ==")

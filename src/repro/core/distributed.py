@@ -102,9 +102,12 @@ def _fspec(axis: str) -> Frontier:
 
 
 def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int):
-    """One expansion round on this device's rows. Returns (f', n_cyc, drop)."""
-    cand, is_cyc, is_ext = E.expand_flags_slot(g, f, delta)
-    n_cyc = is_cyc.sum(dtype=jnp.int32)
+    """One expansion round on this device's rows. Returns (f', n_cyc, drop).
+
+    Programs against the same ``ExpandOp`` interface as the wave superstep
+    (DESIGN.md §6.7) — the sharded path is slot/jnp by validation."""
+    op = E.expand_op("slot", "jnp")
+    (cand, _, is_ext), n_cyc, _ = op.flags(g, f, delta)
     f2, dropped = E.compact_extensions(g, f, cand, is_ext, cap)
     return f2, n_cyc, dropped
 

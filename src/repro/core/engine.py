@@ -188,10 +188,14 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
     UNJITTED device algorithm — compilation (jit + buffer donation + the
     cross-graph program cache + vmap over a graph batch axis) is owned by
     ``core.plan``; execution (the host driver loop) by ``core.service``.
+    The round body programs against the ``ExpandOp`` registry
+    (DESIGN.md §6.7), whose ops are batch-transparent on every backend —
+    ``jax.vmap`` of this function is the batched superstep.
 
     Returns (f', buf', rounds_done, status, t_hist, c_hist, pending_new,
     pending_cyc). ``pending_*`` carry the aborted round's exact sizes so the
     host can pick the next bucket without an extra counting dispatch."""
+    op = E.expand_op(formulation, backend)
     cap = f.capacity
     # decay exit: once the wave shrinks well below the bucket, dead-row work
     # dominates — hand back to the host to re-bucket DOWN (shapes are static
@@ -205,8 +209,7 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
     def body(c):
         f, buf, r, status, th, ch, pn, pc = c
         f2, buf2, n_cyc, n_new, ok_f, ok_c = E.expand_count_compact(
-            g, f, buf, delta=delta, formulation=formulation, store=store,
-            backend=backend)
+            g, f, buf, delta=delta, store=store, op=op)
         ok = ok_f & ok_c
         th = th.at[r].set(jnp.where(ok, n_new, 0))
         ch = ch.at[r].set(jnp.where(ok, n_cyc, 0))
@@ -237,17 +240,14 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
 def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
                     progress: Callable[[dict], None] | None,
                     trace: WaveTrace | None = None) -> EnumerationResult:
+    op = E.expand_op(cfg.formulation, cfg.backend)
     if cfg.backend == "pallas":
         from ..kernels import ops as kops
-        slot_flags = kops.expand_flags_slot
         trip_flags = kops.triplet_flags
         bitword_count = kops.bitword_flags_count
-        bitword_words = kops.expand_words_bitword
     else:
-        slot_flags = E.expand_flags_slot
         trip_flags = T.triplet_flags
         bitword_count = E.bitword_flags_count
-        bitword_words = E.expand_words_bitword
 
     store, formulation = cfg.store, cfg.formulation
     delta = max(g.max_degree, 1)
@@ -300,17 +300,16 @@ def _enumerate_host(g: BitsetGraph, cfg: EngineConfig,
                 progress(rec)
             continue
 
+        flags, n_cyc_j, n_new_j = op.flags(g, frontier, delta)
         if formulation == "bitword":
-            close_w, ext_w = bitword_words(g, frontier)
+            close_w, ext_w = flags
             cand_v = E.bitword_to_slots(ext_w, delta)
             is_ext = cand_v >= 0
             ccand = E.bitword_to_slots(close_w, delta)
-            is_cyc = ccand >= 0
-            cyc_src, cyc_flags = ccand, is_cyc
+            cyc_src, cyc_flags = ccand, ccand >= 0
         else:
-            cand_v, is_cyc, is_ext = slot_flags(g, frontier, delta)
+            cand_v, is_cyc, is_ext = flags
             cyc_src, cyc_flags = cand_v, is_cyc
-        n_new_j, n_cyc_j = E.count_ext_and_cycles(is_cyc, is_ext)
         trace.launch()
         fetch = (n_cyc_j, n_new_j) + (
             () if prev_dropped is None else (prev_dropped,))

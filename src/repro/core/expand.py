@@ -18,6 +18,13 @@ The wave engine (DESIGN.md §6.4) composes these into a single fused round,
 into the device-resident ``CycleBuffer``, and prefix-sum compaction — all
 traceable inside ``lax.while_loop`` at fixed capacities, so an entire
 superstep of K rounds compiles to one program with zero host syncs.
+
+Backends implement ONE interface (DESIGN.md §6.7): ``ExpandOp`` — the
+(formulation × backend) registry every layer of the stack (wave superstep,
+legacy host engine, sharded step) programs against. Every op is
+batch-transparent: it traces identically with or without a leading lane
+axis, so ``jax.vmap`` of the superstep works on every backend (the pallas
+ops route vmap onto lane-gridded kernels via ``custom_vmap``).
 """
 from __future__ import annotations
 
@@ -209,64 +216,145 @@ def gather_cycles_into(f: Frontier, cand_v: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Fused wave round (DESIGN.md §6.4)
+# ExpandOp — the one expansion interface every backend implements
+# (DESIGN.md §6.7)
 # ---------------------------------------------------------------------------
 
-def _round_flags(g: BitsetGraph, f: Frontier, delta: int, formulation: str,
-                 backend: str):
-    """Flags + counts for one round, no host syncs. Returns
-    (flags, n_cyc, n_new); ``flags`` is formulation-specific."""
-    if formulation == "bitword":
-        if backend == "pallas":
-            from ..kernels import ops as kops
-            close_w, ext_w, n_cyc, n_new = kops.bitword_fused_counts(g, f)
-            return (close_w, ext_w), n_cyc, n_new
-        close_w, ext_w = expand_words_bitword(g, f)
-        return ((close_w, ext_w), popcount(close_w).sum(),
-                popcount(ext_w).sum())
-    if backend == "pallas":
-        from ..kernels import ops as kops
-        cand_v, is_cyc, is_ext = kops.expand_flags_slot(g, f, delta)
-    else:
-        cand_v, is_cyc, is_ext = expand_flags_slot(g, f, delta)
-    n_new, n_cyc = count_ext_and_cycles(is_cyc, is_ext)
-    return (cand_v, is_cyc, is_ext), n_cyc, n_new
+class ExpandOp:
+    """One (formulation × backend) implementation of a stage-2 expansion
+    round — the single interface the whole stack (wave superstep, legacy
+    host engine, sharded ``core/distributed`` step) programs against.
+
+    Contract: every method is BATCH-TRANSPARENT — it traces identically
+    whether the operands are single-graph ((cap, nw) frontier leaves,
+    (n, nw) graph tables) or carry a leading lane axis under ``jax.vmap``.
+    The jnp ops are vmap-transparent by construction; the pallas ops install
+    ``custom_vmap`` rules that route vmap onto the lane-gridded kernels
+    (grid=(B, capp//tp)) so a batched superstep still issues ONE device
+    dispatch per round.
+
+    * ``flags(g, f, delta)`` → ``(flags, n_cyc, n_new)``: the round's flag
+      computation plus its cycle/extension counts, no host syncs;
+      ``flags`` is formulation-specific (slot: ``(cand_v, is_cyc,
+      is_ext)`` per (path, slot); bitword: ``(close_words, ext_words)``).
+    * ``apply(g, f, buf, flags, delta, store)`` → ``(f', buf')``: gather
+      this round's cycles + compact extensions at fixed capacity — the
+      T → T' update.
+    """
+    formulation: str
+    backend: str
+
+    def flags(self, g: BitsetGraph, f: Frontier, delta: int):
+        raise NotImplementedError
+
+    def apply(self, g: BitsetGraph, f: Frontier, buf: CycleBuffer, flags,
+              delta: int, store: bool):
+        raise NotImplementedError
 
 
-def _apply_round(g: BitsetGraph, f: Frontier, buf: CycleBuffer, flags,
-                 delta: int, formulation: str, store: bool):
-    """Gather this round's cycles + compact extensions, both at fixed
-    capacity (frontier bucket / cycle buffer) — the T → T' update."""
-    if formulation == "bitword":
+class _SlotApply:
+    """Shared slot-formulation T → T' update."""
+
+    def apply(self, g, f, buf, flags, delta, store):
+        cand_v, is_cyc, is_ext = flags
+        if store:
+            buf = gather_cycles_into(f, cand_v, is_cyc, buf)
+        f2, _ = compact_extensions(g, f, cand_v, is_ext, f.capacity)
+        return f2, buf
+
+
+class _BitwordApply:
+    """Shared bitword-formulation T → T' update (slot extraction from the
+    candidate words, then the same prefix-sum compaction)."""
+
+    def apply(self, g, f, buf, flags, delta, store):
         close_w, ext_w = flags
         cand_v = bitword_to_slots(ext_w, delta)
         is_ext = cand_v >= 0
         if store:
             ccand = bitword_to_slots(close_w, delta)
             buf = gather_cycles_into(f, ccand, ccand >= 0, buf)
-    else:
-        cand_v, is_cyc, is_ext = flags
-        if store:
-            buf = gather_cycles_into(f, cand_v, is_cyc, buf)
-    f2, _ = compact_extensions(g, f, cand_v, is_ext, f.capacity)
-    return f2, buf
+        f2, _ = compact_extensions(g, f, cand_v, is_ext, f.capacity)
+        return f2, buf
 
+
+class SlotXlaExpand(_SlotApply, ExpandOp):
+    formulation, backend = "slot", "jnp"
+
+    def flags(self, g, f, delta):
+        cand_v, is_cyc, is_ext = expand_flags_slot(g, f, delta)
+        n_new, n_cyc = count_ext_and_cycles(is_cyc, is_ext)
+        return (cand_v, is_cyc, is_ext), n_cyc, n_new
+
+
+class SlotPallasExpand(_SlotApply, ExpandOp):
+    formulation, backend = "slot", "pallas"
+
+    def flags(self, g, f, delta):
+        from ..kernels import ops as kops
+        cand_v, is_cyc, is_ext = kops.expand_flags_slot(g, f, delta)
+        n_new, n_cyc = count_ext_and_cycles(is_cyc, is_ext)
+        return (cand_v, is_cyc, is_ext), n_cyc, n_new
+
+
+class BitwordXlaExpand(_BitwordApply, ExpandOp):
+    formulation, backend = "bitword", "jnp"
+
+    def flags(self, g, f, delta):
+        close_w, ext_w = expand_words_bitword(g, f)
+        return ((close_w, ext_w), popcount(close_w).sum(),
+                popcount(ext_w).sum())
+
+
+class BitwordPallasExpand(_BitwordApply, ExpandOp):
+    formulation, backend = "bitword", "pallas"
+
+    def flags(self, g, f, delta):
+        from ..kernels import ops as kops
+        close_w, ext_w, n_cyc, n_new = kops.bitword_fused_counts(g, f)
+        return (close_w, ext_w), n_cyc, n_new
+
+
+_EXPAND_OPS: dict[tuple[str, str], ExpandOp] = {
+    (op.formulation, op.backend): op
+    for op in (SlotXlaExpand(), SlotPallasExpand(),
+               BitwordXlaExpand(), BitwordPallasExpand())
+}
+
+
+def expand_op(formulation: str, backend: str) -> ExpandOp:
+    """The registered ExpandOp for a (formulation, backend) pair."""
+    try:
+        return _EXPAND_OPS[(formulation, backend)]
+    except KeyError:
+        raise ValueError(
+            f"no ExpandOp registered for formulation={formulation!r}, "
+            f"backend={backend!r}; known: {sorted(_EXPAND_OPS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Fused wave round (DESIGN.md §6.4)
+# ---------------------------------------------------------------------------
 
 def expand_count_compact(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
-                         delta: int, formulation: str, store: bool,
-                         backend: str = "jnp"):
+                         delta: int, store: bool,
+                         formulation: str = "slot", backend: str = "jnp",
+                         op: ExpandOp | None = None):
     """One fused, guarded expansion round — the wave superstep's loop body.
 
-    Combines ``bitword_flags_count`` + ``bitword_compact`` (and the slot
-    equivalent) into a single traced unit: flag computation, popcount cycle
-    counting, in-buffer cycle gathering, and prefix-sum compaction back into
-    the SAME capacity bucket.  If the round would overflow the frontier
-    bucket or the cycle buffer it is NOT applied; the caller reads the
-    ``ok_*`` flags and escalates to the host (bucket transition).
+    Combines an ``ExpandOp``'s flag computation and application into a
+    single traced unit: flag computation, popcount cycle counting,
+    in-buffer cycle gathering, and prefix-sum compaction back into the SAME
+    capacity bucket.  If the round would overflow the frontier bucket or
+    the cycle buffer it is NOT applied; the caller reads the ``ok_*`` flags
+    and escalates to the host (bucket transition).  ``op`` defaults to the
+    registered ``expand_op(formulation, backend)``.
 
     Returns (f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles).
     """
-    flags, n_cyc, n_new = _round_flags(g, f, delta, formulation, backend)
+    if op is None:
+        op = expand_op(formulation, backend)
+    flags, n_cyc, n_new = op.flags(g, f, delta)
     ok_frontier = n_new <= f.capacity
     if store:
         ok_cycles = (buf.count + n_cyc) <= buf.capacity
@@ -276,7 +364,7 @@ def expand_count_compact(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
 
     f2, buf2 = jax.lax.cond(
         ok,
-        lambda _: _apply_round(g, f, buf, flags, delta, formulation, store),
+        lambda _: op.apply(g, f, buf, flags, delta, store),
         lambda _: (f, buf),
         None)
     return f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles

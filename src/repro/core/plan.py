@@ -97,6 +97,12 @@ class WavePlan:
         if key.batch:
             # one graph per lane; rounds_limit is per-lane (each graph has
             # its own |V|−3 budget). jax masks lanes whose while-cond ended.
+            # Valid for EVERY backend (DESIGN.md §6.7): the jnp expand ops
+            # are vmap-transparent and the pallas ops carry custom_vmap
+            # rules onto the lane-gridded kernels, so this one vmap IS the
+            # batched plan — no per-backend fallback. Donation is
+            # unaffected: the stacked frontier/CycleBuffer leaves alias
+            # in place exactly like their unbatched shapes.
             fn = jax.vmap(_traced, in_axes=(0, 0, 0, 0))
         self.fn = jax.jit(fn, donate_argnums=(1, 2) if donate else ())
 

@@ -42,8 +42,8 @@ from .bitset_graph import BitsetGraph
 from . import triplets as T
 from .engine import (STATUS_NAMES, EngineConfig, EnumerationResult, _DONE,
                      _DRAIN, _GROW, _RUN, _SHRINK, _enumerate_host)
-from .frontier import (empty_cycle_buffer, empty_frontier, stack_frontiers,
-                       with_capacity, with_capacity_batched)
+from .frontier import (empty_cycle_buffer, empty_frontier, with_capacity,
+                       with_capacity_batched)
 from .plan import PlanKey, ProgramCache, WavePlan, batch_graphs, batch_shape
 from ..tune.telemetry import WaveTrace, disabled_trace
 
@@ -109,7 +109,7 @@ class CycleService:
     # -- tuning (repro.tune integration) ----------------------------------
 
     def _resolve_config(self, n: int, m: int, delta: int, cfg: EngineConfig,
-                        explicit: bool = False):
+                        explicit: bool = False, batch: int = 0):
         """Route a request's config through the tuner (DESIGN.md §6.6).
 
         Returns ``(cfg, tune_key, observe)``: with a stored tuned entry for
@@ -131,7 +131,7 @@ class CycleService:
         if (self._tuner is None or explicit
                 or (cfg.mesh is None and cfg.engine != "wave")):
             return cfg, None, False
-        key = self._tuner.key_for(n, m, delta, cfg)
+        key = self._tuner.key_for(n, m, delta, cfg, batch=batch)
         tuned = self._tuner.lookup(key, cfg)
         if tuned is not None:
             self._counters["tuned_requests"] += 1
@@ -190,8 +190,8 @@ class CycleService:
                 "first enumerate, the host engine has no plan")
         nw = g.adj_bits.shape[1]
         delta = max(g.max_degree, 1)
-        frontier, _, _ = T.initial_frontier(
-            g, bucket=cfg.bucket, flags_fn=self._trip_flags(cfg))
+        frontier, _, _ = T.initial_frontier_device(
+            g, bucket=cfg.bucket, backend=cfg.backend)
         cap = frontier.capacity
         cyc_cap = (cfg.bucket(max(cfg.cycle_buffer_rows, 16))
                    if cfg.store else 1)
@@ -200,13 +200,6 @@ class CycleService:
         plan(g, empty_frontier(cap, nw), empty_cycle_buffer(cyc_cap, nw),
              jnp.int32(0))
         return plan
-
-    @staticmethod
-    def _trip_flags(cfg: EngineConfig):
-        if cfg.backend == "pallas":
-            from ..kernels import ops as kops
-            return kops.triplet_flags
-        return None  # triplets.initial_frontier defaults to the jnp path
 
     # -- execute: single graph --------------------------------------------
 
@@ -299,8 +292,8 @@ class CycleService:
         replaced by a ProgramCache lookup."""
         delta = max(g.max_degree, 1)
         nw = g.adj_bits.shape[1]
-        frontier, tri_masks, n_tri = T.initial_frontier(
-            g, bucket=cfg.bucket, flags_fn=self._trip_flags(cfg))
+        frontier, tri_masks, n_tri = T.initial_frontier_device(
+            g, bucket=cfg.bucket, backend=cfg.backend)
 
         trace = trace if trace is not None else disabled_trace()
         n_cycles = n_tri
@@ -405,17 +398,24 @@ class CycleService:
         maxima (n, m, Δ), frontiers share one capacity bucket, and the
         superstep advances all lanes per dispatch; per-lane |V|−3 budgets
         and exit statuses keep semantics identical to per-graph calls.
-        The pallas backend and the host engine fall back to a per-graph
-        loop (pallas kernels are not vmap-batched)."""
+        Batch is a first-class axis on EVERY backend (DESIGN.md §6.7): the
+        pallas kernels run on a lane grid under the same vmapped plan, so
+        there is no per-graph fallback; stage 1 seeds all lanes device-side
+        in one dispatch (``T.initial_frontier_batched``). Only the legacy
+        host engine (the per-round A/B baseline) loops per graph."""
         cfg = config if config is not None else self.cfg
         if cfg.mesh is not None:
-            raise ValueError("enumerate_batch is single-device; use one "
-                             "request per mesh instead")
+            raise NotImplementedError(
+                "enumerate_batch over the mesh-sharded (shard_map) path is "
+                "not implemented: the sharded superstep shards ONE graph's "
+                "frontier rows across devices and has no graph-lane axis "
+                "to batch over. Use mesh=None for batching, or one "
+                "enumerate(config=<mesh cfg>) request per graph for "
+                "sharded counting.")
         graphs = list(graphs)
         if not graphs:
             return []
-        if len(graphs) == 1 or cfg.engine == "host" \
-                or cfg.backend == "pallas":
+        if len(graphs) == 1 or cfg.engine == "host":
             return [self.enumerate(g, config=cfg) for g in graphs]
 
         self._counters["requests"] += 1
@@ -424,34 +424,33 @@ class CycleService:
 
         B = len(graphs)
         n_pad, m_pad, delta = batch_shape(graphs)
-        # the whole batch runs at the padded shape, so the padded shape IS
-        # the workload class: tuned knobs resolve from it (lookup-only —
-        # per-lane histories are not observed back into the tuner).
-        cfg, _, _ = self._resolve_config(n_pad, m_pad, delta, cfg,
-                                         explicit=config is not None)
-        trace = self._new_trace(False)
+        # the whole batch runs at the padded shape, so the padded shape —
+        # plus the batch-size class — IS the workload class the tuned knobs
+        # resolve from; first visits observe the per-lane wave shapes back
+        # into the tuner (lane-aware replay, DESIGN.md §6.7).
+        cfg, tkey, observe = self._resolve_config(
+            n_pad, m_pad, delta, cfg, explicit=config is not None, batch=B)
+        trace = self._new_trace(observe)
         gbat = batch_graphs(graphs)
         nw = gbat.adj_bits.shape[-1]
 
-        # stage 1 per lane on the host (compaction is host-side anyway),
-        # then re-bucket everyone to the shared capacity and stack.
-        fronts, tris, ntris = [], [], []
-        from .plan import pad_graph
-        for g in graphs:
-            pg = pad_graph(g, n_pad, m_pad, delta)
-            f, tri_masks, n_tri = T.initial_frontier(pg, bucket=cfg.bucket)
-            fronts.append(f)
-            tris.append(tri_masks)
-            ntris.append(n_tri)
-        cap = max(f.capacity for f in fronts)
-        fbat = stack_frontiers([with_capacity(f, cap) for f in fronts])
+        # stage 1 device-side: one counts dispatch + ONE seeding dispatch
+        # scatter every lane's triplets (and triangle bitmaps) in place —
+        # no host nonzero, no per-lane H2D (DESIGN.md §6.7).
+        trace.tic()
+        fbat, tri_bat, ntris, cnts = T.initial_frontier_batched(
+            gbat, delta=delta, bucket=cfg.bucket, backend=cfg.backend)
+        cap = fbat.path.shape[1]
+        trace.sync()
+        trace.dispatch(
+            kind="seed", bucket=cap, cyc_cap=0, budget=0, rounds=0,
+            status="RUN", enter_count=int(cnts.sum()),
+            exit_count=int(cnts.sum()), t_ms=trace.toc_ms(), launches=2)
 
         cyc_cap = (cfg.bucket(max(cfg.cycle_buffer_rows, 16))
                    if cfg.store else 1)
         bufbat = empty_cycle_buffer(cyc_cap, nw, batch=B)
 
-        cnts = np.asarray(jax.device_get(fbat.count), np.int64)
-        trace.sync()
         limits = np.array([max(g.n - 3, 0) for g in graphs], np.int64)
         if cfg.max_iters is not None:
             limits = np.minimum(limits, cfg.max_iters)
@@ -459,8 +458,12 @@ class CycleService:
         n_cycles = [int(t) for t in ntris]
         histories = [[dict(step=0, T=int(cnts[i]), C=int(ntris[i]))]
                      for i in range(B)]
-        chunks: list[list[np.ndarray]] = [[tris[i]] if cfg.store else []
-                                          for i in range(B)]
+        if cfg.store:
+            tri_h = np.asarray(tri_bat)
+            chunks: list[list[np.ndarray]] = [
+                [tri_h[i, :int(ntris[i])].copy()] for i in range(B)]
+        else:
+            chunks = [[] for _ in range(B)]
 
         K = cfg.superstep_rounds
         relaunches = 0
@@ -554,6 +557,16 @@ class CycleService:
                         chunks[i].append(masks_h[i, :int(bc_h[i])].copy())
                         trace.drain()
             trace.sync()
+
+        if observe and tkey is not None:
+            # first visit of this (shape × batch-size) class: profile the
+            # per-lane wave shapes and let the tuner trade superstep_rounds
+            # against lane imbalance through the lane-aware replay twin.
+            from ..tune import WaveProfile
+            profile = WaveProfile.from_batch(
+                histories, lane_n=[g.n for g in graphs], n=n_pad, nw=nw,
+                max_iters=cfg.max_iters)
+            self._tuner.observe_profile(tkey, cfg, profile, traces=(trace,))
 
         stats = trace.finalize(rounds=int(its.max()))
         results = []

@@ -4,11 +4,30 @@ The paper launches |V|·Δ² GPU threads; thread j decodes (i_u, i_x, i_y) from
 its global id (Eqs. 1–3) and tests the label condition ℓ(u) < ℓ(x) < ℓ(y) plus
 adjacency of (x, y).  Here the same 3-D index grid is evaluated as one
 vectorized flag computation (tiled by the caller if n·Δ² is large); the
-paper's atomic append into C / T(G) becomes deterministic stream compaction
-(host nonzero or cumsum-scatter — DESIGN.md §2).
+paper's atomic append into C / T(G) becomes deterministic stream compaction.
+
+Two compaction paths (DESIGN.md §2, §6.7):
+
+* ``initial_frontier``        — legacy host nonzero (kept as the A/B
+                                baseline the host engine drives).
+* ``initial_frontier_device`` — device-side: the triplet-flags →
+                                cumsum-scatter deal PR 4 built for the
+                                sharded path (``core/distributed``),
+                                hoisted here for the single-device path.
+                                One tiny counts dispatch sizes the bucket,
+                                then ONE seeding dispatch scatters every
+                                triplet (and triangle bitmap) in place —
+                                no host nonzero, no per-row H2D.  The
+                                seeding program is vmappable, so a graph
+                                batch seeds ALL lanes in one dispatch
+                                (``initial_frontier_batched``).
+
+Both produce bit-identical frontiers: cumsum order over the flat (n·Δ·Δ)
+grid IS ascending-index order, the exact order ``np.flatnonzero`` walks.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import numpy as np
@@ -115,3 +134,120 @@ def initial_frontier(g: BitsetGraph, *, bucket=lambda c: max(1, int(c)),
     else:
         tri_masks = np.zeros((0, g.adj_bits.shape[1]), np.uint32)
     return frontier, tri_masks, n_tri
+
+
+# ---------------------------------------------------------------------------
+# Device-side stage 1 (DESIGN.md §6.7) — the PR-4 cumsum-scatter deal,
+# hoisted from core/distributed for the single-device path, vmappable so a
+# whole batch seeds in one dispatch.
+# ---------------------------------------------------------------------------
+
+def _flags_fn(backend: str):
+    if backend == "pallas":
+        from ..kernels import ops as kops
+        return kops.triplet_flags
+    return triplet_flags
+
+
+def _flags_counts(g: BitsetGraph, delta: int, backend: str):
+    """Flags + their counts in one traced unit. The flag grids stay on
+    device and feed the (jnp-only) seeding program — flags are computed
+    ONCE per stage 1, not once for counting and again for seeding."""
+    tri, trip = _flags_fn(backend)(g, delta)
+    return tri, trip, tri.sum(dtype=jnp.int32), trip.sum(dtype=jnp.int32)
+
+
+def _seed_from_flags(g: BitsetGraph, tri, trip, capacity: int,
+                     tri_capacity: int):
+    """One traced seeding unit: precomputed flag grids → cumsum-scatter
+    into a Frontier of static ``capacity`` plus triangle bitmaps of static
+    ``tri_capacity``. Pure jnp, batch-transparent — ``jax.vmap`` of this
+    seeds every lane at once. Returns (frontier, tri_masks, n_tri,
+    overflow)."""
+    from .expand import compaction_dests
+    flat_trip = trip.reshape(-1)
+    n_grid = flat_trip.shape[0]
+    grid_ids = jnp.arange(n_grid, dtype=jnp.int32)
+
+    dest, total = compaction_dests(flat_trip, capacity)
+    idx = jnp.zeros((capacity,), jnp.int32).at[dest].set(grid_ids,
+                                                         mode="drop")
+    f = gather_triplets(g, idx, jnp.minimum(total, capacity), capacity)
+    overflow = jnp.maximum(total - capacity, 0)
+
+    flat_tri = tri.reshape(-1)
+    tdest, ttotal = compaction_dests(flat_tri, tri_capacity)
+    tidx = jnp.zeros((tri_capacity,), jnp.int32).at[tdest].set(grid_ids,
+                                                               mode="drop")
+    tri_f = gather_triplets(g, tidx, jnp.minimum(ttotal, tri_capacity),
+                            tri_capacity)
+    return f, tri_f.path, ttotal, overflow
+
+
+@functools.lru_cache(maxsize=None)
+def _flags_counts_program(delta: int, backend: str, batched: bool):
+    fn = lambda g: _flags_counts(g, delta, backend)
+    if batched:
+        fn = jax.vmap(fn)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _seed_program(delta: int, capacity: int, tri_capacity: int,
+                  batched: bool):
+    fn = lambda g, tri, trip: _seed_from_flags(g, tri, trip, capacity,
+                                               tri_capacity)
+    if batched:
+        fn = jax.vmap(fn)
+    return jax.jit(fn)
+
+
+def initial_frontier_device(g: BitsetGraph, *,
+                            bucket=lambda c: max(1, int(c)),
+                            backend: str = "jnp"):
+    """Device-side stage 1 for one graph: a flags+counts dispatch sizes the
+    bucket (flag grids stay device-resident), then ONE seeding dispatch
+    scatters every triplet and triangle in place (no host nonzero).
+    Drop-in for ``initial_frontier`` — returns (frontier, triangle_masks
+    (t, nw) uint32 np.ndarray, n_triangles), row-for-row identical."""
+    nw = g.adj_bits.shape[1]
+    if g.m == 0:
+        from .frontier import empty_frontier
+        return empty_frontier(1, nw), np.zeros((0, nw), np.uint32), 0
+    delta = max(g.max_degree, 1)
+    tri, trip, ntri_j, ntrip_j = _flags_counts_program(
+        delta, backend, False)(g)
+    n_tri, n_trip = (int(x) for x in jax.device_get((ntri_j, ntrip_j)))
+    cap = bucket(max(n_trip, 1))
+    # bucket the triangle capacity too: the fused seed program is one jit
+    # shape for BOTH scatters, so an exact tcap would recompile it for
+    # every distinct triangle count (callers slice to n_tri anyway)
+    tcap = bucket(max(n_tri, 1))
+    frontier, tri_masks, _, _ = _seed_program(
+        delta, cap, tcap, False)(g, tri, trip)
+    return frontier, np.asarray(tri_masks)[:n_tri], n_tri
+
+
+def initial_frontier_batched(gbat: BitsetGraph, *, delta: int, bucket,
+                             backend: str = "jnp"):
+    """Device-side stage 1 for a stacked graph batch: ONE flags+counts
+    dispatch for every lane, then ONE seeding dispatch that cumsum-scatters
+    all B frontiers (and triangle bitmaps) — no host nonzero, no per-lane
+    H2D.
+
+    Returns (stacked frontier (leaves (B, cap, …)), tri_masks (B, tcap, nw)
+    device array, n_tri (B,) np.int64, n_trip (B,) np.int64). The shared
+    ``cap`` is the bucket of the largest lane (the batch runs at one
+    shape); ``tcap`` is the bucket of the largest lane's triangle count.
+    """
+    tri, trip, ntri_j, ntrip_j = _flags_counts_program(
+        delta, backend, True)(gbat)
+    n_tri, n_trip = (np.asarray(jax.device_get(x), np.int64)
+                     for x in (ntri_j, ntrip_j))
+    cap = bucket(max(int(n_trip.max()), 1))
+    # bucketed like cap — an exact tcap would recompile the fused seed
+    # program per distinct triangle count (lanes are sliced to n_tri[i])
+    tcap = bucket(max(int(n_tri.max()), 1))
+    fbat, tri_masks, _, _ = _seed_program(
+        delta, cap, tcap, True)(gbat, tri, trip)
+    return fbat, tri_masks, n_tri, n_trip

@@ -2,5 +2,10 @@
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
 under interpret=True on CPU against the pure-jnp oracles in ref.py.
+
+Every kernel runs on a ``grid=(B, …)`` LANE GRID (DESIGN.md §6.7) — the
+single-graph entry points are the B=1 special case, and the ``ops``
+wrappers carry ``custom_vmap`` rules mapping ``jax.vmap`` onto the lane
+axis so a batched wave superstep is ONE kernel dispatch per round.
 """
 from . import ops, ref  # noqa: F401

@@ -16,6 +16,13 @@ words also reduces their ``population_count`` per row — both the cycle count
 (close words) and the extension count (ext words) — so the wave engine's
 counting step costs zero extra memory traffic: the words are still in VMEM
 when they are counted.
+
+Batch is a first-class axis (DESIGN.md §6.7): the kernel runs on a
+``grid=(B, capp//tp)`` LANE GRID — grid dim 0 walks graph lanes, dim 1 walks
+frontier row tiles within a lane; every BlockSpec carries a leading
+lane-block of 1 and each lane pins its own graph tables in VMEM. The
+single-graph entry point is the B=1 special case of the same kernel, so one
+compiled shape family serves both ``enumerate`` and ``enumerate_batch``.
 """
 from __future__ import annotations
 
@@ -29,13 +36,14 @@ from jax.experimental import pallas as pl
 def _bitword_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
                     adj_ref, labelgt_ref,
                     close_ref, ext_ref, ncyc_ref, next_ref):
-    path = path_ref[...]
-    blocked = blocked_ref[...]
-    v1 = v1_ref[...][:, 0]
-    l2 = l2_ref[...][:, 0]
-    vlast = vlast_ref[...][:, 0]
-    adj = adj_ref[...]
-    labelgt = labelgt_ref[...]
+    # every ref carries a leading lane-block dim of 1 (the lane grid axis)
+    path = path_ref[0]
+    blocked = blocked_ref[0]
+    v1 = v1_ref[0][:, 0]
+    l2 = l2_ref[0][:, 0]
+    vlast = vlast_ref[0][:, 0]
+    adj = adj_ref[0]            # this lane's graph, whole, VMEM-pinned
+    labelgt = labelgt_ref[0]
     n = adj.shape[0]
 
     adj_last = jnp.take(adj, jnp.clip(vlast, 0, n - 1), axis=0)
@@ -45,55 +53,76 @@ def _bitword_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
     cand = adj_last & ~path & ~blocked & gt
     close = cand & adj_v1
     ext = cand & ~adj_v1
-    close_ref[...] = close
-    ext_ref[...] = ext
+    close_ref[0] = close
+    ext_ref[0] = ext
     # fused popcount reductions — words are still register/VMEM-resident
-    ncyc_ref[...] = jax.lax.population_count(close).astype(jnp.int32).sum(
+    ncyc_ref[0] = jax.lax.population_count(close).astype(jnp.int32).sum(
         axis=1, keepdims=True)
-    next_ref[...] = jax.lax.population_count(ext).astype(jnp.int32).sum(
+    next_ref[0] = jax.lax.population_count(ext).astype(jnp.int32).sum(
         axis=1, keepdims=True)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def bitword_expand_pallas(path, blocked, v1, l2, vlast, count,
-                          adj_bits, labelgt_bits,
-                          *, tile: int = 128, interpret: bool = True):
-    """Returns (close_words, ext_words, n_cycles_per_row, n_ext_per_row)
-    for live rows (dead rows are zeroed)."""
-    cap, nw = path.shape
+def bitword_expand_lanes(path, blocked, v1, l2, vlast, count,
+                         adj_bits, labelgt_bits,
+                         *, tile: int = 128, interpret: bool = True):
+    """Lane-gridded bitword expansion: ONE ``pallas_call`` advances every
+    lane of a graph batch.
+
+    Shapes: ``path``/``blocked`` (B, cap, nw); ``v1``/``l2``/``vlast``/
+    ``count`` (B, cap) / (B,); ``adj_bits``/``labelgt_bits`` (B, n, nw).
+    Returns (close_words, ext_words, n_cycles_per_row, n_ext_per_row), each
+    with the leading lane axis (dead rows zeroed per lane).
+    """
+    B, cap, nw = path.shape
     tp = min(tile, max(8, cap))
     pad = (-cap) % tp
-    padded = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
-    col = lambda a: padded(a.reshape(-1, 1))
+    padded = lambda a: jnp.pad(
+        a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    col = lambda a: padded(a[..., None])
     capp = cap + pad
-    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    lane_whole = lambda a: pl.BlockSpec(
+        (1,) + a.shape[1:], lambda b, i: (b,) + (0,) * (a.ndim - 1))
 
     close, ext, ncyc, next_ = pl.pallas_call(
         _bitword_kernel,
-        grid=(capp // tp,),
+        grid=(B, capp // tp),
         in_specs=[
-            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
-            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
-            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
-            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
-            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
-            whole(adj_bits), whole(labelgt_bits),
+            pl.BlockSpec((1, tp, nw), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, nw), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0)),
+            lane_whole(adj_bits), lane_whole(labelgt_bits),
         ],
-        out_specs=[pl.BlockSpec((tp, nw), lambda i: (i, 0)),
-                   pl.BlockSpec((tp, nw), lambda i: (i, 0)),
-                   pl.BlockSpec((tp, 1), lambda i: (i, 0)),
-                   pl.BlockSpec((tp, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((capp, nw), jnp.uint32),
-                   jax.ShapeDtypeStruct((capp, nw), jnp.uint32),
-                   jax.ShapeDtypeStruct((capp, 1), jnp.int32),
-                   jax.ShapeDtypeStruct((capp, 1), jnp.int32)],
+        out_specs=[pl.BlockSpec((1, tp, nw), lambda b, i: (b, i, 0)),
+                   pl.BlockSpec((1, tp, nw), lambda b, i: (b, i, 0)),
+                   pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0)),
+                   pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32),
+                   jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32),
+                   jax.ShapeDtypeStruct((B, capp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((B, capp, 1), jnp.int32)],
         interpret=interpret,
     )(padded(path), padded(blocked), col(v1), col(l2), col(vlast),
       adj_bits, labelgt_bits)
 
-    live = (jnp.arange(cap, dtype=jnp.int32) < count)[:, None]
+    live = (jnp.arange(cap, dtype=jnp.int32)[None, :] < count[:, None])
     z = jnp.uint32(0)
-    return (jnp.where(live, close[:cap], z),
-            jnp.where(live, ext[:cap], z),
-            jnp.where(live, ncyc[:cap], 0)[:, 0],
-            jnp.where(live, next_[:cap], 0)[:, 0])
+    return (jnp.where(live[..., None], close[:, :cap], z),
+            jnp.where(live[..., None], ext[:, :cap], z),
+            jnp.where(live, ncyc[:, :cap, 0], 0),
+            jnp.where(live, next_[:, :cap, 0], 0))
+
+
+def bitword_expand_pallas(path, blocked, v1, l2, vlast, count,
+                          adj_bits, labelgt_bits,
+                          *, tile: int = 128, interpret: bool = True):
+    """Single-graph entry point — the B=1 lane of ``bitword_expand_lanes``.
+    Returns (close_words, ext_words, n_cycles_per_row, n_ext_per_row)
+    for live rows (dead rows are zeroed)."""
+    close, ext, ncyc, next_ = bitword_expand_lanes(
+        path[None], blocked[None], v1[None], l2[None], vlast[None],
+        count[None], adj_bits[None], labelgt_bits[None],
+        tile=tile, interpret=interpret)
+    return close[0], ext[0], ncyc[0], next_[0]

@@ -4,22 +4,26 @@ This is the paper's hot spot (Algorithm 3): for every in-flight chordless
 path and every candidate slot j < Δ, decide cycle / extend / discard.
 
 TPU mapping (DESIGN.md §2):
-  * grid iterates over frontier row tiles (TP paths per step) — the analogue
-    of the paper's persistent-thread blocks;
-  * the whole graph (CSR neighbors + adjacency bitmap + labels) is pinned in
-    VMEM via BlockSpecs with a constant index_map — the analogue of the
-    paper's "graph in SM shared memory" trick (§4.2). This bounds supported
-    graphs to n·nw·4 + 2m·4 ≲ VMEM (n ≈ 8k on a 16 MB v5e core), the same
-    kind of capacity limit the paper accepts for its 64 KB SMs;
+  * the grid is a LANE GRID ``(B, capp//tp)`` (DESIGN.md §6.7): dim 0 walks
+    graph lanes of a batch, dim 1 walks frontier row tiles (TP paths per
+    step) within a lane — the analogue of the paper's persistent-thread
+    blocks, extended by a tenant axis;
+  * each lane's whole graph (CSR neighbors + adjacency bitmap + labels) is
+    pinned in VMEM via BlockSpecs with a lane-constant index_map — the
+    analogue of the paper's "graph in SM shared memory" trick (§4.2). This
+    bounds supported graphs to n·nw·4 + 2m·4 ≲ VMEM (n ≈ 8k on a 16 MB v5e
+    core), the same kind of capacity limit the paper accepts for its 64 KB
+    SMs;
   * the per-candidate `if` ladder becomes branch-free mask algebra on the
     VPU; chord checking is one word-probe into the *blocked* bitset;
   * no atomics: the kernel only emits flags; prefix-sum compaction happens
     outside (stream compaction — the TPU replacement for the paper's
     serialized index allocation).
 
-Block shapes: path/blocked tiles are (TP, nw) uint32 — nw = ⌈n/32⌉ words.
-TP defaults to 128 (8×16 sublane×lane friendly); flag outputs are (TP, Δp)
-with Δp = Δ rounded up to a lane multiple by the wrapper.
+Block shapes: path/blocked tiles are (1, TP, nw) uint32 — nw = ⌈n/32⌉ words.
+TP defaults to 128 (8×16 sublane×lane friendly); flag outputs are
+(1, TP, Δp) with Δp = Δ rounded up to a lane multiple by the wrapper. The
+single-graph entry point is the B=1 special case of the same kernel.
 """
 from __future__ import annotations
 
@@ -33,15 +37,16 @@ from jax.experimental import pallas as pl
 def _expand_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
                    offsets_ref, neighbors_ref, labels_ref, adj_ref,
                    cand_ref, cycle_ref, ext_ref, *, delta_p: int):
-    path = path_ref[...]          # (TP, nw) uint32
-    blocked = blocked_ref[...]    # (TP, nw) uint32
-    v1 = v1_ref[...][:, 0]        # (TP,)
-    l2 = l2_ref[...][:, 0]
-    vlast = vlast_ref[...][:, 0]
-    offsets = offsets_ref[...][:, 0]     # (n+1,)
-    neighbors = neighbors_ref[...][:, 0]  # (2m_pad,)
-    labels = labels_ref[...][:, 0]        # (n,)
-    adj = adj_ref[...]                    # (n, nw)
+    # every ref carries a leading lane-block dim of 1 (the lane grid axis)
+    path = path_ref[0]            # (TP, nw) uint32
+    blocked = blocked_ref[0]      # (TP, nw) uint32
+    v1 = v1_ref[0][:, 0]          # (TP,)
+    l2 = l2_ref[0][:, 0]
+    vlast = vlast_ref[0][:, 0]
+    offsets = offsets_ref[0][:, 0]      # (n+1,)
+    neighbors = neighbors_ref[0][:, 0]  # (2m_pad,)
+    labels = labels_ref[0][:, 0]        # (n,)
+    adj = adj_ref[0]                    # (n, nw)
 
     tp = path.shape[0]
     j = jax.lax.broadcasted_iota(jnp.int32, (tp, delta_p), 1)
@@ -68,12 +73,12 @@ def _expand_kernel(path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref,
     closes = probe(adj_v1)
 
     valid = slot_ok & lab_ok & ~in_path & ~in_blocked
-    cand_ref[...] = v.astype(jnp.int32)
-    cycle_ref[...] = valid & closes
-    ext_ref[...] = valid & ~closes
+    cand_ref[0] = v.astype(jnp.int32)
+    cycle_ref[0] = valid & closes
+    ext_ref[0] = valid & ~closes
 
 
-def _pad_to(x, mult, axis=0, fill=0):
+def _pad_to(x, mult, axis=1, fill=0):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
@@ -84,55 +89,75 @@ def _pad_to(x, mult, axis=0, fill=0):
 
 @functools.partial(jax.jit,
                    static_argnames=("delta", "tile", "interpret"))
-def frontier_expand_pallas(path, blocked, v1, l2, vlast, count,
-                           offsets, neighbors, labels, adj_bits,
-                           *, delta: int, tile: int = 128,
-                           interpret: bool = True):
-    """Returns (cand_v, is_cycle, is_ext), each (cap, Δ)."""
-    cap, nw = path.shape
-    n = labels.shape[0]
+def frontier_expand_lanes(path, blocked, v1, l2, vlast, count,
+                          offsets, neighbors, labels, adj_bits,
+                          *, delta: int, tile: int = 128,
+                          interpret: bool = True):
+    """Lane-gridded slot expansion: ONE ``pallas_call`` advances every lane.
+
+    Shapes: ``path``/``blocked`` (B, cap, nw); ``v1``/``l2``/``vlast``
+    (B, cap); ``count`` (B,); graph tables (B, n+1)/(B, 2m)/(B, n)/(B, n, nw).
+    Returns (cand_v, is_cycle, is_ext), each (B, cap, Δ).
+    """
+    B, cap, nw = path.shape
     tp = min(tile, max(8, cap))
     delta_p = max(8, -(-delta // 8) * 8)  # pad Δ to a multiple of 8 lanes
 
     path_p = _pad_to(path, tp)
     blocked_p = _pad_to(blocked, tp)
-    capp = path_p.shape[0]
-    col = lambda a: _pad_to(a.reshape(-1, 1), tp)
+    capp = path_p.shape[1]
+    col = lambda a: _pad_to(a[..., None], tp)
     v1_p, l2_p, vl_p = col(v1), col(l2), col(vlast)
-    nbr = _pad_to(neighbors.reshape(-1, 1), 8, fill=0)
-    offs = offsets.reshape(-1, 1)
-    labs = labels.reshape(-1, 1)
+    nbr = _pad_to(neighbors[..., None], 8, fill=0)
+    offs = offsets[..., None]
+    labs = labels[..., None]
 
-    grid = (capp // tp,)
+    grid = (B, capp // tp)
     kernel = functools.partial(_expand_kernel, delta_p=delta_p)
-    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    lane_whole = lambda a: pl.BlockSpec(
+        (1,) + a.shape[1:], lambda b, i: (b,) + (0,) * (a.ndim - 1))
 
     cand, cyc, ext = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
-            pl.BlockSpec((tp, nw), lambda i: (i, 0)),
-            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
-            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
-            pl.BlockSpec((tp, 1), lambda i: (i, 0)),
-            whole(offs), whole(nbr), whole(labs), whole(adj_bits),
+            pl.BlockSpec((1, tp, nw), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, nw), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, 1), lambda b, i: (b, i, 0)),
+            lane_whole(offs), lane_whole(nbr), lane_whole(labs),
+            lane_whole(adj_bits),
         ],
         out_specs=[
-            pl.BlockSpec((tp, delta_p), lambda i: (i, 0)),
-            pl.BlockSpec((tp, delta_p), lambda i: (i, 0)),
-            pl.BlockSpec((tp, delta_p), lambda i: (i, 0)),
+            pl.BlockSpec((1, tp, delta_p), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, delta_p), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, tp, delta_p), lambda b, i: (b, i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((capp, delta_p), jnp.int32),
-            jax.ShapeDtypeStruct((capp, delta_p), jnp.bool_),
-            jax.ShapeDtypeStruct((capp, delta_p), jnp.bool_),
+            jax.ShapeDtypeStruct((B, capp, delta_p), jnp.int32),
+            jax.ShapeDtypeStruct((B, capp, delta_p), jnp.bool_),
+            jax.ShapeDtypeStruct((B, capp, delta_p), jnp.bool_),
         ],
         interpret=interpret,
     )(path_p, blocked_p, v1_p, l2_p, vl_p, offs, nbr, labs, adj_bits)
 
-    live = (jnp.arange(cap, dtype=jnp.int32) < count)[:, None]
-    cand = cand[:cap, :delta]
-    cyc = cyc[:cap, :delta] & live
-    ext = ext[:cap, :delta] & live
+    live = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+            < count[:, None])[..., None]
+    cand = cand[:, :cap, :delta]
+    cyc = cyc[:, :cap, :delta] & live
+    ext = ext[:, :cap, :delta] & live
     return cand, cyc, ext
+
+
+def frontier_expand_pallas(path, blocked, v1, l2, vlast, count,
+                           offsets, neighbors, labels, adj_bits,
+                           *, delta: int, tile: int = 128,
+                           interpret: bool = True):
+    """Single-graph entry point — the B=1 lane of ``frontier_expand_lanes``.
+    Returns (cand_v, is_cycle, is_ext), each (cap, Δ)."""
+    cand, cyc, ext = frontier_expand_lanes(
+        path[None], blocked[None], v1[None], l2[None], vlast[None],
+        count[None], offsets[None], neighbors[None], labels[None],
+        adj_bits[None], delta=delta, tile=tile, interpret=interpret)
+    return cand[0], cyc[0], ext[0]

@@ -1,59 +1,145 @@
 """Jit'd wrappers exposing the Pallas kernels with engine-compatible
 signatures. On CPU (this container) kernels run under interpret=True; on a
 real TPU backend set ``REPRO_PALLAS_INTERPRET=0``.
+
+Batch transparency (DESIGN.md §6.7): every wrapper carries a
+``jax.custom_batching.custom_vmap`` rule that maps ``jax.vmap`` onto the
+LANE-GRIDDED kernel variants (``*_lanes``, grid=(B, capp//tp)) instead of
+failing or falling back to a per-graph loop.  ``jax.vmap(wave_superstep)``
+— the batched plan the service compiles for ``enumerate_batch`` — therefore
+issues ONE pallas dispatch per round for the whole batch on this backend,
+exactly like the jnp backend.  Unbatched calls execute the B=1 lane of the
+same kernels, so both paths share one compiled shape family.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 from ..core.bitset_graph import BitsetGraph
 from ..core.frontier import Frontier
-from .frontier_expand import frontier_expand_pallas
-from .triplet_init import triplet_init_pallas
-from .bitword_expand import bitword_expand_pallas
+from .frontier_expand import frontier_expand_lanes, frontier_expand_pallas
+from .triplet_init import triplet_init_lanes, triplet_init_pallas
+from .bitword_expand import bitword_expand_lanes, bitword_expand_pallas
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or \
     jax.default_backend() != "tpu"
 
 
+def _broadcast_unbatched(tree, tree_batched, axis_size):
+    """Give every unbatched leaf the lane axis the batched leaves carry
+    (custom_vmap hands us per-leaf batched flags)."""
+    return jax.tree_util.tree_map(
+        lambda x, b: x if b else jnp.broadcast_to(
+            x, (axis_size,) + jnp.shape(x)),
+        tree, tree_batched)
+
+
+# ---------------------------------------------------------------------------
+# Slot formulation (frontier_expand kernel)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _slot_flags_op(delta: int):
+    @jax.custom_batching.custom_vmap
+    def flags(g: BitsetGraph, f: Frontier):
+        return frontier_expand_pallas(
+            f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+            g.offsets, g.neighbors, g.labels, g.adj_bits,
+            delta=delta, interpret=INTERPRET)
+
+    @flags.def_vmap
+    def _rule(axis_size, in_batched, g, f):
+        g = _broadcast_unbatched(g, in_batched[0], axis_size)
+        f = _broadcast_unbatched(f, in_batched[1], axis_size)
+        out = frontier_expand_lanes(
+            f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+            g.offsets, g.neighbors, g.labels, g.adj_bits,
+            delta=delta, interpret=INTERPRET)
+        return out, (True, True, True)
+
+    return flags
+
+
 def expand_flags_slot(g: BitsetGraph, f: Frontier, delta: int):
-    """Drop-in for core.expand.expand_flags_slot (slot formulation)."""
-    return frontier_expand_pallas(
-        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
-        g.offsets, g.neighbors, g.labels, g.adj_bits,
-        delta=delta, interpret=INTERPRET)
+    """Drop-in for core.expand.expand_flags_slot (slot formulation);
+    vmap maps onto the lane-gridded kernel."""
+    return _slot_flags_op(int(delta))(g, f)
+
+
+# ---------------------------------------------------------------------------
+# Stage 1 (triplet_init kernel)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _triplet_flags_op(delta: int):
+    @jax.custom_batching.custom_vmap
+    def flags(g: BitsetGraph):
+        return triplet_init_pallas(g.offsets, g.neighbors, g.labels,
+                                   g.adj_bits, delta=delta,
+                                   interpret=INTERPRET)
+
+    @flags.def_vmap
+    def _rule(axis_size, in_batched, g):
+        g = _broadcast_unbatched(g, in_batched[0], axis_size)
+        out = triplet_init_lanes(g.offsets, g.neighbors, g.labels,
+                                 g.adj_bits, delta=delta,
+                                 interpret=INTERPRET)
+        return out, (True, True)
+
+    return flags
 
 
 def triplet_flags(g: BitsetGraph, delta: int):
-    """Drop-in for core.triplets.triplet_flags (stage 1)."""
-    return triplet_init_pallas(g.offsets, g.neighbors, g.labels, g.adj_bits,
-                               delta=delta, interpret=INTERPRET)
+    """Drop-in for core.triplets.triplet_flags (stage 1); vmap maps onto
+    the lane-gridded kernel — one dispatch flags every lane of a batch."""
+    return _triplet_flags_op(int(delta))(g)
+
+
+# ---------------------------------------------------------------------------
+# Bitword formulation (bitword_expand kernel, fused popcounts)
+# ---------------------------------------------------------------------------
+
+@jax.custom_batching.custom_vmap
+def _bitword_rows(g: BitsetGraph, f: Frontier):
+    """(close_words, ext_words, per-row cycle counts, per-row ext counts)."""
+    return bitword_expand_pallas(
+        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+        g.adj_bits, g.labelgt_bits, interpret=INTERPRET)
+
+
+@_bitword_rows.def_vmap
+def _bitword_rows_vmap(axis_size, in_batched, g, f):
+    g = _broadcast_unbatched(g, in_batched[0], axis_size)
+    f = _broadcast_unbatched(f, in_batched[1], axis_size)
+    out = bitword_expand_lanes(
+        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+        g.adj_bits, g.labelgt_bits, interpret=INTERPRET)
+    return out, (True, True, True, True)
 
 
 def expand_words_bitword(g: BitsetGraph, f: Frontier):
     """Drop-in for core.expand.expand_words_bitword (TPU-native)."""
-    close, ext, _, _ = bitword_expand_pallas(
-        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
-        g.adj_bits, g.labelgt_bits, interpret=INTERPRET)
+    close, ext, _, _ = _bitword_rows(g, f)
     return close, ext
 
 
-@jax.jit
 def bitword_fused_counts(g: BitsetGraph, f: Frontier):
     """Fused mask algebra + per-row popcounts in ONE kernel pass
     (DESIGN.md §6.4). Returns (close_words, ext_words, n_cyc, n_new).
-    Jitted so the scalar .sum() reductions fuse into the same dispatch."""
-    close, ext, ncyc, next_ = bitword_expand_pallas(
-        f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
-        g.adj_bits, g.labelgt_bits, interpret=INTERPRET)
+    The scalar reductions ride the same traced unit as the kernel when the
+    caller jits (the wave superstep and ``bitword_flags_count`` both do)."""
+    close, ext, ncyc, next_ = _bitword_rows(g, f)
     return close, ext, ncyc.sum(), next_.sum()
 
 
 @jax.jit
 def bitword_flags_count(g: BitsetGraph, f: Frontier):
     """Drop-in for core.expand.bitword_flags_count, but the popcounts ride
-    the expansion kernel instead of a second HBM pass."""
+    the expansion kernel instead of a second HBM pass. Jitted so the scalar
+    .sum() reductions fuse into the same dispatch (legacy host engine)."""
     _, ext, n_cyc, n_new = bitword_fused_counts(g, f)
     return ext, n_cyc, n_new

@@ -2,10 +2,12 @@
 
 Paper Algorithm 2: thread j decodes (i_u, i_x, i_y) from its global id and
 tests ℓ(u) < ℓ(x) < ℓ(y) plus (x,y) ∈ E.  Here the |V|·Δ² thread grid becomes
-a Pallas grid over vertex tiles; each grid step evaluates a (TU, Δ·Δ) flag
-tile with the same index algebra (Eqs. 1–3 of the paper) computed from a
-2-D iota.  The (x,y) ∈ E binary search (O(log Δ)) is replaced by an O(1)
-adjacency-bitmap probe held in VMEM.
+a lane-gridded Pallas grid ``(B, np//tu)`` over (graph lane × vertex tile)
+pairs (DESIGN.md §6.7); each grid step evaluates a (TU, Δ·Δ) flag tile with
+the same index algebra (Eqs. 1–3 of the paper) computed from a 2-D iota.
+The (x,y) ∈ E binary search (O(log Δ)) is replaced by an O(1)
+adjacency-bitmap probe held in VMEM.  The single-graph entry point is the
+B=1 special case — one dispatch seeds every lane of a graph batch.
 """
 from __future__ import annotations
 
@@ -18,13 +20,14 @@ from jax.experimental import pallas as pl
 
 def _triplet_kernel(offsets_ref, neighbors_ref, labels_ref, adj_ref,
                     tri_ref, trip_ref, *, delta: int, tu: int):
-    offsets = offsets_ref[...][:, 0]
-    neighbors = neighbors_ref[...][:, 0]
-    labels = labels_ref[...][:, 0]
-    adj = adj_ref[...]
+    # every ref carries a leading lane-block dim of 1 (the lane grid axis)
+    offsets = offsets_ref[0][:, 0]
+    neighbors = neighbors_ref[0][:, 0]
+    labels = labels_ref[0][:, 0]
+    adj = adj_ref[0]
     n = labels.shape[0]
 
-    step = pl.program_id(0)
+    step = pl.program_id(1)     # vertex tile within this lane
     u = step * tu + jax.lax.broadcasted_iota(jnp.int32, (tu, delta * delta), 0)
     slot = jax.lax.broadcasted_iota(jnp.int32, (tu, delta * delta), 1)
     ix = slot // delta     # Eq. 2 (relative index of x)
@@ -52,37 +55,52 @@ def _triplet_kernel(offsets_ref, neighbors_ref, labels_ref, adj_ref,
     adj_xy = (w & bit) != 0
 
     base = slot_ok & label_ok
-    tri_ref[...] = base & adj_xy
-    trip_ref[...] = base & ~adj_xy
+    tri_ref[0] = base & adj_xy
+    trip_ref[0] = base & ~adj_xy
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "tile", "interpret"))
-def triplet_init_pallas(offsets, neighbors, labels, adj_bits,
-                        *, delta: int, tile: int = 8, interpret: bool = True):
-    """Returns (is_triangle, is_triplet) of shape (n, Δ, Δ)."""
-    n = labels.shape[0]
-    nw = adj_bits.shape[1]
+def triplet_init_lanes(offsets, neighbors, labels, adj_bits,
+                       *, delta: int, tile: int = 8, interpret: bool = True):
+    """Lane-gridded stage 1: ONE ``pallas_call`` flags every lane's
+    (n, Δ, Δ) triplet grid.  Graph tables carry a leading lane axis
+    ((B, n+1), (B, 2m), (B, n), (B, n, nw)); returns (is_triangle,
+    is_triplet) of shape (B, n, Δ, Δ)."""
+    B, n = labels.shape
+    nw = adj_bits.shape[2]
     tu = min(tile, max(1, n))
     np_ = -(-n // tu) * tu
     dd = delta * delta
 
-    nbr = neighbors.reshape(-1, 1)
-    if nbr.shape[0] == 0:
-        nbr = jnp.zeros((1, 1), jnp.int32)
-    offs = offsets.reshape(-1, 1)
-    labs = labels.reshape(-1, 1)
-    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    nbr = neighbors[..., None]
+    if nbr.shape[1] == 0:
+        nbr = jnp.zeros((B, 1, 1), jnp.int32)
+    offs = offsets[..., None]
+    labs = labels[..., None]
+    lane_whole = lambda a: pl.BlockSpec(
+        (1,) + a.shape[1:], lambda b, i: (b,) + (0,) * (a.ndim - 1))
 
     kernel = functools.partial(_triplet_kernel, delta=delta, tu=tu)
     tri, trip = pl.pallas_call(
         kernel,
-        grid=(np_ // tu,),
-        in_specs=[whole(offs), whole(nbr), whole(labs), whole(adj_bits)],
-        out_specs=[pl.BlockSpec((tu, dd), lambda i: (i, 0)),
-                   pl.BlockSpec((tu, dd), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((np_, dd), jnp.bool_),
-                   jax.ShapeDtypeStruct((np_, dd), jnp.bool_)],
+        grid=(B, np_ // tu),
+        in_specs=[lane_whole(offs), lane_whole(nbr), lane_whole(labs),
+                  lane_whole(adj_bits)],
+        out_specs=[pl.BlockSpec((1, tu, dd), lambda b, i: (b, i, 0)),
+                   pl.BlockSpec((1, tu, dd), lambda b, i: (b, i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, np_, dd), jnp.bool_),
+                   jax.ShapeDtypeStruct((B, np_, dd), jnp.bool_)],
         interpret=interpret,
     )(offs, nbr, labs, adj_bits)
-    return (tri[:n].reshape(n, delta, delta),
-            trip[:n].reshape(n, delta, delta))
+    return (tri[:, :n].reshape(B, n, delta, delta),
+            trip[:, :n].reshape(B, n, delta, delta))
+
+
+def triplet_init_pallas(offsets, neighbors, labels, adj_bits,
+                        *, delta: int, tile: int = 8, interpret: bool = True):
+    """Single-graph entry point — the B=1 lane of ``triplet_init_lanes``.
+    Returns (is_triangle, is_triplet) of shape (n, Δ, Δ)."""
+    tri, trip = triplet_init_lanes(
+        offsets[None], neighbors[None], labels[None], adj_bits[None],
+        delta=delta, tile=tile, interpret=interpret)
+    return tri[0], trip[0]

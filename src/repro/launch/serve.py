@@ -4,13 +4,21 @@ shared CycleService.
     PYTHONPATH=src python -m repro.launch.serve --requests 24 --slots 4
 
 Production structure on the paper's workload: a queue of enumeration
-requests (mixed-size graphs) feeds fixed-size batch slots; each wave of
-up-to-``slots`` requests is submitted as ONE vmapped device program
-(``CycleService.enumerate_batch``); finished requests free their slots for
-the next wave (continuous batching). Every wave executes against the same
-service, so same-shaped graphs hit the cross-graph program cache — the
-amortization the ROADMAP's million-user north star needs (warm ms/graph
-and cache hit rate are printed at the end).
+requests (mixed-size graphs) feeds fixed-size batch slots. The scheduler
+COALESCES by shape class (DESIGN.md §6.7): each wave picks the oldest
+request's ``tune.shape_class`` and pulls up to ``slots`` same-class
+requests from anywhere in the queue into ONE batched device dispatch
+(``CycleService.enumerate_batch`` — batch-native on every backend now,
+pallas included, so there is no per-graph fallback to schedule around).
+Same-class coalescing keeps the padded batch shape tight (lane-padded
+waste is bounded by the class bucket) and maximizes program-cache reuse
+across waves. Finished requests free their slots for the next wave
+(continuous batching).
+
+Scheduler stats exported at the end: waves, coalesced-lanes count (how
+many requests were served inside a multi-lane dispatch — the number the
+batch-native backend layer exists to maximize), shape classes seen, warm
+ms/graph, and program-cache hit rate.
 
 (The LM decode-loop demo this file used to host lives on in
 ``examples/serve_lm.py``.)
@@ -43,47 +51,91 @@ def build_request_queue(n_requests: int, seed: int):
     return queue
 
 
+def _shape_class(g) -> str:
+    from ..tune import shape_class
+    return shape_class(g.n, g.m, max(g.max_degree, 1))
+
+
+def serve(service, queue, *, slots: int = 4, verbose: bool = True) -> dict:
+    """Drain ``queue`` through ``service`` with shape-class coalescing.
+
+    Each wave: take the oldest request's shape class, pull up to ``slots``
+    same-class requests (queue order preserved within the class) into one
+    batched dispatch; singletons fall through to ``enumerate``. Returns the
+    scheduler stats dict (waves, coalesced_lanes, per-class wave counts,
+    total cycles, per-request latencies).
+    """
+    queue = list(queue)
+    stats = dict(requests=0, waves=0, coalesced_lanes=0, solo_requests=0,
+                 n_cycles=0, classes={})
+    latencies = []
+    while queue:
+        cls = _shape_class(queue[0])
+        idx = [i for i, g in enumerate(queue)
+               if _shape_class(g) == cls][:slots]
+        batch = [queue[i] for i in idx]
+        for i in reversed(idx):
+            queue.pop(i)
+
+        t1 = time.perf_counter()
+        results = (service.enumerate_batch(batch) if len(batch) > 1
+                   else [service.enumerate(batch[0])])
+        dt = time.perf_counter() - t1
+
+        latencies.append(dt / len(batch))
+        stats["requests"] += len(batch)
+        stats["waves"] += 1
+        stats["classes"][cls] = stats["classes"].get(cls, 0) + 1
+        if len(batch) > 1:
+            stats["coalesced_lanes"] += len(batch)
+        else:
+            stats["solo_requests"] += 1
+        total = sum(r.n_cycles for r in results)
+        stats["n_cycles"] += total
+        if verbose:
+            print(f"wave {stats['waves']}: [{cls}] {len(batch)} lane(s), "
+                  f"{total} cycles, {dt * 1e3 / len(batch):.1f} ms/graph")
+    stats["latencies_ms"] = [round(x * 1e3, 2) for x in latencies]
+    return stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4,
-                    help="max graphs batched into one device program")
+                    help="max same-class graphs coalesced into one "
+                         "batched device program")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--store", action="store_true",
                     help="materialize cycle masks (default: count-only)")
     ap.add_argument("--formulation", default="bitword",
                     choices=("slot", "bitword"))
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
     args = ap.parse_args()
 
     from ..core import CycleService, EngineConfig
 
     service = CycleService(EngineConfig(store=args.store,
-                                        formulation=args.formulation))
+                                        formulation=args.formulation,
+                                        backend=args.backend))
     queue = build_request_queue(args.requests, args.seed)
 
-    done, waves, t0 = 0, 0, time.perf_counter()
-    latencies = []
-    while queue:
-        batch = [queue.pop(0) for _ in range(min(args.slots, len(queue)))]
-        t1 = time.perf_counter()
-        results = (service.enumerate_batch(batch) if len(batch) > 1
-                   else [service.enumerate(batch[0])])
-        dt = time.perf_counter() - t1
-        latencies.append(dt / len(batch))
-        done += len(batch)
-        waves += 1
-        total = sum(r.n_cycles for r in results)
-        print(f"wave {waves}: served {done}/{args.requests} "
-              f"({len(batch)} slots, {total} cycles, "
-              f"{dt * 1e3 / len(batch):.1f} ms/graph)")
-
+    t0 = time.perf_counter()
+    sched = serve(service, queue, slots=args.slots)
     wall = time.perf_counter() - t0
+
     s = service.stats
     hit_rate = s["cache_hits"] / max(s["cache_hits"] + s["cache_misses"], 1)
-    steady = f"{min(latencies) * 1e3:.1f} ms/graph" if latencies else "n/a"
+    lat = sched["latencies_ms"]
+    steady = f"{min(lat):.1f} ms/graph" if lat else "n/a"
+    done = sched["requests"]
     print(f"all {done} requests served in {wall:.2f}s "
-          f"({done / max(wall, 1e-9):.1f} graphs/s; "
-          f"steady-state {steady})")
+          f"({done / max(wall, 1e-9):.1f} graphs/s; steady-state {steady})")
+    print(f"scheduler: {sched['waves']} waves, "
+          f"{sched['coalesced_lanes']} coalesced lanes "
+          f"({sched['coalesced_lanes'] / max(done, 1):.0%} of requests), "
+          f"{sched['solo_requests']} solo, "
+          f"{len(sched['classes'])} shape classes")
     print(f"service: {s['programs']} compiled programs, "
           f"{s['cache_hits']} hits / {s['cache_misses']} misses "
           f"({hit_rate:.0%} hit rate), {s['n_traces']} traces")

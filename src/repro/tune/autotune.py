@@ -30,7 +30,7 @@ import dataclasses
 import itertools
 
 from .cost_model import CostModel, DistProfile, WaveProfile
-from .store import TuneKey, TuneStore, shape_class
+from .store import TuneKey, TuneStore, _p2, shape_class
 
 # the shape-dependent, equivalence-preserving knobs the tuner may touch
 TUNED_KNOBS = ("superstep_rounds", "growth_bits", "grow_headroom",
@@ -126,13 +126,18 @@ class AutoTuner:
             self._device_kind = _device_kind()
         return self._device_kind
 
-    def key_for(self, n: int, m: int, delta: int, cfg) -> TuneKey:
+    def key_for(self, n: int, m: int, delta: int, cfg,
+                batch: int = 0) -> TuneKey:
+        """``batch`` is the request's lane count (0: unbatched); it keys as
+        a power-of-two batch-size class — lane imbalance changes which
+        round budget wins, so batched classes tune separately."""
         mesh = getattr(cfg, "mesh", None)
         ndev = int(mesh.shape[cfg.axis]) if mesh is not None else 0
         return TuneKey(shape=shape_class(n, m, delta), store=cfg.store,
                        formulation=cfg.formulation, backend=cfg.backend,
                        engine="dist" if ndev else cfg.engine,
-                       device_kind=self.device_kind, ndev=ndev)
+                       device_kind=self.device_kind, ndev=ndev,
+                       batch=_p2(batch) if batch else 0)
 
     # -- warm path -------------------------------------------------------
 
@@ -213,7 +218,6 @@ class AutoTuner:
         This is the service's first-visit hook (record → model → store).
         Mesh-routed configs profile into a ``DistProfile`` (per-device
         peaks from the recorded trace) and replay through the sharded twin."""
-        self._counters["observations"] += 1
         mesh = getattr(base_cfg, "mesh", None)
         if mesh is not None:
             profile = DistProfile.from_run(
@@ -223,6 +227,16 @@ class AutoTuner:
         else:
             profile = WaveProfile.from_history(
                 history, n=n, nw=nw, max_iters=base_cfg.max_iters)
+        return self.observe_profile(key, base_cfg, profile, traces=traces,
+                                    measure=measure)
+
+    def observe_profile(self, key: TuneKey, base_cfg, profile, *,
+                        traces=(), measure=None):
+        """First-visit hook for a PREBUILT profile — the batched service
+        path profiles its per-lane histories into one lane-aware
+        ``WaveProfile`` (``from_batch``) and hands it here; the lane-aware
+        replay twin then scores candidates with lane-padded occupancy."""
+        self._counters["observations"] += 1
         return self.tune(profile, base_cfg, key=key, traces=traces,
                          measure=measure)
 

@@ -55,12 +55,31 @@ _RUN, _DONE, _GROW, _DRAIN, _SHRINK = STATUSES
 # The knob-independent wave shape
 # ---------------------------------------------------------------------------
 
+def _lane_shape(history):
+    """(n0, t_sizes, c_counts) of one lane's history."""
+    if not history:
+        return 0, (), ()
+    t = tuple(int(h["T"]) for h in history[1:])
+    cum = [int(h["C"]) for h in history]
+    c = tuple(cum[i + 1] - cum[i] for i in range(len(cum) - 1))
+    return int(history[0]["T"]), t, c
+
+
 @dataclasses.dataclass(frozen=True)
 class WaveProfile:
     """Per-round wave shape of one enumeration, independent of engine knobs.
 
     ``t_sizes[i]`` is |T| after round i+1; ``c_counts[i]`` the cycles closed
     by round i+1 (triangles are stage-1 output and never touch the ring).
+
+    A BATCHED enumeration (``enumerate_batch``) profiles into the same
+    class with the per-lane shapes retained (``lane_*`` fields;
+    ``from_batch``): ``t_sizes``/``c_counts`` then hold the per-round MAX
+    over lanes (what drives the shared bucket and ring), and the lane-aware
+    ``replay`` path accounts the lane-padded occupancy — a finished lane
+    still burns its full bucket every round until the slowest lane in the
+    dispatch exits, which is exactly the superstep_rounds ↔ lane-imbalance
+    trade the autotuner searches over (DESIGN.md §6.7).
     """
     n: int                     # |V| (sets the |V|-3 round budget)
     nw: int                    # mask words per row
@@ -68,6 +87,15 @@ class WaveProfile:
     t_sizes: tuple[int, ...]
     c_counts: tuple[int, ...]
     max_iters: int | None = None
+    # --- batched profiles only (lanes == 1 otherwise) ---------------------
+    lane_n: tuple[int, ...] = ()       # per-lane |V| (per-lane round budget)
+    lane_n0: tuple[int, ...] = ()
+    lane_t: tuple[tuple[int, ...], ...] = ()
+    lane_c: tuple[tuple[int, ...], ...] = ()
+
+    @property
+    def lanes(self) -> int:
+        return max(len(self.lane_t), 1)
 
     @property
     def limit(self) -> int:
@@ -83,24 +111,51 @@ class WaveProfile:
                      max_iters: int | None = None) -> "WaveProfile":
         """Build from ``EnumerationResult.history`` (step-0 entry holds the
         initial |T| and the triangle count; later C entries are cumulative)."""
-        if not history:
-            return cls(n=n, nw=nw, n0=0, t_sizes=(), c_counts=())
-        t = tuple(int(h["T"]) for h in history[1:])
-        cum = [int(h["C"]) for h in history]
-        c = tuple(cum[i + 1] - cum[i] for i in range(len(cum) - 1))
-        return cls(n=n, nw=nw, n0=int(history[0]["T"]), t_sizes=t,
-                   c_counts=c, max_iters=max_iters)
+        n0, t, c = _lane_shape(history)
+        return cls(n=n, nw=nw, n0=n0, t_sizes=t, c_counts=c,
+                   max_iters=max_iters)
+
+    @classmethod
+    def from_batch(cls, histories, *, lane_n, n: int, nw: int,
+                   max_iters: int | None = None) -> "WaveProfile":
+        """Lane-aware profile of one batched enumeration: per-lane
+        histories retained, aggregates = per-round max over lanes (the
+        shared bucket/ring trackers). ``n`` is the padded |V| the batch ran
+        at; ``lane_n`` the real per-lane |V| (per-lane round budgets)."""
+        shapes = [_lane_shape(h) for h in histories]
+        rounds = max((len(t) for _, t, _ in shapes), default=0)
+        agg = lambda seqs, i: max((s[i] if i < len(s) else 0 for s in seqs),
+                                  default=0)
+        t_all = [t for _, t, _ in shapes]
+        c_all = [c for _, _, c in shapes]
+        return cls(
+            n=n, nw=nw, n0=max((n0 for n0, _, _ in shapes), default=0),
+            t_sizes=tuple(agg(t_all, i) for i in range(rounds)),
+            c_counts=tuple(agg(c_all, i) for i in range(rounds)),
+            max_iters=max_iters,
+            lane_n=tuple(int(x) for x in lane_n),
+            lane_n0=tuple(n0 for n0, _, _ in shapes),
+            lane_t=tuple(t_all), lane_c=tuple(c_all))
 
     def to_json(self) -> dict:
-        return dict(n=self.n, nw=self.nw, n0=self.n0,
-                    t_sizes=list(self.t_sizes), c_counts=list(self.c_counts),
-                    max_iters=self.max_iters)
+        out = dict(n=self.n, nw=self.nw, n0=self.n0,
+                   t_sizes=list(self.t_sizes), c_counts=list(self.c_counts),
+                   max_iters=self.max_iters)
+        if self.lane_t:
+            out.update(lane_n=list(self.lane_n), lane_n0=list(self.lane_n0),
+                       lane_t=[list(t) for t in self.lane_t],
+                       lane_c=[list(c) for c in self.lane_c])
+        return out
 
     @classmethod
     def from_json(cls, d: dict) -> "WaveProfile":
         return cls(n=int(d["n"]), nw=int(d["nw"]), n0=int(d["n0"]),
                    t_sizes=tuple(d["t_sizes"]), c_counts=tuple(d["c_counts"]),
-                   max_iters=d.get("max_iters"))
+                   max_iters=d.get("max_iters"),
+                   lane_n=tuple(d.get("lane_n", ())),
+                   lane_n0=tuple(d.get("lane_n0", ())),
+                   lane_t=tuple(tuple(t) for t in d.get("lane_t", ())),
+                   lane_c=tuple(tuple(c) for c in d.get("lane_c", ())))
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +191,12 @@ def replay(profile: WaveProfile, cfg) -> ReplaySummary:
     frontier check; GROW outranks DRAIN on a double overflow), SHRINK decay
     threshold at cap//4 (buckets ≤16 never shrink), pending sizes choosing
     the next bucket, and the ring carrying its fill across dispatches.
+
+    Lane-aware profiles (``WaveProfile.from_batch``) replay through the
+    batched driver's twin instead (``_replay_batch``).
     """
+    if profile.lanes > 1:
+        return _replay_batch(profile, cfg)
     limit = profile.limit
     t, c = profile.t_sizes, profile.c_counts
     nw = max(profile.nw, 1)
@@ -212,6 +272,161 @@ def replay(profile: WaveProfile, cfg) -> ReplaySummary:
         n_bucket_transitions=transitions, n_drains=drains, rounds=it,
         row_work=row_work, padded_waste=waste, n_programs=len(programs),
         peak_bucket=peak, by_cause=by_cause)
+
+
+# ---------------------------------------------------------------------------
+# Batched twin (core/service.enumerate_batch's driver; DESIGN.md §6.7)
+# ---------------------------------------------------------------------------
+
+def _lane_superstep(t, c, it, cnt, fill, k, cap, cyc_cap, store,
+                    shrink_below):
+    """One lane's guarded superstep — the per-lane half of the vmapped
+    ``wave_superstep``. Returns (r, status, cnt, fill, pn, pc)."""
+    r = 0
+    status = _RUN
+    pn = pc = 0
+    while status == _RUN and r < k and cnt > 0 and it + r < len(t):
+        n_new, n_cyc = t[it + r], c[it + r]
+        ok_f = n_new <= cap
+        ok_c = (fill + n_cyc <= cyc_cap) if store else True
+        if not (ok_f and ok_c):
+            status = _DRAIN if ok_f else _GROW
+            pn, pc = n_new, n_cyc
+            break
+        r += 1
+        fill += n_cyc if store else 0
+        cnt = n_new
+        if 0 < n_new <= shrink_below:
+            status = _SHRINK
+    if status in (_RUN, _SHRINK) and cnt == 0:
+        status = _DONE
+    return r, status, cnt, fill, pn, pc
+
+
+def _replay_batch(profile: WaveProfile, cfg) -> ReplaySummary:
+    """Digital twin of ``core.service.enumerate_batch`` for a lane-aware
+    profile: per-lane supersteps simulated under the SHARED bucket/ring,
+    host transitions aggregated exactly like the batched driver.
+
+    The lane-padded occupancy is what this twin accounts that the
+    single-graph twin cannot: every device round costs ``lanes × cap``
+    rows, and a lane that finished (or aborted) early still burns its full
+    bucket until the dispatch's slowest lane exits — raising
+    ``superstep_rounds`` amortizes dispatches but amplifies exactly this
+    imbalance waste, which is the trade the autotuner searches.
+    """
+    B = profile.lanes
+    t, c = profile.lane_t, profile.lane_c
+    nw = max(profile.nw, 1)
+    limits = []
+    for ln in profile.lane_n:
+        lim = max(int(ln) - 3, 0)
+        if profile.max_iters is not None:
+            lim = min(lim, profile.max_iters)
+        limits.append(lim)
+    cnts = list(profile.lane_n0)
+    cap = cfg.bucket(max(max(cnts, default=0), 1))
+    cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
+    K = cfg.superstep_rounds
+
+    dispatches = syncs = transitions = drains = 0
+    row_work = waste = 0
+    by_cause: dict[str, int] = {}
+    programs = set()
+    peak = cap
+    fills = [0] * B
+    its = [0] * B
+
+    # stage 1: counts readback + one batched seeding dispatch (the driver's
+    # 'seed' trace event counts 2 launches and 1 sync)
+    dispatches += 2
+    syncs += 1
+    by_cause[_RUN] = by_cause.get(_RUN, 0) + 1
+
+    # the len(t) bound keeps truncated profiles (max_iters probes) from
+    # spinning on a lane whose history ran out mid-wave — the same guard
+    # the single-lane replay carries in its loop condition
+    def _active(i):
+        return its[i] < min(limits[i], len(t[i])) and cnts[i] > 0
+
+    active = [_active(i) for i in range(B)]
+    relaunches = 0
+    relaunch_bound = 4 * max(limits, default=0) + 16  # driver's own bound
+    while any(active) and relaunches <= relaunch_bound:
+        relaunches += 1
+        programs.add((cap, cyc_cap))
+        peak = max(peak, cap)
+        shrink_below = cap // 4 if cap > 16 else 0
+        rs, statuses, pns, pcs = [], [], [], []
+        enters = list(cnts)
+        for i in range(B):
+            k = min(K, limits[i] - its[i]) if active[i] else 0
+            r, status, cnt, fill, pn, pc = _lane_superstep(
+                t[i], c[i], its[i], cnts[i], fills[i], k, cap, cyc_cap,
+                cfg.store, shrink_below)
+            rs.append(r)
+            statuses.append(status)
+            pns.append(pn)
+            pcs.append(pc)
+            cnts[i] = cnt
+            fills[i] = fill
+            its[i] += r
+        dispatches += 1
+        syncs += 1
+        agg = next(s for s in (_DRAIN, _GROW, _SHRINK, _RUN, _DONE)
+                   if s in statuses)
+        by_cause[agg] = by_cause.get(agg, 0) + 1
+
+        # device work: the vmapped while_loop runs until the SLOWEST lane's
+        # cond goes false; masked lanes burn their whole bucket every round
+        attempts = [rs[i] + (1 if statuses[i] in (_GROW, _DRAIN) else 0)
+                    for i in range(B)]
+        max_att = max(attempts, default=0)
+        for j in range(max_att):
+            row_work += B * cap * nw
+            for i in range(B):
+                enter = enters[i] if j == 0 else (
+                    t[i][its[i] - rs[i] + j - 1]
+                    if its[i] - rs[i] + j - 1 < len(t[i]) and j <= attempts[i]
+                    else 0)
+                live = enter if j < attempts[i] else 0
+                waste += max(cap - max(live, 1), 0) * nw
+
+        drain_lanes = [i for i in range(B) if statuses[i] == _DRAIN]
+        grow_lanes = [i for i in range(B) if statuses[i] == _GROW]
+        if drain_lanes:
+            for i in range(B):
+                if fills[i]:
+                    drains += 1
+            syncs += 1
+            cyc_cap = max(cyc_cap,
+                          cfg.bucket(max(max(pcs[i] for i in drain_lanes),
+                                         1)))
+            fills = [0] * B
+        if grow_lanes:
+            need = max(pns[i] for i in grow_lanes)
+            new_cap = cfg.bucket(cfg.bucket(max(need, 1))
+                                 << max(cfg.grow_headroom, 0))
+            if new_cap != cap:
+                cap = new_cap
+                transitions += 1
+        elif not drain_lanes and max(cnts, default=0) > 0:
+            new_cap = cfg.bucket(max(max(cnts), 1))
+            if new_cap < cap:
+                cap = new_cap
+                transitions += 1
+        active = [_active(i) for i in range(B)]
+
+    if cfg.store:
+        for i in range(B):
+            if fills[i]:
+                drains += 1
+        syncs += 1
+    return ReplaySummary(
+        n_dispatches=dispatches, n_host_syncs=syncs,
+        n_bucket_transitions=transitions, n_drains=drains,
+        rounds=max(its, default=0), row_work=row_work, padded_waste=waste,
+        n_programs=len(programs), peak_bucket=peak, by_cause=by_cause)
 
 
 # ---------------------------------------------------------------------------
@@ -366,21 +581,32 @@ DEFAULT_COEFFS = dict(dispatch_ms=0.6, ms_per_mrow=180.0, sync_ms=0.05,
 @dataclasses.dataclass
 class CostModel:
     """ms ≈ dispatch_ms·D + ms_per_mrow·(rows_attempted/1e6) + sync_ms·S
-    (+ compile_ms·P when scoring the cold objective)."""
+    (+ compile_ms·P when scoring the cold objective).
+
+    Fitting is an ONLINE sliding-window refit (ROADMAP PR-3 follow-up):
+    every ``fit`` call appends its traces' dispatch points to a bounded
+    window and re-solves the least squares over the WHOLE window. A model
+    that lives inside a long-running service therefore (a) keeps learning
+    even when each observation contributes only one or two points, and
+    (b) tracks device-load drift — old-regime points age out of the window
+    instead of anchoring the coefficients forever.
+    """
     dispatch_ms: float = DEFAULT_COEFFS["dispatch_ms"]
     ms_per_mrow: float = DEFAULT_COEFFS["ms_per_mrow"]
     sync_ms: float = DEFAULT_COEFFS["sync_ms"]
     compile_ms: float = DEFAULT_COEFFS["compile_ms"]
     n_fit_events: int = 0
+    window: int = 256          # sliding-window length (fit points retained)
+    warm_points: list = dataclasses.field(default_factory=list, repr=False)
+    fresh_points: list = dataclasses.field(default_factory=list, repr=False)
 
     # -- fitting ---------------------------------------------------------
 
     def fit(self, traces) -> "CostModel":
-        """Least-squares (a, b) from warm dispatch events of recorded
-        ``WaveTrace``s; fresh-program events calibrate ``compile_ms``.
-        Traces without timings (or too few points) leave defaults in place.
-        Returns self (chainable)."""
-        warm_x, warm_y, fresh = [], [], []
+        """Append the traces' warm dispatch events to the sliding window
+        and refit (a, b) over the window; fresh-program events calibrate
+        ``compile_ms`` the same way. Windows still too small (or degenerate)
+        leave the current coefficients in place. Returns self (chainable)."""
         for tr in traces:
             for e in getattr(tr, "events", []):
                 if e.t_ms <= 0.0:
@@ -398,20 +624,24 @@ class CostModel:
                     continue
                 x = e.rounds_attempted * e.bucket  # frontier-row units
                 if e.fresh:
-                    fresh.append((x, e.t_ms))
+                    self.fresh_points.append((x, e.t_ms))
                 else:
-                    warm_x.append(x)
-                    warm_y.append(e.t_ms)
+                    self.warm_points.append((x, e.t_ms))
+        del self.warm_points[:-self.window]
+        del self.fresh_points[:-self.window]
+        warm_x = [x for x, _ in self.warm_points]
+        warm_y = [t for _, t in self.warm_points]
         if len(warm_x) >= 3 and len(set(warm_x)) >= 2:
             A = np.stack([np.ones(len(warm_x)), np.asarray(warm_x) / 1e6],
                          axis=1)
             sol, *_ = np.linalg.lstsq(A, np.asarray(warm_y), rcond=None)
             a, b = float(sol[0]), float(sol[1])
-            if a > 0 and b > 0:     # degenerate fits keep the defaults
+            if a > 0 and b > 0:     # degenerate fits keep the coefficients
                 self.dispatch_ms, self.ms_per_mrow = a, b
                 self.n_fit_events = len(warm_x)
-        if fresh:
-            over = [t - self.predict_dispatch(x) for x, t in fresh]
+        if self.fresh_points:
+            over = [t - self.predict_dispatch(x)
+                    for x, t in self.fresh_points]
             est = float(np.median(over))
             if est > 0:
                 self.compile_ms = est

@@ -72,7 +72,8 @@ class TuneKey:
     """Identity of one tuned workload class:
     graph-shape class × backend × formulation × engine × mode × device
     (× device count for mesh-routed classes — the sharded knobs scale with
-    how many devices split the frontier)."""
+    how many devices split the frontier; × batch-size class for batched
+    requests — lane imbalance changes which round budget wins)."""
     shape: str            # shape_class(n, m, Δ)
     store: bool           # store vs count-only mode
     formulation: str
@@ -80,6 +81,7 @@ class TuneKey:
     engine: str           # 'wave' | 'host' | 'dist' (mesh-routed)
     device_kind: str      # jax platform: 'cpu' | 'gpu' | 'tpu'
     ndev: int = 0         # mesh axis size (0: unsharded)
+    batch: int = 0        # batch-size class (pow2 bucket of B; 0: unbatched)
 
     def as_str(self) -> str:
         mode = "store" if self.store else "count"
@@ -87,16 +89,23 @@ class TuneKey:
                  self.engine, self.device_kind]
         if self.ndev:     # unsharded keys keep the pre-dist string format
             parts.append(f"x{self.ndev}")
+        if self.batch:    # unbatched keys keep the pre-batch string format
+            parts.append(f"b{self.batch}")
         return "|".join(parts)
 
     @classmethod
     def from_str(cls, s: str) -> "TuneKey":
         shape, mode, formulation, backend, engine, device, *rest = \
             s.split("|")
-        ndev = int(rest[0].lstrip("x")) if rest else 0
+        ndev = batch = 0
+        for tok in rest:   # legacy strings carry neither token; order-free
+            if tok.startswith("x"):
+                ndev = int(tok[1:])
+            elif tok.startswith("b"):
+                batch = int(tok[1:])
         return cls(shape=shape, store=(mode == "store"),
                    formulation=formulation, backend=backend, engine=engine,
-                   device_kind=device, ndev=ndev)
+                   device_kind=device, ndev=ndev, batch=batch)
 
 
 class TuneStore:

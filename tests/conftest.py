@@ -33,6 +33,12 @@ except ImportError:
         seq = list(seq)
         return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
 
+    def _lists(elem: _Strategy, *, min_size: int = 0,
+               max_size: int = 10, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: [
+            elem.sample(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
     def _given(*pos_strats, **named_strats):
         def deco(fn):
             def run():
@@ -63,6 +69,7 @@ except ImportError:
     _st.floats = _floats
     _st.booleans = _booleans
     _st.sampled_from = _sampled_from
+    _st.lists = _lists
     _h.strategies = _st
     sys.modules["hypothesis"] = _h
     sys.modules["hypothesis.strategies"] = _st

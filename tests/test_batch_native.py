@@ -1,0 +1,336 @@
+"""Batch-native backend layer (DESIGN.md §6.7).
+
+The acceptance surface of the lane-gridded refactor:
+
+* ``enumerate_batch`` on the PALLAS backend is bit-identical — in
+  ``cycle_masks`` AND per-lane |T| histories — to the per-graph loop it
+  replaced, across mixed-size grid/random batches × slot/bitword;
+* one superstep dispatch per round for the whole batch (trace counters:
+  only 'seed'/'batch' events, never per-graph ones), and stage-1 seeding
+  is ONE device dispatch for all lanes;
+* the device-side stage 1 is row-for-row identical to the host-nonzero
+  path it replaces;
+* ``ExpandOp`` is the one registry every backend resolves through;
+* the lane-aware replay twin reproduces the batched driver's counters;
+* the cost model's sliding-window refit accumulates points across
+  observations and tracks drift;
+* mesh-routed ``enumerate_batch`` fails with a clear NotImplementedError.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CycleService, EngineConfig, build_graph,
+                        sequential_chordless_cycles)
+from repro.core import expand as E
+from repro.core import triplets as T
+from repro.core.graphs import complete_bipartite, grid_graph, random_gnp
+from repro.core.plan import batch_graphs, batch_shape, pad_graph
+from repro.tune import CostModel, TuneKey, WaveProfile, WaveTrace, replay
+
+MIXED_SPECS = [grid_graph(3, 4), grid_graph(4, 5), random_gnp(12, 0.3, 3),
+               random_gnp(9, 0.45, 5)]
+
+
+# ---------------------------------------------------------------------------
+# Batched pallas == the per-graph loop it replaced (the acceptance property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+def test_batched_pallas_bit_identical_to_per_graph(formulation):
+    graphs = [build_graph(n, e) for n, e in MIXED_SPECS]
+    svc = CycleService(EngineConfig(store=True, formulation=formulation,
+                                    backend="pallas"))
+    batch = svc.enumerate_batch(graphs)
+    assert svc.stats["batches"] == 1          # no per-graph fallback
+    singles = [svc.enumerate(g) for g in graphs]
+    for (n, edges), b, s in zip(MIXED_SPECS, batch, singles):
+        cnt_ref, cycles = sequential_chordless_cycles(n, edges)
+        assert b.n_cycles == s.n_cycles == cnt_ref
+        assert b.history == s.history          # per-lane |T| histories
+        assert np.array_equal(b.cycle_masks, s.cycle_masks)
+        assert set(b.cycles_as_sets(n)) == set(map(frozenset, cycles))
+
+
+@settings(max_examples=4, deadline=None)
+@given(seeds=st.lists(st.integers(0, 10**6), min_size=2, max_size=3),
+       p=st.floats(0.25, 0.45))
+def test_property_batched_pallas_random_batches(seeds, p):
+    specs = [random_gnp(8 + (s % 5), p, s) for s in seeds]
+    graphs = [build_graph(n, e) for n, e in specs]
+    svc = CycleService(EngineConfig(store=True, formulation="bitword",
+                                    backend="pallas"))
+    batch = svc.enumerate_batch(graphs)
+    for (n, edges), b in zip(specs, batch):
+        cnt_ref, _ = sequential_chordless_cycles(n, edges)
+        assert b.n_cycles == cnt_ref
+        single = svc.enumerate(build_graph(n, edges))
+        assert b.history == single.history
+        assert np.array_equal(b.cycle_masks, single.cycle_masks)
+
+
+def test_batch_is_one_dispatch_per_superstep_on_pallas():
+    """Trace-counter acceptance: the whole batch advances in ONE device
+    dispatch per superstep (kind='batch'), stage-1 seeding is ONE device
+    dispatch for all lanes (a single 'seed' event), and no single-graph
+    ('superstep') events appear — the per-graph loop is gone."""
+    graphs = [build_graph(*grid_graph(4, 4)) for _ in range(5)]
+    svc = CycleService(EngineConfig(store=False, formulation="bitword",
+                                    backend="pallas"), trace=True)
+    res = svc.enumerate_batch(graphs)
+    tr = svc.last_trace
+    kinds = [e.kind for e in tr.events]
+    assert kinds.count("seed") == 1
+    assert set(kinds) == {"seed", "batch"}
+    n_supersteps = kinds.count("batch")
+    # dispatch accounting: 2 stage-1 launches (counts probe + seeding
+    # scatter) + one launch per superstep — and nothing else
+    assert res[0].stats["n_dispatches"] == 2 + n_supersteps
+    # a per-graph loop would have issued >= one dispatch per graph
+    solo = CycleService(EngineConfig(store=False, formulation="bitword",
+                                     backend="pallas"), trace=True)
+    total_solo = sum(solo.enumerate(g).stats["n_dispatches"] for g in graphs)
+    assert res[0].stats["n_dispatches"] < total_solo
+
+
+def test_batch_count_only_pallas_matches_jnp():
+    graphs = [build_graph(n, e) for n, e in MIXED_SPECS[:3]]
+    a = CycleService(EngineConfig(store=False, formulation="bitword",
+                                  backend="pallas")).enumerate_batch(graphs)
+    b = CycleService(EngineConfig(store=False, formulation="bitword",
+                                  backend="jnp")).enumerate_batch(graphs)
+    for ra, rb in zip(a, b):
+        assert ra.n_cycles == rb.n_cycles
+        assert ra.history == rb.history
+        assert ra.cycle_masks is None
+
+
+# ---------------------------------------------------------------------------
+# Device-side stage 1 == host nonzero (row-for-row)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_initial_frontier_device_matches_host(backend):
+    flags_fn = None
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        flags_fn = kops.triplet_flags
+    for n, edges in [grid_graph(4, 5), random_gnp(12, 0.3, 3),
+                     complete_bipartite(3, 3), (5, [])]:
+        g = build_graph(n, edges)
+        fh, tri_h, n_tri_h = T.initial_frontier(g, flags_fn=flags_fn)
+        fd, tri_d, n_tri_d = T.initial_frontier_device(g, backend=backend)
+        assert n_tri_h == n_tri_d
+        assert int(fh.count) == int(fd.count)
+        for field in ("path", "blocked", "v1", "l2", "vlast"):
+            assert np.array_equal(np.asarray(getattr(fh, field)),
+                                  np.asarray(getattr(fd, field))), field
+        assert np.array_equal(tri_h, tri_d)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_batched_seed_matches_per_lane_stage1(backend):
+    graphs = [build_graph(n, e) for n, e in MIXED_SPECS[:3]]
+    n_pad, m_pad, delta = batch_shape(graphs)
+    gbat = batch_graphs(graphs)
+    fbat, tri_bat, n_tri, n_trip = T.initial_frontier_batched(
+        gbat, delta=delta, bucket=lambda c: max(1, int(c)), backend=backend)
+    for i, g in enumerate(graphs):
+        pg = pad_graph(g, n_pad, m_pad, delta)
+        fh, tri_h, n_tri_h = T.initial_frontier(pg)
+        assert int(n_tri[i]) == n_tri_h
+        assert int(n_trip[i]) == int(fh.count)
+        k = int(n_trip[i])
+        assert np.array_equal(np.asarray(fbat.path[i][:k]),
+                              np.asarray(fh.path)[:k])
+        assert np.array_equal(np.asarray(tri_bat[i][:n_tri_h]), tri_h)
+
+
+# ---------------------------------------------------------------------------
+# ExpandOp registry — the one interface across the stack
+# ---------------------------------------------------------------------------
+
+def test_expand_op_registry_covers_all_backends():
+    for formulation in ("slot", "bitword"):
+        for backend in ("jnp", "pallas"):
+            op = E.expand_op(formulation, backend)
+            assert isinstance(op, E.ExpandOp)
+            assert (op.formulation, op.backend) == (formulation, backend)
+    with pytest.raises(ValueError, match="no ExpandOp"):
+        E.expand_op("slot", "cuda")
+
+
+def test_expand_ops_agree_across_backends():
+    """Same flags + counts from every registered op on the same frontier."""
+    g = build_graph(*grid_graph(4, 4))
+    f, _, _ = T.initial_frontier(g)
+    delta = max(g.max_degree, 1)
+    ref = None
+    for backend in ("jnp", "pallas"):
+        for formulation in ("slot", "bitword"):
+            _, n_cyc, n_new = E.expand_op(formulation, backend).flags(
+                g, f, delta)
+            got = (int(n_cyc), int(n_new))
+            ref = got if ref is None else ref
+            assert got == ref, (formulation, backend)
+
+
+# ---------------------------------------------------------------------------
+# Lane-aware replay twin vs the real batched driver
+# ---------------------------------------------------------------------------
+
+BATCH_REPLAY_KNOBS = [
+    dict(),
+    dict(superstep_rounds=2),
+    dict(superstep_rounds=32),
+    dict(growth_bits=2, grow_headroom=0),
+    dict(cycle_buffer_rows=16, superstep_rounds=4),
+    dict(store=False, grow_headroom=2),
+]
+
+
+@pytest.mark.parametrize("knobs", BATCH_REPLAY_KNOBS)
+def test_batched_replay_matches_real_driver(knobs):
+    graphs = [build_graph(n, e) for n, e in MIXED_SPECS]
+    n_pad, _, _ = batch_shape(graphs)
+    base = CycleService(EngineConfig(store=True)).enumerate_batch(graphs)
+    prof = WaveProfile.from_batch(
+        [r.history for r in base], lane_n=[g.n for g in graphs],
+        n=n_pad, nw=graphs[0].adj_bits.shape[1])
+    assert prof.lanes == len(graphs)
+    cfg = EngineConfig(**dict(dict(store=True), **knobs))
+    real = CycleService(cfg).enumerate_batch(graphs)
+    s = real[0].stats
+    rep = replay(prof, cfg)
+    assert rep.n_dispatches == s["n_dispatches"]
+    assert rep.n_host_syncs == s["n_host_syncs"]
+    assert rep.n_bucket_transitions == s["n_bucket_transitions"]
+    assert rep.n_drains == s["n_drains"]
+    assert rep.by_cause == s.get("exit_causes", {})
+    assert rep.rounds == max(r.iterations for r in real)
+
+
+def test_batched_replay_charges_lane_imbalance():
+    """A finished lane burns its bucket until the slowest lane exits: with
+    lopsided lanes, higher K must show MORE padded waste per dispatch (the
+    superstep_rounds ↔ imbalance trade the tuner searches)."""
+    prof = WaveProfile(
+        n=40, nw=2, n0=32, t_sizes=(32,) * 20, c_counts=(0,) * 20,
+        lane_n=(40, 6), lane_n0=(32, 4),
+        lane_t=((32,) * 20, (4, 0)), lane_c=((0,) * 20, (0, 0)))
+    rep_small = replay(prof, EngineConfig(store=False, superstep_rounds=2))
+    rep_big = replay(prof, EngineConfig(store=False, superstep_rounds=32))
+    assert rep_big.n_dispatches < rep_small.n_dispatches
+    # the dead lane rides the long lane's dispatch: bigger K means more
+    # masked rounds charged to it — row work AND waste grow with K while
+    # dispatches shrink, which is exactly the trade the tuner scores
+    assert rep_big.row_work >= rep_small.row_work
+    assert rep_big.padded_waste >= rep_small.padded_waste > 0
+    profile_json = prof.to_json()
+    assert WaveProfile.from_json(profile_json) == prof  # lanes roundtrip
+
+
+def test_batch_profile_roundtrip_and_aggregates():
+    histories = [
+        [dict(step=0, T=8, C=1), dict(step=1, T=16, C=3),
+         dict(step=2, T=0, C=5)],
+        [dict(step=0, T=4, C=0), dict(step=1, T=2, C=1)],
+    ]
+    prof = WaveProfile.from_batch(histories, lane_n=[10, 7], n=10, nw=1)
+    assert prof.lanes == 2
+    assert prof.n0 == 8
+    assert prof.t_sizes == (16, 0)      # per-round max over lanes
+    assert prof.lane_t == ((16, 0), (2,))
+    assert prof.lane_c == ((2, 2), (1,))
+
+
+# ---------------------------------------------------------------------------
+# TuneKey batch-size class
+# ---------------------------------------------------------------------------
+
+def test_tune_key_batch_roundtrip_and_legacy():
+    k = TuneKey(shape="n32-m64-d4", store=False, formulation="bitword",
+                backend="pallas", engine="wave", device_kind="cpu", batch=8)
+    assert k.as_str().endswith("|b8")
+    assert TuneKey.from_str(k.as_str()) == k
+    legacy = "n32-m64-d4|count|slot|jnp|wave|cpu"
+    assert TuneKey.from_str(legacy).batch == 0
+    assert TuneKey.from_str(legacy).as_str() == legacy
+    both = TuneKey(shape="n32-m64-d4", store=False, formulation="slot",
+                   backend="jnp", engine="dist", device_kind="cpu",
+                   ndev=4, batch=2)
+    assert TuneKey.from_str(both.as_str()) == both
+
+
+def test_batched_requests_tune_under_their_own_class():
+    """First batch visit observes a lane-aware profile under the
+    batch-keyed class; later same-class batches execute tuned, warm."""
+    cfg = EngineConfig(store=False, formulation="bitword")
+    graphs = [build_graph(*grid_graph(4, 4)) for _ in range(3)]
+    svc = CycleService(cfg, auto_tune=True)
+    first = svc.enumerate_batch(graphs)
+    assert svc.stats["tune"]["observations"] == 1
+    keys = svc._tuner.store.keys()
+    assert any("|b4" in k for k in keys), keys   # pow2 class of B=3
+    again = svc.enumerate_batch(graphs)
+    assert [r.n_cycles for r in again] == [r.n_cycles for r in first]
+    assert svc.stats["tune"]["observations"] == 1
+    assert svc.stats["tuned_requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window cost-model refit (online, drift-tracking)
+# ---------------------------------------------------------------------------
+
+def _one_event_trace(rows: int, a: float, b: float) -> WaveTrace:
+    tr = WaveTrace(enabled=True)
+    tr.dispatch(kind="superstep", bucket=rows, cyc_cap=1, budget=8,
+                rounds=1, status="RUN", t_sizes=(rows,), c_counts=(0,),
+                t_ms=a + b * rows / 1e6)
+    return tr
+
+
+def test_cost_model_accumulates_points_across_observations():
+    """One warm event per fit call: the old once-per-observation fit could
+    NEVER use these (each call saw < 3 points); the sliding window fits
+    once enough observations accumulate."""
+    m = CostModel(window=32)
+    for rows in (1 << 8, 1 << 10, 1 << 12, 1 << 14):
+        m.fit([_one_event_trace(rows, a=0.5, b=20.0)])
+    assert m.n_fit_events == 4
+    assert m.dispatch_ms == pytest.approx(0.5, rel=0.05)
+    assert m.ms_per_mrow == pytest.approx(20.0, rel=0.05)
+
+
+def test_cost_model_window_converges_under_drift():
+    """Synthetic drifting workload: the device-load coefficients shift
+    regimes mid-stream; the windowed model must converge to the NEW regime
+    (old-regime points age out instead of anchoring the fit forever)."""
+    m = CostModel(window=8)
+    sizes = (1 << 8, 1 << 10, 1 << 12, 1 << 14)
+    for _ in range(2):                   # regime A fills the window
+        for rows in sizes:
+            m.fit([_one_event_trace(rows, a=0.5, b=20.0)])
+    assert m.ms_per_mrow == pytest.approx(20.0, rel=0.05)
+    for _ in range(2):                   # drift: regime B displaces A
+        for rows in sizes:
+            m.fit([_one_event_trace(rows, a=2.0, b=300.0)])
+    assert m.dispatch_ms == pytest.approx(2.0, rel=0.05)
+    assert m.ms_per_mrow == pytest.approx(300.0, rel=0.05)
+    assert len(m.warm_points) == 8       # bounded by the window
+
+
+# ---------------------------------------------------------------------------
+# Mesh-routed batch: clear NotImplementedError at call time
+# ---------------------------------------------------------------------------
+
+def test_enumerate_batch_mesh_raises_not_implemented():
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    svc = CycleService()
+    graphs = [build_graph(*grid_graph(3, 3)) for _ in range(2)]
+    with pytest.raises(NotImplementedError, match="shard_map"):
+        svc.enumerate_batch(graphs,
+                            config=EngineConfig(store=False, mesh=mesh))

@@ -496,11 +496,17 @@ def test_stream_and_batch_flow_through_tuner():
     assert np.array_equal(np.concatenate(chunks, axis=0), plain.cycle_masks)
     assert svc.stats["tune"]["observations"] == 1
 
-    # batch resolves the padded shape through the store (lookup-only)
+    # batch observes its own (padded shape × batch-size) class on first
+    # visit — the lane-aware profile feeds the tuner like enumerate does —
+    # and executes the stored knobs warm on the second
     results = svc.enumerate_batch([g, build_graph(*grid_graph(4, 4))])
     for res in results:
         assert res.n_cycles == plain.n_cycles
-    assert svc.stats["tune"]["observations"] == 1   # batch didn't observe
+    assert svc.stats["tune"]["observations"] == 2
+    again = svc.enumerate_batch([g, build_graph(*grid_graph(4, 4))])
+    assert [r.n_cycles for r in again] == [r.n_cycles for r in results]
+    assert svc.stats["tune"]["observations"] == 2   # warm hit: no re-observe
+    assert svc.stats["tuned_requests"] >= 1
 
 
 def test_explicit_per_request_config_bypasses_tuner():
