@@ -70,6 +70,11 @@ def run(graph_names=None):
             h["n_host_syncs"] / max(w["n_host_syncs"], 1), 2)
         w["warm_speedup"] = round(h["t_warm_ms"] / max(w["t_warm_ms"], 1e-9),
                                   2)
+        # the fused-round acceptance metric (DESIGN.md §6.8): warm per-round
+        # cost of the wave engine relative to the host engine — >1 means the
+        # wave round is cheaper than a host round on this graph class
+        w["us_per_round_vs_host"] = round(
+            h["us_per_round"] / max(w["us_per_round"], 1e-9), 2)
         # cold = one-shot wall clock incl. compiles — the paper's
         # T_par-total analogue; the superstep compiles ~¼ the programs.
         w["cold_speedup"] = round(h["t_cold_ms"] / max(w["t_cold_ms"], 1e-9),
@@ -279,6 +284,106 @@ def tune_smoke(out_path: str | None = None):
     return doc
 
 
+def fused_smoke(out_path: str | None = None):
+    """Fused-round smoke (DESIGN.md §6.8): the one-dispatch property plus a
+    fused-vs-split wave A/B.
+
+    Asserts on the TRACED PROGRAM that the pallas fused round is exactly one
+    ``pallas_call`` with zero scatter/cumsum/sort passes outside it (and
+    that the split round demonstrably is not — the contrast row), checks
+    fused/split cycle counts agree on every smoke graph, measures warm
+    fused-vs-split wall clock with the jnp backend (the fast backend on this
+    container; pallas runs under interpret), and writes
+    ``results/BENCH_fused_smoke.json`` for the ``run.py --check`` gate.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.analysis.dispatch import (assert_fused_round_program,
+                                         compaction_prims_outside_kernel,
+                                         primitive_counts)
+    from repro.core import CycleService, EngineConfig
+    from repro.core import expand as E
+    from repro.core.frontier import empty_cycle_buffer
+    from repro.core.triplets import initial_frontier
+
+    # -- dispatch contract on the traced round body -----------------------
+    n, edges = grid_graph(4, 4)
+    g = build_graph(n, edges)
+    f, _, _ = initial_frontier(g, bucket=lambda c: 64)
+    buf = empty_cycle_buffer(256, g.adj_bits.shape[1])
+    d = max(g.max_degree, 1)
+    pal = E.expand_op("bitword", "pallas")
+
+    def fused_body(g, f, buf):
+        return E.expand_count_compact(g, f, buf, delta=d, store=True,
+                                      op=pal, fused=True)
+
+    def split_body(g, f, buf):
+        return E.expand_count_compact(g, f, buf, delta=d, store=True,
+                                      op=pal, fused=False)
+
+    fused_prims = assert_fused_round_program(fused_body, g, f, buf)
+    split_prims = primitive_counts(jax.make_jaxpr(split_body)(g, f, buf))
+    split_leak = compaction_prims_outside_kernel(split_prims)
+    assert split_leak, "split round unexpectedly has no compaction passes"
+
+    # -- equivalence + warm A/B on the smoke graphs ------------------------
+    rows = []
+    for name in ("Grid_4x4", "Grid_5x6"):
+        if name == "Grid_4x4":
+            n, edges = grid_graph(4, 4)
+        else:
+            n, edges = PAPER_TABLE1[name][0]()
+        g = build_graph(n, edges)
+        per_arm = {}
+        counts = {}
+        for arm, fused in (("fused", True), ("split", False)):
+            svc = CycleService(EngineConfig(store=False,
+                                            formulation="bitword",
+                                            fused_round=fused))
+            res = svc.enumerate(g)
+            counts[arm] = res.n_cycles
+            warm = float("inf")
+            for _ in range(3):
+                t0 = _time.perf_counter()
+                res = svc.enumerate(g)
+                warm = min(warm, _time.perf_counter() - t0)
+            rounds = max(res.stats["rounds"], 1)
+            per_arm[arm] = dict(t_warm_ms=round(warm * 1e3, 2),
+                                us_per_round=round(warm * 1e6 / rounds, 2))
+        assert counts["fused"] == counts["split"], (name, counts)
+        rows.append(dict(
+            graph=name, n=n, m=len(edges), n_cycles=counts["fused"],
+            fused_ms=per_arm["fused"]["t_warm_ms"],
+            split_ms=per_arm["split"]["t_warm_ms"],
+            fused_us_per_round=per_arm["fused"]["us_per_round"],
+            split_us_per_round=per_arm["split"]["us_per_round"],
+            fused_speedup=round(per_arm["split"]["t_warm_ms"]
+                                / max(per_arm["fused"]["t_warm_ms"], 1e-9),
+                                2)))
+        print(f"fused smoke {name}: fused {rows[-1]['fused_ms']:.1f} ms vs "
+              f"split {rows[-1]['split_ms']:.1f} ms "
+              f"({rows[-1]['fused_speedup']}x), {counts['fused']} cycles")
+
+    doc = dict(benchmark="fused_smoke",
+               dispatch_contract=dict(
+                   fused_pallas_calls=fused_prims.get("pallas_call", 0),
+                   fused_compaction_prims_outside_kernel=0,
+                   split_compaction_prims_outside_kernel=sum(
+                       split_leak.values())),
+               rows=rows)
+    path = out_path or os.path.join(RESULTS_DIR, "BENCH_fused_smoke.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f_:
+        json.dump(doc, f_, indent=2)
+    print(f"fused smoke: one pallas dispatch per round confirmed on the "
+          f"jaxpr (split round leaks {sum(split_leak.values())} compaction "
+          f"passes) -> {path}")
+    return doc
+
+
 def batch_smoke(n_graphs: int = 8, out_path: str | None = None):
     """Batched-pallas A/B (DESIGN.md §6.7): ``enumerate_batch`` — one
     lane-gridded device program advancing all lanes — vs the per-graph loop
@@ -452,8 +557,18 @@ def nightly():
     return rows
 
 
-def main(graph_names=None, out_name: str = "BENCH_engine.json"):
+def main(graph_names=None, out_name: str = "BENCH_engine.json",
+         require_wave_wins: bool = False):
     rows = run(graph_names)
+    if require_wave_wins:
+        # fused-round acceptance: warm us_per_round must beat the host
+        # engine on EVERY smoke graph class
+        losers = [r for r in rows if r["engine"] == "wave"
+                  and r["us_per_round_vs_host"] < 1.0]
+        assert not losers, (
+            "wave us_per_round lost to the host engine on: "
+            + ", ".join(f"{r['graph']} ({r['us_per_round_vs_host']}x)"
+                        for r in losers))
     hdr = ("graph,engine,rounds,t_cold_ms,t_warm_ms,us_per_round,"
            "dispatches,host_syncs,rounds_per_dispatch,syncs_per_round")
     print(hdr)

@@ -45,6 +45,52 @@ def run():
         rows.append((f"expand_bitword_pallas_{name}",
                      _time(ops.expand_words_bitword, g, f), "interpret=True"))
     rows += run_lanes()
+    rows += run_fused()
+    return rows
+
+
+def run_fused():
+    """Fused vs split round rows with the analytic bytes-moved roofline
+    (DESIGN.md §6.8): measured µs per guarded round next to the modeled
+    per-round HBM traffic of each implementation — split (two passes +
+    cap·Δ scatter materialization), gather (fused jnp), kernel (fused
+    pallas, one pass)."""
+    import jax.numpy as jnp
+    from repro.core.frontier import empty_cycle_buffer
+    from repro.analysis.roofline import wave_round_row
+
+    rows = []
+    for name, (n, edges) in [("grid6x10", grid_graph(6, 10)),
+                             ("K_20_20", complete_bipartite(20, 20))]:
+        g = build_graph(n, edges)
+        f, _, _ = initial_frontier(g)
+        d = max(g.max_degree, 1)
+        cap, nw = f.capacity, g.n_words
+        buf = empty_cycle_buffer(1, nw)
+
+        def round_(fused, op):
+            out = E.expand_count_compact(g, f, buf, delta=d, store=False,
+                                         op=op, fused=fused)
+            return jax.block_until_ready(out[0].path)
+
+        jnp_op = E.expand_op("bitword", "jnp")
+        pal_op = E.expand_op("bitword", "pallas")
+        us_split = _time(lambda: round_(False, jnp_op))
+        us_gather = _time(lambda: round_(True, jnp_op))
+        us_kernel = _time(lambda: round_(True, pal_op))
+        model = wave_round_row(name, cap, nw, d)
+        rows += [
+            (f"round_split_{name}", us_split,
+             f"bytes={model['bytes_split']} "
+             f"bound_us={model['bound_us_split']:.2f}"),
+            (f"round_gather_{name}", us_gather,
+             f"bytes={model['bytes_gather']} "
+             f"bound_us={model['bound_us_gather']:.2f}"),
+            (f"round_kernel_{name}", us_kernel,
+             f"bytes={model['bytes_kernel']} "
+             f"bound_us={model['bound_us_kernel']:.2f} "
+             f"traffic={model['traffic_ratio']:.1f}x_less"),
+        ]
     return rows
 
 

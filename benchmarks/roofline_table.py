@@ -42,6 +42,31 @@ def main(mesh="16x16"):
             f"{r['peak_memory_gb_per_dev']:.1f}"))
 
 
+def wave(caps=(1 << 10, 1 << 14, 1 << 18), nw=32, delta=64):
+    """Wave-round HBM-traffic table (DESIGN.md §6.8): modeled bytes moved
+    per guarded round by each round implementation, and the memory-roofline
+    bound each traffic level implies. The fused pallas round ('kernel')
+    touches the frontier once; 'split' additionally materializes cap·Δ
+    candidate rows."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.analysis.roofline import wave_round_row
+    hdr = ("round@bucket", "B_split", "B_gather", "B_kernel",
+           "us_split", "us_gather", "us_kernel", "traffic")
+    print(("{:<24}" + "{:>12}" * 7).format(*hdr))
+    for cap in caps:
+        r = wave_round_row(f"cap={cap}", cap, nw, delta)
+        print(("{:<24}" + "{:>12}" * 7).format(
+            r["name"], f"{r['bytes_split']:.2e}",
+            f"{r['bytes_gather']:.2e}", f"{r['bytes_kernel']:.2e}",
+            f"{r['bound_us_split']:.1f}", f"{r['bound_us_gather']:.1f}",
+            f"{r['bound_us_kernel']:.1f}",
+            f"{r['traffic_ratio']:.0f}x"))
+
+
 if __name__ == "__main__":
     import sys
-    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")
+    if len(sys.argv) > 1 and sys.argv[1] == "wave":
+        wave()
+    else:
+        main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -14,8 +14,11 @@ Sections:
 ``--smoke`` runs only the CI-time subset: table1-style validation on the
 4×4 mesh, the warm-cache serving scenario (shared CycleService vs one-shot,
 → results/BENCH_service_smoke.json), the tuned-vs-default autotuner A/B
-(→ results/BENCH_tune_smoke.json), plus the engine A/B JSON emission on
-the two smallest graphs. ``--nightly`` runs the paper's footnote-scale
+(→ results/BENCH_tune_smoke.json), the fused-round contract — one pallas
+dispatch per round on the traced jaxpr plus the fused-vs-split A/B
+(→ results/BENCH_fused_smoke.json) — plus the engine A/B JSON emission on
+the two smallest graphs, asserting the wave engine's warm us/round beats
+the host engine on every smoke graph class. ``--nightly`` runs the paper's footnote-scale
 Grid_7x10 + Grid_8x10 count-only targets via the wave engine, the
 sharded per-round-vs-superstep A/B (→ results/BENCH_dist_smoke.json,
 >=2x dispatch reduction asserted), and the batched-pallas vs per-graph
@@ -129,6 +132,17 @@ def check() -> int:
                 base["batch_ms_per_graph"])
             cmp("batch.loop", row["loop_ms_per_graph"],
                 base["loop_ms_per_graph"])
+        base = _load_baseline("BENCH_fused_smoke.json")
+        if base:
+            print("== check: fused round (warm ms + dispatch contract) ==")
+            doc = engine_bench.fused_smoke(
+                out_path=os.path.join(tmp, "fused.json"))
+            by_graph = {r["graph"]: r for r in base["rows"]}
+            for fresh in doc["rows"]:
+                b = by_graph.get(fresh["graph"])
+                if b:
+                    cmp(f"fused[{fresh['graph']}]", fresh["fused_ms"],
+                        b["fused_ms"])
 
     if not checked:
         print("check: no committed baselines found — run --smoke first")
@@ -154,10 +168,13 @@ def main() -> None:
         engine_bench.service_smoke()
         print("\n== autotuner (tuned vs default) ==")
         engine_bench.tune_smoke()
+        print("\n== fused round (one-dispatch contract + A/B) ==")
+        engine_bench.fused_smoke()
         print("\n== engine A/B (smoke subset) ==")
         # separate file: must not clobber the tracked full-suite baseline
         engine_bench.main(["Grid_5x6", "K_8_8"],
-                          out_name="BENCH_engine_smoke.json")
+                          out_name="BENCH_engine_smoke.json",
+                          require_wave_wins=True)
         return
 
     if "--nightly" in sys.argv:

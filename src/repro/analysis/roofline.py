@@ -124,6 +124,82 @@ def model_flops_for(cfg, shape) -> float:
     return mult * fwd
 
 
+# ---------------------------------------------------------------------------
+# Wave-round HBM-traffic model (DESIGN.md §6.8)
+# ---------------------------------------------------------------------------
+
+# one frontier row: path + blocked masks (uint32 words) + v1/l2/vlast int32
+def frontier_row_bytes(nw: int) -> int:
+    return 8 * nw + 12
+
+
+def wave_round_bytes(cap: int, nw: int, delta: int, *, mode: str,
+                     store: bool = False, cyc_rows: int = 0) -> int:
+    """Analytic HBM bytes moved by ONE guarded expansion round at bucket
+    ``cap`` (bitword formulation; slot differs only in the flag encoding).
+
+    Modes:
+
+    * ``'split'``  — the two-pass round: a flag pass (read frontier, write
+      close/ext words), Δ-round slot extraction, then the scatter compaction
+      that MATERIALIZES all cap·Δ candidate rows before compacting them to
+      ≤cap survivors — the O(cap·Δ·row) term that dominates at high degree.
+    * ``'gather'`` — the fused jnp round (gather compaction): same flag
+      pass, but each output slot rebuilds exactly its own row, so the cap·Δ
+      materialization disappears; two O(cap·row) frontier passes remain.
+    * ``'kernel'`` — the fused pallas round (two-phase scatter): the whole
+      round is one kernel, flags never round-trip through HBM — one frontier
+      read + one frontier write (plus the ring carry-through in store mode).
+
+    The model counts array traffic only (graph tables are shared across
+    rounds and assumed cached); it is a lower bound the roofline divides by
+    HBM bandwidth, not a measurement.
+    """
+    row = frontier_row_bytes(nw)
+    flag = 4 * nw
+    if mode == "split":
+        b = cap * row + 2 * cap * flag           # flag pass
+        b += cap * flag + 4 * cap * delta        # slot extraction
+        b += cap * row + 2 * cap * delta * row + cap * row   # scatter compact
+        if store:
+            b += 2 * cap * delta * flag          # cycle-row materialization
+    elif mode == "gather":
+        b = cap * row + 2 * cap * flag           # flag pass
+        b += cap * flag + cap * row + cap * row  # gather pass (read + write)
+        if store:
+            b += 2 * cap * delta * flag          # cycle rows still scatter
+    elif mode == "kernel":
+        b = 2 * cap * row                        # ONE pass: read + write
+        if store:
+            b += 2 * cyc_rows * flag             # ring carry-through copy
+    else:
+        raise ValueError(f"unknown wave-round mode {mode!r}; "
+                         "expected 'split' | 'gather' | 'kernel'")
+    return int(b)
+
+
+def wave_round_bound_us(nbytes: int, chips: int = 1) -> float:
+    """Memory-roofline lower bound (µs) for moving ``nbytes`` over HBM."""
+    return nbytes / (chips * HBM_BW) * 1e6
+
+
+def wave_round_row(name: str, cap: int, nw: int, delta: int, *,
+                   store: bool = False, cyc_rows: int = 0) -> dict:
+    """One roofline table row comparing the three round implementations'
+    modeled traffic (benchmarks/kernel_bench.py attaches measured µs)."""
+    modes = {m: wave_round_bytes(cap, nw, delta, mode=m, store=store,
+                                 cyc_rows=cyc_rows)
+             for m in ("split", "gather", "kernel")}
+    return dict(
+        name=name, cap=cap, nw=nw, delta=delta, store=store,
+        bytes_split=modes["split"], bytes_gather=modes["gather"],
+        bytes_kernel=modes["kernel"],
+        bound_us_split=wave_round_bound_us(modes["split"]),
+        bound_us_gather=wave_round_bound_us(modes["gather"]),
+        bound_us_kernel=wave_round_bound_us(modes["kernel"]),
+        traffic_ratio=modes["split"] / max(modes["kernel"], 1))
+
+
 def write_rows(path: str, rows: list[dict]):
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)

@@ -101,14 +101,20 @@ def _fspec(axis: str) -> Frontier:
                     vlast=P(axis), count=P(axis))
 
 
-def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int):
+def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int,
+                fused: bool = False):
     """One expansion round on this device's rows. Returns (f', n_cyc, drop).
 
     Programs against the same ``ExpandOp`` interface as the wave superstep
-    (DESIGN.md §6.7) — the sharded path is slot/jnp by validation."""
+    (DESIGN.md §6.7) — the sharded path is slot/jnp by validation. ``fused``
+    selects the one-pass gather compaction (DESIGN.md §6.8): O(cap·nw)
+    frontier traffic per round instead of the cap·Δ scatter
+    materialization, bit-identical rows and drop counts."""
     op = E.expand_op("slot", "jnp")
     (cand, _, is_ext), n_cyc, _ = op.flags(g, f, delta)
-    f2, dropped = E.compact_extensions(g, f, cand, is_ext, cap)
+    compact = (E.compact_extensions_gather if fused
+               else E.compact_extensions)
+    f2, dropped = compact(g, f, cand, is_ext, cap)
     return f2, n_cyc, dropped
 
 
@@ -304,7 +310,8 @@ def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
 
         def body(c):
             f, cnts, r, total, th, ch, lh = c
-            f2, n_cyc, drop = _local_step(g, f, delta, cap)
+            f2, n_cyc, drop = _local_step(g, f, delta, cap,
+                                          fused=bool(cfg.fused_round))
             if axis_size > 1:
                 # cadence over the GLOBAL round index (round_base carries
                 # the rounds done by earlier supersteps) — the knob means
@@ -377,7 +384,7 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
         key = PlanKey(kind="dist", bucket=cap, nw=nw, cyc_rows=0,
                       delta=delta, store=False, formulation=cfg.formulation,
                       backend=cfg.backend, k_max=k_max, batch=ndev,
-                      donate=bool(donate),
+                      donate=bool(donate), fused=bool(cfg.fused_round),
                       extra=(tag, mesh, axis, cfg.balance_block,
                              cfg.balance_every, g.n, g.m))
         if cache is None:

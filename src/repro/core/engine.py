@@ -92,6 +92,10 @@ class EngineConfig:
     grow_headroom: int = 1         # extra ×2 buckets granted on GROW — an
     # aborted GROW round re-runs its expand at the new bucket, so headroom
     # trades dead-row work for fewer wasted peak-size rounds
+    fused_round: bool = True       # one-pass round (DESIGN.md §6.8): jnp
+    # swaps the cap·Δ scatter compaction for the gather formulation, pallas
+    # collapses the whole guarded round into ONE kernel dispatch
+    # (two-phase scatter). Bit-identical output; tunable (TUNED_KNOBS).
     max_iters: int | None = None
     donate: bool = True            # donate superstep frontier/CycleBuffer
     # buffers to the jitted program (no-copy in-place aliasing; halves peak
@@ -182,7 +186,8 @@ STATUS_NAMES = dict(enumerate(STATUSES))
 
 def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
                    rounds_limit: jnp.ndarray, *, delta: int, store: bool,
-                   formulation: str, backend: str, k_max: int):
+                   formulation: str, backend: str, k_max: int,
+                   fused: bool = False):
     """Run up to min(k_max, rounds_limit) fused rounds fully on device.
 
     UNJITTED device algorithm — compilation (jit + buffer donation + the
@@ -209,7 +214,7 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
     def body(c):
         f, buf, r, status, th, ch, pn, pc = c
         f2, buf2, n_cyc, n_new, ok_f, ok_c = E.expand_count_compact(
-            g, f, buf, delta=delta, store=store, op=op)
+            g, f, buf, delta=delta, store=store, op=op, fused=fused)
         ok = ok_f & ok_c
         th = th.at[r].set(jnp.where(ok, n_new, 0))
         ch = ch.at[r].set(jnp.where(ok, n_cyc, 0))

@@ -156,6 +156,110 @@ def compact_extensions(g: BitsetGraph, f: Frontier, cand_v: jnp.ndarray,
     return out, jnp.maximum(total - out_cap, 0)
 
 
+# ---------------------------------------------------------------------------
+# Gather-based compaction (fused round, DESIGN.md §6.8)
+#
+# The scatter path above materializes every (path, slot) pair — cap·Δ rows of
+# nw words — before compacting them down to ≤cap survivors. The gather
+# formulation inverts the data flow: each OUTPUT slot locates its source row
+# via a prefix-sum over per-row survivor counts (O(cap), not O(cap·Δ)) and
+# rebuilds exactly its own row, so the round's frontier traffic drops from
+# O(cap·Δ·nw) to O(cap·nw) — the XLA realization of the two-phase-scatter
+# destination computation the fused pallas kernel performs on device.
+# Output order is bit-identical to the scatter path: survivors land in
+# row-major (row, slot) order, slots in ascending-vertex order for bitword.
+# ---------------------------------------------------------------------------
+
+def _source_rows(counts: jnp.ndarray, out_cap: int):
+    """Map output slots to source rows through an inclusive prefix sum.
+
+    ``counts`` (cap,) survivors per row → (src, k, valid, total): for output
+    slot o, ``src[o]`` is the row owning it, ``k[o]`` the rank within that
+    row, ``valid[o]`` whether o < min(total, out_cap)."""
+    cap = counts.shape[0]
+    incl = jnp.cumsum(counts.astype(jnp.int32))
+    total = incl[-1]
+    o = jnp.arange(out_cap, dtype=jnp.int32)
+    src = jnp.searchsorted(incl, o, side="right").astype(jnp.int32)
+    src = jnp.minimum(src, cap - 1)
+    k = o - (incl[src] - counts[src])
+    valid = o < jnp.minimum(total, out_cap)
+    return src, jnp.where(valid, k, 0), valid, total
+
+
+def _select_kth_bit(words: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Vertex index of the k-th set bit (ascending) of each (R, nw) mask row.
+
+    Branch-free: per-word popcount prefix locates the word, then a 5-step
+    binary search over masked popcounts locates the bit within the uint32.
+    Undefined where k >= popcount(row) (callers mask those lanes)."""
+    pc = jax.lax.population_count(words).astype(jnp.int32)    # (R, nw)
+    excl = jnp.cumsum(pc, axis=1) - pc
+    in_w = (k[:, None] >= excl) & (k[:, None] < excl + pc)
+    wi = jnp.argmax(in_w, axis=1).astype(jnp.int32)
+    w = jnp.take_along_axis(words, wi[:, None], axis=1)[:, 0]
+    kk = k - jnp.take_along_axis(excl, wi[:, None], axis=1)[:, 0]
+    pos = jnp.zeros_like(kk)
+    for sh in (16, 8, 4, 2, 1):
+        mask = jnp.uint32((1 << sh) - 1)
+        c = jax.lax.population_count(w & mask).astype(jnp.int32)
+        hi = kk >= c
+        kk = jnp.where(hi, kk - c, kk)
+        pos = pos + jnp.where(hi, sh, 0)
+        w = jnp.where(hi, w >> jnp.uint32(sh), w)
+    return wi * 32 + pos
+
+
+def _gathered_frontier(g: BitsetGraph, f: Frontier, src: jnp.ndarray,
+                       v: jnp.ndarray, valid: jnp.ndarray, total, out_cap):
+    """Build the compacted frontier from gathered (src, v) pairs — dead
+    output rows match ``scatter_frontier``'s zero-init exactly."""
+    nw = f.n_words
+    vi = jnp.clip(v, 0, None)
+    upd = jnp.where(jnp.arange(nw)[None, :] == (vi // 32)[:, None],
+                    (jnp.uint32(1) << (vi % 32).astype(jnp.uint32))[:, None],
+                    jnp.uint32(0))
+    live = valid[:, None]
+    new_path = jnp.where(live, f.path[src] | upd, jnp.uint32(0))
+    new_blocked = jnp.where(
+        live, f.blocked[src] | g.adj_bits[f.vlast[src]], jnp.uint32(0))
+    out = Frontier(
+        path=new_path, blocked=new_blocked,
+        v1=jnp.where(valid, f.v1[src], -1).astype(jnp.int32),
+        l2=jnp.where(valid, f.l2[src], 0).astype(jnp.int32),
+        vlast=jnp.where(valid, vi, 0).astype(jnp.int32),
+        count=jnp.minimum(total, out_cap).astype(jnp.int32))
+    return out, jnp.maximum(total - out_cap, 0)
+
+
+@partial(jax.jit, static_argnames=("out_cap",))
+def bitword_compact_gather(g: BitsetGraph, f: Frontier, ext_w: jnp.ndarray,
+                           out_cap: int):
+    """One-pass bitword compaction: no slot extraction, no cap·Δ row
+    materialization — each output slot selects its k-th set extension bit
+    straight from the candidate words. Returns (new_frontier, n_dropped)."""
+    src, k, valid, total = _source_rows(popcount(ext_w), out_cap)
+    v = _select_kth_bit(ext_w[src], k)
+    return _gathered_frontier(g, f, src, v, valid, total, out_cap)
+
+
+@partial(jax.jit, static_argnames=("out_cap",))
+def compact_extensions_gather(g: BitsetGraph, f: Frontier,
+                              cand_v: jnp.ndarray, is_ext: jnp.ndarray,
+                              out_cap: int):
+    """Slot-formulation twin of ``bitword_compact_gather``: each output slot
+    selects the k-th flagged slot of its source row (slot order preserved —
+    bit-identical to the scatter path). Returns (new_frontier, n_dropped)."""
+    src, k, valid, total = _source_rows(
+        is_ext.sum(axis=1, dtype=jnp.int32), out_cap)
+    flags_src = is_ext[src].astype(jnp.int32)                 # (out_cap, Δ)
+    excl = jnp.cumsum(flags_src, axis=1) - flags_src
+    sel = (flags_src > 0) & (excl == k[:, None])
+    j = jnp.argmax(sel, axis=1).astype(jnp.int32)
+    v = jnp.take_along_axis(cand_v[src], j[:, None], axis=1)[:, 0]
+    return _gathered_frontier(g, f, src, v, valid, total, out_cap)
+
+
 @jax.jit
 def count_ext_and_cycles(is_cycle: jnp.ndarray, is_ext: jnp.ndarray):
     return (is_ext.sum(dtype=jnp.int32), is_cycle.sum(dtype=jnp.int32))
@@ -240,9 +344,17 @@ class ExpandOp:
     * ``apply(g, f, buf, flags, delta, store)`` → ``(f', buf')``: gather
       this round's cycles + compact extensions at fixed capacity — the
       T → T' update.
+    * ``apply_fused(...)`` (same signature as ``apply``): the one-pass
+      gather compaction variant (DESIGN.md §6.8) — O(cap·nw) frontier
+      traffic per round instead of O(cap·Δ·nw). Bit-identical output.
+    * ``fused_kernel`` (pallas ops only): the whole guarded round — flags,
+      counts, cycle append, compaction — collapses into ONE pallas
+      dispatch (``expand_count_compact`` routes there under ``fused``).
     """
     formulation: str
     backend: str
+    supports_fused: bool = False   # has apply_fused (gather compaction)
+    fused_kernel: bool = False     # whole round is one pallas dispatch
 
     def flags(self, g: BitsetGraph, f: Frontier, delta: int):
         raise NotImplementedError
@@ -251,9 +363,20 @@ class ExpandOp:
               delta: int, store: bool):
         raise NotImplementedError
 
+    def apply_fused(self, g: BitsetGraph, f: Frontier, buf: CycleBuffer,
+                    flags, delta: int, store: bool):
+        raise NotImplementedError
+
+    def fused_round(self, g: BitsetGraph, f: Frontier, buf: CycleBuffer,
+                    delta: int, store: bool):
+        """Whole guarded round as one device dispatch (pallas ops only).
+        Returns (f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles)."""
+        raise NotImplementedError
+
 
 class _SlotApply:
     """Shared slot-formulation T → T' update."""
+    supports_fused = True
 
     def apply(self, g, f, buf, flags, delta, store):
         cand_v, is_cyc, is_ext = flags
@@ -262,10 +385,18 @@ class _SlotApply:
         f2, _ = compact_extensions(g, f, cand_v, is_ext, f.capacity)
         return f2, buf
 
+    def apply_fused(self, g, f, buf, flags, delta, store):
+        cand_v, is_cyc, is_ext = flags
+        if store:
+            buf = gather_cycles_into(f, cand_v, is_cyc, buf)
+        f2, _ = compact_extensions_gather(g, f, cand_v, is_ext, f.capacity)
+        return f2, buf
+
 
 class _BitwordApply:
     """Shared bitword-formulation T → T' update (slot extraction from the
     candidate words, then the same prefix-sum compaction)."""
+    supports_fused = True
 
     def apply(self, g, f, buf, flags, delta, store):
         close_w, ext_w = flags
@@ -275,6 +406,16 @@ class _BitwordApply:
             ccand = bitword_to_slots(close_w, delta)
             buf = gather_cycles_into(f, ccand, ccand >= 0, buf)
         f2, _ = compact_extensions(g, f, cand_v, is_ext, f.capacity)
+        return f2, buf
+
+    def apply_fused(self, g, f, buf, flags, delta, store):
+        # frontier: straight from the candidate words — no Δ-round slot
+        # extraction, no cap·Δ row materialization (DESIGN.md §6.8)
+        close_w, ext_w = flags
+        if store:
+            ccand = bitword_to_slots(close_w, delta)
+            buf = gather_cycles_into(f, ccand, ccand >= 0, buf)
+        f2, _ = bitword_compact_gather(g, f, ext_w, f.capacity)
         return f2, buf
 
 
@@ -289,12 +430,18 @@ class SlotXlaExpand(_SlotApply, ExpandOp):
 
 class SlotPallasExpand(_SlotApply, ExpandOp):
     formulation, backend = "slot", "pallas"
+    fused_kernel = True
 
     def flags(self, g, f, delta):
         from ..kernels import ops as kops
         cand_v, is_cyc, is_ext = kops.expand_flags_slot(g, f, delta)
         n_new, n_cyc = count_ext_and_cycles(is_cyc, is_ext)
         return (cand_v, is_cyc, is_ext), n_cyc, n_new
+
+    def fused_round(self, g, f, buf, delta, store):
+        from ..kernels import ops as kops
+        return kops.fused_round(g, f, buf, formulation="slot",
+                                delta=delta, store=store)
 
 
 class BitwordXlaExpand(_BitwordApply, ExpandOp):
@@ -308,11 +455,17 @@ class BitwordXlaExpand(_BitwordApply, ExpandOp):
 
 class BitwordPallasExpand(_BitwordApply, ExpandOp):
     formulation, backend = "bitword", "pallas"
+    fused_kernel = True
 
     def flags(self, g, f, delta):
         from ..kernels import ops as kops
         close_w, ext_w, n_cyc, n_new = kops.bitword_fused_counts(g, f)
         return (close_w, ext_w), n_cyc, n_new
+
+    def fused_round(self, g, f, buf, delta, store):
+        from ..kernels import ops as kops
+        return kops.fused_round(g, f, buf, formulation="bitword",
+                                delta=delta, store=store)
 
 
 _EXPAND_OPS: dict[tuple[str, str], ExpandOp] = {
@@ -339,7 +492,7 @@ def expand_op(formulation: str, backend: str) -> ExpandOp:
 def expand_count_compact(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
                          delta: int, store: bool,
                          formulation: str = "slot", backend: str = "jnp",
-                         op: ExpandOp | None = None):
+                         op: ExpandOp | None = None, fused: bool = False):
     """One fused, guarded expansion round — the wave superstep's loop body.
 
     Combines an ``ExpandOp``'s flag computation and application into a
@@ -350,10 +503,19 @@ def expand_count_compact(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
     and escalates to the host (bucket transition).  ``op`` defaults to the
     registered ``expand_op(formulation, backend)``.
 
+    ``fused`` selects the one-pass round (DESIGN.md §6.8) when the op
+    supports it: pallas ops with a fused kernel collapse the whole guarded
+    round into ONE device dispatch (two-phase scatter, guard evaluated in
+    kernel); jnp ops swap the scatter compaction for the gather formulation
+    (one frontier pass instead of two). Output is bit-identical either way;
+    ops without fused support fall back to the split path silently.
+
     Returns (f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles).
     """
     if op is None:
         op = expand_op(formulation, backend)
+    if fused and op.fused_kernel:
+        return op.fused_round(g, f, buf, delta, store)
     flags, n_cyc, n_new = op.flags(g, f, delta)
     ok_frontier = n_new <= f.capacity
     if store:
@@ -362,9 +524,10 @@ def expand_count_compact(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
         ok_cycles = jnp.bool_(True)
     ok = ok_frontier & ok_cycles
 
+    apply = op.apply_fused if (fused and op.supports_fused) else op.apply
     f2, buf2 = jax.lax.cond(
         ok,
-        lambda _: op.apply(g, f, buf, flags, delta, store),
+        lambda _: apply(g, f, buf, flags, delta, store),
         lambda _: (f, buf),
         None)
     return f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles

@@ -64,6 +64,9 @@ class PlanKey:
     k_max: int               # superstep round budget K
     batch: int = 0
     donate: bool = True      # buffer-donation is part of program identity
+    fused: bool = False      # one-pass fused round (DESIGN.md §6.8) — the
+    # round body's program differs, so fused and split supersteps compile
+    # (and cache) separately
     extra: tuple = ()
 
 
@@ -86,7 +89,7 @@ class WavePlan:
 
         statics = dict(delta=key.delta, store=key.store,
                        formulation=key.formulation, backend=key.backend,
-                       k_max=key.k_max)
+                       k_max=key.k_max, fused=key.fused)
 
         def _traced(g, f, buf, rounds_limit):
             # runs once per TRACE (not per call): the retrace observer

@@ -168,7 +168,8 @@ class CycleService:
                       delta=delta, store=cfg.store,
                       formulation=cfg.formulation, backend=cfg.backend,
                       k_max=cfg.superstep_rounds, batch=batch,
-                      donate=cfg.donate, extra=(g_n, g_m))
+                      donate=cfg.donate, fused=cfg.fused_round,
+                      extra=(g_n, g_m))
         return self._cache.get_or_build(key, lambda: WavePlan(key))
 
     def plan(self, g: BitsetGraph, *, config: EngineConfig | None = None

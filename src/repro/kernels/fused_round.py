@@ -1,0 +1,388 @@
+"""Pallas TPU kernel — the FUSED expansion round (DESIGN.md §6.8).
+
+One ``pallas_call`` per round executes the entire guarded round body that
+the split path spreads over a flag kernel plus XLA cumsum/scatter passes:
+neighbor-flag expansion, chord test, popcount cycle/extension counting,
+accepted-cycle append into the CycleBuffer ring, and in-bucket frontier
+compaction — with the overflow guard evaluated *inside* the kernel.
+
+Two-phase scatter over the lane grid ``grid = (B, 2, capp//tp)``:
+
+* **Phase A** (grid dim 1 == 0) streams the frontier tiles once, computes
+  each tile's survivor counts (extensions, cycles) into SMEM scratch,
+  zeroes the output frontier region, and (store mode) copies the ring
+  through to the output buffer.
+* **Phase B** (grid dim 1 == 1) turns the per-tile counts into cross-tile
+  exclusive offsets (TPU grids execute sequentially, so the scratch
+  written at tile 0 of phase B is visible to every later tile), recomputes
+  the tile's candidate words in VMEM (cheaper than an HBM round-trip),
+  adds the block-local cumsum, and writes every survivor row and cycle
+  bitmap at its FINAL position — no XLA ``cumsum``/``scatter`` pass over
+  the frontier ever materializes.
+
+If the round would overflow the frontier bucket or the ring, phase B
+instead copies the input tiles through unchanged (the ``lax.cond`` keep
+branch of the split path, evaluated on device), so the host sees the same
+(f, buf, pending sizes) contract as ``expand_count_compact``.
+
+Output order is bit-identical to the split path: survivors land in
+row-major (row, slot) order — ascending vertex id within a row for the
+bitword formulation (lowest-set-bit-first extraction), CSR slot order for
+the slot formulation.
+
+VMEM capacity note: the output frontier (and the ring, in store mode) is a
+lane-whole revisited block, so a lane's whole bucket must fit in VMEM —
+the same n·nw ≲ VMEM class of limit the flag kernels already accept for
+the graph tables (DESIGN.md §2); the split path remains the fallback for
+buckets past it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _popc(w):
+    return jax.lax.population_count(w).astype(jnp.int32)
+
+
+def _extract_slots(words: jnp.ndarray, delta: int) -> jnp.ndarray:
+    """(tp, nw) uint32 → (tp, Δ) int32 set-bit indices, ascending per row,
+    −1 padded — the in-kernel twin of ``core.expand.bitword_to_slots``."""
+    tp, nw = words.shape
+    widx = jax.lax.broadcasted_iota(jnp.int32, (tp, nw), 1)
+    w = words
+    cols = []
+    for _ in range(delta):
+        nz = w != jnp.uint32(0)
+        has = nz.any(axis=1)
+        first = jnp.argmax(nz, axis=1).astype(jnp.int32)
+        sel = widx == first[:, None]
+        ww = jnp.where(sel, w, jnp.uint32(0)).sum(axis=1, dtype=jnp.uint32)
+        lsb = ww & (~ww + jnp.uint32(1))
+        bit = _popc(lsb - jnp.uint32(1))
+        cols.append(jnp.where(has, first * 32 + bit, -1))
+        w = w & ~jnp.where(sel & has[:, None], lsb[:, None], jnp.uint32(0))
+    return jnp.stack(cols, axis=1)
+
+
+def _onehot_words(v: jnp.ndarray, nw: int) -> jnp.ndarray:
+    """(tp, Δ) vertex ids → (tp, Δ, nw) single-bit mask rows (v<0 → bit 0,
+    callers mask those slots)."""
+    vi = jnp.clip(v, 0, None)
+    widx = jax.lax.broadcasted_iota(jnp.int32, v.shape + (nw,), v.ndim)
+    bit = (jnp.uint32(1) << (vi % 32).astype(jnp.uint32))[..., None]
+    return jnp.where(widx == (vi // 32)[..., None], bit, jnp.uint32(0))
+
+
+def _bitword_tile_slots(path, blocked, v1, l2, vlast, live, adj, labelgt,
+                        delta):
+    """Bitword flags for one frontier tile → (ext_v, close_v, nb), slot
+    values −1-padded ascending (split-path extraction order)."""
+    n = adj.shape[0]
+    adj_last = jnp.take(adj, jnp.clip(vlast, 0, n - 1), axis=0)
+    adj_v1 = jnp.take(adj, jnp.clip(v1, 0, n - 1), axis=0)
+    gt = jnp.take(labelgt, jnp.clip(l2, 0, n - 1), axis=0)
+    cand = adj_last & ~path & ~blocked & gt
+    cand = jnp.where(live, cand, jnp.uint32(0))
+    ext_v = _extract_slots(cand & ~adj_v1, delta)
+    close_v = _extract_slots(cand & adj_v1, delta)
+    return ext_v, close_v, blocked | adj_last
+
+
+def _slot_tile_slots(path, blocked, v1, l2, vlast, live, offsets, neighbors,
+                     labels, adj, delta):
+    """Slot-formulation flags for one frontier tile → (ext_v, close_v, nb),
+    slot values in CSR slot order (split-path order)."""
+    tp = path.shape[0]
+    n = adj.shape[0]
+    j = jax.lax.broadcasted_iota(jnp.int32, (tp, delta), 1)
+    vc = jnp.clip(vlast, 0, offsets.shape[0] - 2)
+    k1 = offsets[vc][:, None]
+    k2 = offsets[vc + 1][:, None]
+    slot_ok = (j < (k2 - k1)) & live
+    v = jnp.take(neighbors, jnp.clip(k1 + j, 0, neighbors.shape[0] - 1))
+    vi = jnp.clip(v, 0, n - 1)
+    lab_ok = jnp.take(labels, vi) > l2[:, None]
+    word = (vi // 32).astype(jnp.int32)
+    bit = (jnp.uint32(1) << (vi % 32).astype(jnp.uint32))
+
+    def probe(mask_rows):   # (tp, nw) → bit of v per slot (tp, Δ)
+        w = jnp.take_along_axis(
+            mask_rows[:, None, :].repeat(delta, axis=1),
+            word[..., None], axis=2)[..., 0]
+        return (w & bit) != 0
+
+    adj_last = jnp.take(adj, jnp.clip(vlast, 0, n - 1), axis=0)
+    adj_v1 = jnp.take(adj, jnp.clip(v1, 0, n - 1), axis=0)
+    valid = slot_ok & lab_ok & ~probe(path) & ~probe(blocked)
+    closes = probe(adj_v1)
+    ext_v = jnp.where(valid & ~closes, v, -1)
+    close_v = jnp.where(valid & closes, v, -1)
+    return ext_v, close_v, blocked | adj_last
+
+
+def _excl_over_rows(cnt):
+    """Exclusive cumsum over a (tp,) int32 vector (2D-shaped for the VPU)."""
+    c2 = cnt[:, None]
+    return (jnp.cumsum(c2, axis=0) - c2)[:, 0]
+
+
+def _fused_kernel(*refs, formulation: str, cap: int, tp: int, nt: int,
+                  delta: int, nw: int, store: bool, cyc_cap: int, rps: int):
+    """The two-phase fused round. Ref layout (leading lane-block of 1):
+
+    inputs:  path, blocked, v1, l2, vlast (frontier tiles), fcount, bcount
+             (per-lane scalars), <graph tables>, [masks_in]
+    outputs: opath, oblocked, ov1, ol2, ovlast (lane-whole), ncyc, nnew,
+             [omasks (lane-whole)]
+    scratch: cnt (SMEM (nt, 2) per-tile ext/cyc counts),
+             base (SMEM (nt, 2) cross-tile exclusive offsets),
+             meta (SMEM (2,) — [ok, unused])
+    """
+    it = iter(refs)
+    path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref = (next(it)
+                                                        for _ in range(5))
+    fcount_ref, bcount_ref = next(it), next(it)
+    if formulation == "bitword":
+        adj_ref, labelgt_ref = next(it), next(it)
+    else:
+        offsets_ref, neighbors_ref, labels_ref, adj_ref = (next(it)
+                                                           for _ in range(4))
+    masks_in_ref = next(it) if store else None
+    opath_ref, oblocked_ref, ov1_ref, ol2_ref, ovlast_ref = (
+        next(it) for _ in range(5))
+    ncyc_ref, nnew_ref = next(it), next(it)
+    omasks_ref = next(it) if store else None
+    cnt_ref, base_ref, meta_ref = next(it), next(it), next(it)
+
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+
+    path = path_ref[0]
+    blocked = blocked_ref[0]
+    v1 = v1_ref[0][:, 0]
+    l2 = l2_ref[0][:, 0]
+    vlast = vlast_ref[0][:, 0]
+    fcount = fcount_ref[0, 0]
+    bcount = bcount_ref[0, 0]
+    row0 = i * tp
+    live = (row0 + jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0)) < fcount
+
+    if formulation == "bitword":
+        ext_v, close_v, nb = _bitword_tile_slots(
+            path, blocked, v1, l2, vlast, live, adj_ref[0], labelgt_ref[0],
+            delta)
+    else:
+        ext_v, close_v, nb = _slot_tile_slots(
+            path, blocked, v1, l2, vlast, live, offsets_ref[0][:, 0],
+            neighbors_ref[0][:, 0], labels_ref[0][:, 0], adj_ref[0], delta)
+
+    eflag = (ext_v >= 0).astype(jnp.int32)          # (tp, Δ)
+    cflag = (close_v >= 0).astype(jnp.int32)
+    ecnt = eflag.sum(axis=1)                        # (tp,)
+    ccnt = cflag.sum(axis=1)
+
+    # ---- phase A: per-tile survivor counts + output init -----------------
+    @pl.when(p == 0)
+    def _phase_a():
+        cnt_ref[i, 0] = ecnt.sum()
+        cnt_ref[i, 1] = ccnt.sum()
+        tile = pl.ds(row0, tp)
+        opath_ref[0, tile, :] = jnp.zeros((tp, nw), jnp.uint32)
+        oblocked_ref[0, tile, :] = jnp.zeros((tp, nw), jnp.uint32)
+        ov1_ref[0, tile, :] = jnp.full((tp, 1), -1, jnp.int32)
+        ol2_ref[0, tile, :] = jnp.zeros((tp, 1), jnp.int32)
+        ovlast_ref[0, tile, :] = jnp.zeros((tp, 1), jnp.int32)
+        if store:
+            # carry the ring through (rows this round appends overwrite in
+            # phase B; everything else must survive the round unchanged)
+            start = jnp.minimum(i * rps, cyc_cap - rps)
+            omasks_ref[0, pl.ds(start, rps), :] = \
+                masks_in_ref[0, pl.ds(start, rps), :]
+
+    # ---- phase B entry: cross-tile exclusive offsets + the guard ---------
+    @pl.when((p == 1) & (i == 0))
+    def _phase_b_bases():
+        def acc(t, carry):
+            eb, cb = carry
+            base_ref[t, 0] = eb
+            base_ref[t, 1] = cb
+            return eb + cnt_ref[t, 0], cb + cnt_ref[t, 1]
+        tot_e, tot_c = jax.lax.fori_loop(
+            0, nt, acc, (jnp.int32(0), jnp.int32(0)))
+        ok = tot_e <= cap
+        if store:
+            ok = ok & (bcount + tot_c <= cyc_cap)
+        meta_ref[0] = ok.astype(jnp.int32)
+        ncyc_ref[0, 0] = tot_c
+        nnew_ref[0, 0] = tot_e
+
+    # ---- phase B: write survivors/cycles at their final positions --------
+    @pl.when(p == 1)
+    def _phase_b():
+        okv = meta_ref[0] == 1
+        erow = _excl_over_rows(ecnt)                # row base within tile
+        crow = _excl_over_rows(ccnt)
+        erank = jnp.cumsum(eflag, axis=1) - eflag   # slot rank within row
+        crank = jnp.cumsum(cflag, axis=1) - cflag
+        edest = base_ref[i, 0] + erow[:, None] + erank
+        cdest = bcount + base_ref[i, 1] + crow[:, None] + crank
+
+        new_path = path[:, None, :] | _onehot_words(ext_v, nw)
+        flat = tp * delta
+        epath = new_path.reshape(flat, nw)
+        eflag_f = eflag.reshape(flat)
+        edest_f = edest.reshape(flat)
+        ev_f = jnp.clip(ext_v, 0, None).reshape(flat)
+        nb_r = nb
+        v1_r, l2_r = v1, l2
+
+        def put_ext(s, carry):
+            @pl.when(okv & (eflag_f[s] != 0))
+            def _():
+                d = edest_f[s]
+                r = s // delta
+                opath_ref[0, pl.ds(d, 1), :] = \
+                    jax.lax.dynamic_slice_in_dim(epath, s, 1, axis=0)
+                oblocked_ref[0, pl.ds(d, 1), :] = \
+                    jax.lax.dynamic_slice_in_dim(nb_r, r, 1, axis=0)
+                ov1_ref[0, pl.ds(d, 1), :] = v1_r[r].reshape(1, 1)
+                ol2_ref[0, pl.ds(d, 1), :] = l2_r[r].reshape(1, 1)
+                ovlast_ref[0, pl.ds(d, 1), :] = ev_f[s].reshape(1, 1)
+            return carry
+        jax.lax.fori_loop(0, flat, put_ext, 0)
+
+        if store:
+            cyc_rows = path[:, None, :] | _onehot_words(close_v, nw)
+            cpath = cyc_rows.reshape(flat, nw)
+            cflag_f = cflag.reshape(flat)
+            cdest_f = cdest.reshape(flat)
+
+            def put_cyc(s, carry):
+                @pl.when(okv & (cflag_f[s] != 0))
+                def _():
+                    omasks_ref[0, pl.ds(cdest_f[s], 1), :] = \
+                        jax.lax.dynamic_slice_in_dim(cpath, s, 1, axis=0)
+                return carry
+            jax.lax.fori_loop(0, flat, put_cyc, 0)
+
+        # guard tripped: the round is NOT applied — copy the input tile
+        # through so f' == f (the ring already carries its input content)
+        @pl.when(~okv)
+        def _keep():
+            tile = pl.ds(row0, tp)
+            opath_ref[0, tile, :] = path
+            oblocked_ref[0, tile, :] = blocked
+            ov1_ref[0, tile, :] = v1_ref[0]
+            ol2_ref[0, tile, :] = l2_ref[0]
+            ovlast_ref[0, tile, :] = vlast_ref[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("formulation", "delta", "store", "tile", "interpret"))
+def fused_round_lanes(path, blocked, v1, l2, vlast, fcount, bmasks, bcount,
+                      graph_tables, *, formulation: str, delta: int,
+                      store: bool, tile: int = 128, interpret: bool = True):
+    """Lane-gridded fused round: ONE ``pallas_call`` advances every lane of
+    a batch through one guarded expansion round.
+
+    ``graph_tables`` is ``(adj_bits, labelgt_bits)`` for the bitword
+    formulation and ``(offsets, neighbors, labels, adj_bits)`` for slot
+    (each with the leading lane axis). Returns
+    (path', blocked', v1', l2', vlast', masks', n_cyc (B,), n_new (B,)) —
+    the un-applied (guard-tripped) lanes pass their inputs through.
+    """
+    B, cap, nw = path.shape
+    tp = min(tile, max(8, cap))
+    pad = (-cap) % tp
+    padded = lambda a: jnp.pad(
+        a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    col = lambda a: padded(a[..., None])
+    capp = cap + pad
+    nt = capp // tp
+    cyc_cap = bmasks.shape[1]
+    rps = -(-cyc_cap // nt)             # ring rows copied per phase-A step
+    lane_whole3 = lambda a: pl.BlockSpec(
+        (1,) + a.shape[1:], lambda b, p, i: (b,) + (0,) * (a.ndim - 1))
+    tile_spec = lambda w: pl.BlockSpec((1, tp, w), lambda b, p, i: (b, i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda b, p, i: (b, 0))
+
+    if formulation == "bitword":
+        adj_bits, labelgt_bits = graph_tables
+        gtabs = (adj_bits, labelgt_bits)
+    else:
+        offsets, neighbors, labels, adj_bits = graph_tables
+        nbr = neighbors[..., None]
+        if nbr.shape[1] % 8:
+            nbr = jnp.pad(nbr, ((0, 0), (0, (-nbr.shape[1]) % 8), (0, 0)))
+        gtabs = (offsets[..., None], nbr, labels[..., None], adj_bits)
+
+    in_specs = ([tile_spec(nw), tile_spec(nw), tile_spec(1), tile_spec(1),
+                 tile_spec(1), scalar_spec, scalar_spec]
+                + [lane_whole3(t) for t in gtabs])
+    operands = [padded(path), padded(blocked), col(v1), col(l2), col(vlast),
+                fcount[:, None].astype(jnp.int32),
+                bcount[:, None].astype(jnp.int32)] + list(gtabs)
+    if store:
+        in_specs.append(lane_whole3(bmasks))
+        operands.append(bmasks)
+
+    out_shape = [jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32),
+                 jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32),
+                 jax.ShapeDtypeStruct((B, capp, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, capp, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, capp, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, 1), jnp.int32)]
+    out_specs = [lane_whole3(jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, 1), jnp.int32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, 1), jnp.int32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, 1), jnp.int32)),
+                 scalar_spec, scalar_spec]
+    if store:
+        out_shape.append(
+            jax.ShapeDtypeStruct((B, cyc_cap, nw), jnp.uint32))
+        out_specs.append(
+            lane_whole3(jax.ShapeDtypeStruct((B, cyc_cap, nw), jnp.uint32)))
+
+    kernel = functools.partial(
+        _fused_kernel, formulation=formulation, cap=cap, tp=tp, nt=nt,
+        delta=delta, nw=nw, store=store, cyc_cap=cyc_cap, rps=rps)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, 2, nt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.SMEM((nt, 2), jnp.int32),
+                        pltpu.SMEM((nt, 2), jnp.int32),
+                        pltpu.SMEM((2,), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+
+    opath, oblocked, ov1, ol2, ovlast, ncyc, nnew = out[:7]
+    omasks = out[7] if store else bmasks
+    return (opath[:, :cap], oblocked[:, :cap], ov1[:, :cap, 0],
+            ol2[:, :cap, 0], ovlast[:, :cap, 0], omasks,
+            ncyc[:, 0], nnew[:, 0])
+
+
+def fused_round_pallas(path, blocked, v1, l2, vlast, fcount, bmasks, bcount,
+                       graph_tables, *, formulation: str, delta: int,
+                       store: bool, tile: int = 128, interpret: bool = True):
+    """Single-graph entry point — the B=1 lane of ``fused_round_lanes``."""
+    out = fused_round_lanes(
+        path[None], blocked[None], v1[None], l2[None], vlast[None],
+        fcount[None], bmasks[None], bcount[None],
+        tuple(t[None] for t in graph_tables),
+        formulation=formulation, delta=delta, store=store, tile=tile,
+        interpret=interpret)
+    return tuple(x[0] for x in out)

@@ -20,13 +20,21 @@ import jax
 import jax.numpy as jnp
 
 from ..core.bitset_graph import BitsetGraph
-from ..core.frontier import Frontier
+from ..core.frontier import CycleBuffer, Frontier
 from .frontier_expand import frontier_expand_lanes, frontier_expand_pallas
 from .triplet_init import triplet_init_lanes, triplet_init_pallas
 from .bitword_expand import bitword_expand_lanes, bitword_expand_pallas
+from .fused_round import fused_round_lanes, fused_round_pallas
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or \
     jax.default_backend() != "tpu"
+
+# Trace-time observability for the fused round (DESIGN.md §6.8): each entry
+# counts how many times a fused-round pallas_call was TRACED into a program
+# (kernel builds, not executions — execution count is rounds × 1 by
+# construction since the round body contains exactly one pallas_call; tests
+# assert that on the jaxpr). Keyed 'single' / 'lanes'.
+FUSED_KERNEL_BUILDS = {"single": 0, "lanes": 0}
 
 
 def _broadcast_unbatched(tree, tree_batched, axis_size):
@@ -143,3 +151,76 @@ def bitword_flags_count(g: BitsetGraph, f: Frontier):
     .sum() reductions fuse into the same dispatch (legacy host engine)."""
     _, ext, n_cyc, n_new = bitword_fused_counts(g, f)
     return ext, n_cyc, n_new
+
+
+# ---------------------------------------------------------------------------
+# Fused round (DESIGN.md §6.8) — the WHOLE guarded expansion round as one
+# pallas dispatch: flags, chord test, popcounts, cycle append into the ring,
+# two-phase-scatter frontier compaction, overflow guard.
+# ---------------------------------------------------------------------------
+
+def _fused_tables(g: BitsetGraph, formulation: str):
+    if formulation == "bitword":
+        return (g.adj_bits, g.labelgt_bits)
+    return (g.offsets, g.neighbors, g.labels, g.adj_bits)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_round_op(formulation: str, delta: int, store: bool):
+    @jax.custom_batching.custom_vmap
+    def fused(g: BitsetGraph, f: Frontier, buf: CycleBuffer):
+        FUSED_KERNEL_BUILDS["single"] += 1
+        return fused_round_pallas(
+            f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+            buf.masks, buf.count, _fused_tables(g, formulation),
+            formulation=formulation, delta=delta, store=store,
+            interpret=INTERPRET)
+
+    @fused.def_vmap
+    def _rule(axis_size, in_batched, g, f, buf):
+        FUSED_KERNEL_BUILDS["lanes"] += 1
+        g = _broadcast_unbatched(g, in_batched[0], axis_size)
+        f = _broadcast_unbatched(f, in_batched[1], axis_size)
+        buf = _broadcast_unbatched(buf, in_batched[2], axis_size)
+        out = fused_round_lanes(
+            f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+            buf.masks, buf.count, _fused_tables(g, formulation),
+            formulation=formulation, delta=delta, store=store,
+            interpret=INTERPRET)
+        return out, (True,) * len(out)
+
+    return fused
+
+
+def fused_round(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
+                formulation: str, delta: int, store: bool):
+    """Drop-in for the whole body of ``core.expand.expand_count_compact``
+    as ONE kernel dispatch. The overflow guard is evaluated INSIDE the
+    kernel (guard-tripped lanes copy their inputs through), so no
+    ``lax.cond`` branches over the round; only the scalar count/ok
+    bookkeeping rides outside. Batch-transparent via ``custom_vmap``.
+
+    Returns (f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles) — the exact
+    ``expand_count_compact`` contract.
+    """
+    out = _fused_round_op(formulation, int(delta), bool(store))(g, f, buf)
+    path, blocked, v1, l2, vlast, masks, n_cyc, n_new = out
+    cap = f.capacity
+    ok_frontier = n_new <= cap
+    if store:
+        ok_cycles = (buf.count + n_cyc) <= buf.capacity
+    else:
+        ok_cycles = jnp.bool_(True)
+    ok = ok_frontier & ok_cycles
+    f2 = Frontier(
+        path=path, blocked=blocked, v1=v1, l2=l2, vlast=vlast,
+        count=jnp.where(ok, jnp.minimum(n_new, cap),
+                        f.count).astype(jnp.int32))
+    if store:
+        buf2 = CycleBuffer(
+            masks=masks,
+            count=jnp.where(ok, buf.count + n_cyc,
+                            buf.count).astype(jnp.int32))
+    else:
+        buf2 = buf
+    return f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles

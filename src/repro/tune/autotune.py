@@ -32,9 +32,13 @@ import itertools
 from .cost_model import CostModel, DistProfile, WaveProfile
 from .store import TuneKey, TuneStore, _p2, shape_class
 
-# the shape-dependent, equivalence-preserving knobs the tuner may touch
+# the shape-dependent, equivalence-preserving knobs the tuner may touch.
+# fused_round is equivalence-preserving by construction (the one-pass round
+# is bit-identical to the split round, tested in tests/test_fused_round.py)
+# but not always faster: tiny buckets can favor the split path's simpler
+# programs, so it is a searched axis, not a constant.
 TUNED_KNOBS = ("superstep_rounds", "growth_bits", "grow_headroom",
-               "cycle_buffer_rows")
+               "cycle_buffer_rows", "fused_round")
 # the mesh-routed (sharded) knob set: round budget per superstep, frontier
 # rows per device, and the diffusion-balance cadence. local_capacity is
 # equivalence-preserving only while nothing overflows — the replay twin's
@@ -61,6 +65,7 @@ class TuneSpace:
     growth_bits: tuple = (1, 2)
     grow_headroom: tuple = (0, 1, 2)
     cycle_buffer_rows: tuple = (1024, 4096, 16384)
+    fused_round: tuple = (True, False)
     # sharded axes
     local_capacity: tuple = (1 << 12, 1 << 14, 1 << 16)
     balance_every: tuple = (1, 2, 4)
@@ -75,7 +80,8 @@ class TuneSpace:
         else:
             axes = dict(superstep_rounds=self.superstep_rounds,
                         growth_bits=self.growth_bits,
-                        grow_headroom=self.grow_headroom)
+                        grow_headroom=self.grow_headroom,
+                        fused_round=self.fused_round)
             if base_cfg.store:
                 axes["cycle_buffer_rows"] = self.cycle_buffer_rows
         base = {k: getattr(base_cfg, k) for k in axes}

@@ -200,6 +200,10 @@ def replay(profile: WaveProfile, cfg) -> ReplaySummary:
     limit = profile.limit
     t, c = profile.t_sizes, profile.c_counts
     nw = max(profile.nw, 1)
+    # one frontier pass per attempted round when the round is fused
+    # (DESIGN.md §6.8: flags + compaction share a single sweep); the split
+    # round reads the frontier once to flag and once more to scatter
+    passes = 1 if getattr(cfg, "fused_round", True) else 2
     cnt = profile.n0
     cap = cfg.bucket(max(cnt, 1))
     cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
@@ -229,8 +233,8 @@ def replay(profile: WaveProfile, cfg) -> ReplaySummary:
             n_new, n_cyc = t[it + r], c[it + r]
             ok_f = n_new <= cap
             ok_c = (fill + n_cyc <= cyc_cap) if cfg.store else True
-            row_work += cap * nw
-            waste += max(cap - max(cnt, 1), 0) * nw
+            row_work += passes * cap * nw
+            waste += passes * max(cap - max(cnt, 1), 0) * nw
             if not (ok_f and ok_c):
                 status = _DRAIN if ok_f else _GROW
                 pn, pc = n_new, n_cyc
@@ -318,6 +322,7 @@ def _replay_batch(profile: WaveProfile, cfg) -> ReplaySummary:
     B = profile.lanes
     t, c = profile.lane_t, profile.lane_c
     nw = max(profile.nw, 1)
+    passes = 1 if getattr(cfg, "fused_round", True) else 2
     limits = []
     for ln in profile.lane_n:
         lim = max(int(ln) - 3, 0)
@@ -383,14 +388,14 @@ def _replay_batch(profile: WaveProfile, cfg) -> ReplaySummary:
                     for i in range(B)]
         max_att = max(attempts, default=0)
         for j in range(max_att):
-            row_work += B * cap * nw
+            row_work += passes * B * cap * nw
             for i in range(B):
                 enter = enters[i] if j == 0 else (
                     t[i][its[i] - rs[i] + j - 1]
                     if its[i] - rs[i] + j - 1 < len(t[i]) and j <= attempts[i]
                     else 0)
                 live = enter if j < attempts[i] else 0
-                waste += max(cap - max(live, 1), 0) * nw
+                waste += passes * max(cap - max(live, 1), 0) * nw
 
         drain_lanes = [i for i in range(B) if statuses[i] == _DRAIN]
         grow_lanes = [i for i in range(B) if statuses[i] == _GROW]
@@ -530,6 +535,7 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
                       and every <= profile.base_balance_every)
                      or cap >= 2 * est_peak))
 
+    passes = 1 if getattr(cfg, "fused_round", True) else 2
     dispatches = syncs = 0
     row_work = waste = balance_rounds = 0
     by_cause: dict[str, int] = {}
@@ -544,8 +550,8 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
         while r < k and cnt > 0 and it + r < len(t):
             enter = cnt
             cnt = t[it + r]
-            row_work += cap * ndev * nw
-            waste += max(cap * ndev - max(enter, 1), 0) * nw
+            row_work += passes * cap * ndev * nw
+            waste += passes * max(cap * ndev - max(enter, 1), 0) * nw
             r += 1
             # global-round cadence, matching the driver's round_base + r
             if ndev > 1 and (it + r) % every == 0:

@@ -1,0 +1,317 @@
+"""Fused single-kernel round (DESIGN.md §6.8).
+
+The acceptance surface of the two-phase-scatter fusion:
+
+* the fused round — jnp gather AND the pallas kernel — is bit-identical to
+  the split round it replaces: every frontier leaf, the cycle-ring masks,
+  the raw n_cyc/n_new totals, and BOTH guard flags, round by round,
+  including guard-tripped (overflowing) rounds where the round must not be
+  applied;
+* the same identity holds through the batched lanes path (custom_vmap →
+  lane-gridded kernel) and end-to-end through ``CycleService`` across
+  slot/bitword × jnp/pallas, in ``cycle_masks`` and |T| histories;
+* mesh-routed enumeration with the fused local step matches the reference
+  count on 1/2/4-device meshes;
+* the traced fused-round program is ONE ``pallas_call`` with zero
+  scatter/cumsum/sort passes outside it (the split program demonstrably
+  leaks them) — asserted on the jaxpr, plus the trace-time build counters;
+* the replay twin charges a fused round exactly ONE frontier pass per
+  attempted round (the split round two), all other counters unchanged;
+* the tuner searches ``fused_round`` as a knob and legacy stored entries /
+  key strings without it still parse and apply.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CycleService, EngineConfig, build_graph,
+                        sequential_chordless_cycles)
+from repro.core import expand as E
+from repro.core.frontier import empty_cycle_buffer, stack_frontiers
+from repro.core.graphs import grid_graph, random_gnp
+from repro.core.plan import batch_graphs
+from repro.core.triplets import initial_frontier
+from repro.analysis.dispatch import (assert_fused_round_program,
+                                     compaction_prims_outside_kernel,
+                                     primitive_counts)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _graph(r=4, c=4):
+    n, edges = grid_graph(r, c)
+    return build_graph(n, edges)
+
+
+def _leaves(f):
+    return [("path", f.path), ("blocked", f.blocked), ("v1", f.v1),
+            ("l2", f.l2), ("vlast", f.vlast), ("count", f.count)]
+
+
+# ---------------------------------------------------------------------------
+# Round-level bit-identity: fused (gather + kernel) == split, per round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("store", [True, False])
+def test_fused_round_bit_identical(formulation, backend, store):
+    g = _graph()
+    delta = int(g.max_degree)
+    f0, _, _ = initial_frontier(g, bucket=lambda c: 64)
+    buf0 = empty_cycle_buffer(256, g.adj_bits.shape[1])
+    op_ref = E.expand_op(formulation, "jnp")
+    op_fus = E.expand_op(formulation, backend)
+    f, buf, fp, bp = f0, buf0, f0, buf0
+    for rnd in range(6):
+        f, buf, nc, nn, okf, okc = E.expand_count_compact(
+            g, f, buf, delta=delta, store=store, op=op_ref, fused=False)
+        fp, bp, ncp, nnp, okfp, okcp = E.expand_count_compact(
+            g, fp, bp, delta=delta, store=store, op=op_fus, fused=True)
+        assert int(nc) == int(ncp) and int(nn) == int(nnp), (rnd, nn, nnp)
+        assert bool(okf) == bool(okfp) and bool(okc) == bool(okcp), rnd
+        for name, leaf in _leaves(f):
+            got = dict(_leaves(fp))[name]
+            assert np.array_equal(np.asarray(leaf), np.asarray(got)), \
+                (rnd, name)
+        if store:
+            assert np.array_equal(np.asarray(buf.masks),
+                                  np.asarray(bp.masks)), rnd
+            assert int(buf.count) == int(bp.count)
+
+
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+def test_fused_round_guard_trip_not_applied(formulation):
+    """An overflowing round must leave the state untouched in BOTH paths —
+    the fused kernel evaluates the guard inside and copies the input
+    through (identity) instead of scattering a truncated frontier."""
+    g = _graph()
+    delta = int(g.max_degree)
+    f0, _, _ = initial_frontier(g, bucket=lambda c: 16)  # forces overflow
+    buf0 = empty_cycle_buffer(256, g.adj_bits.shape[1])
+    op_ref = E.expand_op(formulation, "jnp")
+    op_pal = E.expand_op(formulation, "pallas")
+    f, buf, fp, bp = f0, buf0, f0, buf0
+    tripped = False
+    for rnd in range(4):
+        f, buf, nc, nn, okf, _ = E.expand_count_compact(
+            g, f, buf, delta=delta, store=True, op=op_ref, fused=False)
+        fp, bp, _, _, okfp, _ = E.expand_count_compact(
+            g, fp, bp, delta=delta, store=True, op=op_pal, fused=True)
+        assert bool(okf) == bool(okfp), rnd
+        tripped = tripped or not bool(okf)
+        assert np.array_equal(np.asarray(f.path), np.asarray(fp.path)), rnd
+        assert int(f.count) == int(fp.count)
+        assert np.array_equal(np.asarray(buf.masks), np.asarray(bp.masks))
+    assert tripped  # the bucket was sized to overflow — prove it did
+
+
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+def test_fused_round_batched_lanes_bit_identical(formulation):
+    """vmapped fused round (custom_vmap → lane-gridded kernel) == vmapped
+    split round, per lane, on a mixed-size batch."""
+    specs = [grid_graph(3, 4), grid_graph(4, 4)]
+    gs = [build_graph(n, e) for n, e in specs]
+    gb = batch_graphs(gs)
+    delta = int(max(g.max_degree for g in gs))
+    fb = stack_frontiers([initial_frontier(g, bucket=lambda c: 64)[0]
+                          for g in gs])
+    bb = empty_cycle_buffer(256, gb.adj_bits.shape[2], batch=2)
+    op_ref = E.expand_op(formulation, "jnp")
+    op_pal = E.expand_op(formulation, "pallas")
+    step_ref = jax.vmap(lambda gg, ff, uu: E.expand_count_compact(
+        gg, ff, uu, delta=delta, store=True, op=op_ref, fused=False))
+    step_pal = jax.vmap(lambda gg, ff, uu: E.expand_count_compact(
+        gg, ff, uu, delta=delta, store=True, op=op_pal, fused=True))
+    f, buf, fp, bp = fb, bb, fb, bb
+    for rnd in range(5):
+        f, buf, nc, nn, *_ = step_ref(gb, f, buf)
+        fp, bp, ncp, nnp, *_ = step_pal(gb, fp, bp)
+        assert np.array_equal(np.asarray(nn), np.asarray(nnp)), rnd
+        assert np.array_equal(np.asarray(nc), np.asarray(ncp)), rnd
+        assert np.array_equal(np.asarray(f.path), np.asarray(fp.path)), rnd
+        assert np.array_equal(np.asarray(f.count), np.asarray(fp.count))
+        assert np.array_equal(np.asarray(buf.masks), np.asarray(bp.masks))
+    assert np.array_equal(np.asarray(buf.count), np.asarray(bp.count))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: CycleService fused == split in masks + histories
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_service_fused_matches_split_end_to_end(formulation, backend):
+    for n, edges in [grid_graph(4, 4), random_gnp(14, 0.35, 7)]:
+        g = build_graph(n, edges)
+        ref, _ = sequential_chordless_cycles(n, edges)
+        res = {}
+        for fused in (True, False):
+            svc = CycleService(EngineConfig(
+                store=True, formulation=formulation, backend=backend,
+                fused_round=fused))
+            res[fused] = svc.enumerate(g)
+        assert res[True].n_cycles == res[False].n_cycles == ref
+        assert res[True].history == res[False].history
+        assert np.array_equal(res[True].cycle_masks, res[False].cycle_masks)
+
+
+def test_service_fused_batched_matches_split():
+    specs = [grid_graph(3, 4), grid_graph(4, 5), random_gnp(12, 0.3, 3)]
+    gs = [build_graph(n, e) for n, e in specs]
+    out = {}
+    for fused in (True, False):
+        svc = CycleService(EngineConfig(store=True, formulation="bitword",
+                                        backend="pallas", fused_round=fused))
+        out[fused] = svc.enumerate_batch(gs)
+    for a, b, (n, edges) in zip(out[True], out[False], specs):
+        ref, _ = sequential_chordless_cycles(n, edges)
+        assert a.n_cycles == b.n_cycles == ref
+        assert a.history == b.history
+        assert np.array_equal(a.cycle_masks, b.cycle_masks)
+
+
+def test_mesh_fused_matches_reference_1_2_4_devices():
+    """Sharded local step with gather compaction == reference counts on
+    1/2/4-device meshes (subprocess: forces multiple host devices)."""
+    code = """
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.core import (CycleService, EngineConfig, build_graph,
+                        sequential_chordless_cycles)
+from repro.core.graphs import grid_graph, random_gnp
+
+for n, edges in [grid_graph(4, 6), random_gnp(24, 0.3, 5)]:
+    g = build_graph(n, edges)
+    ref, _ = sequential_chordless_cycles(n, edges)
+    for ndev in (1, 2, 4):
+        mesh = Mesh(np.array(jax.devices())[:ndev].reshape(ndev,), ('data',))
+        for fused in (True, False):
+            cfg = EngineConfig(store=False, mesh=mesh, local_capacity=1<<13,
+                               balance_block=64, fused_round=fused)
+            res = CycleService(cfg).enumerate(g)
+            assert res.n_cycles == ref, (ndev, fused, res.n_cycles, ref)
+            assert res.stats['dropped'] == 0 and res.stats['lost'] == 0
+print('OK')
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Dispatch contract: one pallas_call, zero compaction passes outside it
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+@pytest.mark.parametrize("store", [True, False])
+def test_fused_round_is_one_kernel_dispatch(formulation, store):
+    g = _graph()
+    delta = int(g.max_degree)
+    f, _, _ = initial_frontier(g, bucket=lambda c: 64)
+    buf = empty_cycle_buffer(256, g.adj_bits.shape[1])
+    op = E.expand_op(formulation, "pallas")
+
+    def fused_body(g, f, buf):
+        return E.expand_count_compact(g, f, buf, delta=delta, store=store,
+                                      op=op, fused=True)
+
+    counts = assert_fused_round_program(fused_body, g, f, buf)
+    assert counts.get("pallas_call", 0) == 1
+
+    # the contrast: the split round leaks compaction passes into XLA
+    def split_body(g, f, buf):
+        return E.expand_count_compact(g, f, buf, delta=delta, store=store,
+                                      op=op, fused=False)
+
+    leak = compaction_prims_outside_kernel(
+        primitive_counts(jax.make_jaxpr(split_body)(g, f, buf)))
+    assert leak, "split round should still issue compaction primitives"
+
+
+def test_fused_kernel_build_counters_increment():
+    from repro.kernels import ops as kops
+    g = _graph()
+    delta = int(g.max_degree)
+    f, _, _ = initial_frontier(g, bucket=lambda c: 64)
+    buf = empty_cycle_buffer(256, g.adj_bits.shape[1])
+    op = E.expand_op("bitword", "pallas")
+    before = dict(kops.FUSED_KERNEL_BUILDS)
+    jax.make_jaxpr(lambda g, f, buf: E.expand_count_compact(
+        g, f, buf, delta=delta, store=False, op=op, fused=True))(g, f, buf)
+    assert kops.FUSED_KERNEL_BUILDS["single"] > before["single"]
+
+
+# ---------------------------------------------------------------------------
+# Replay twin: fused charges ONE frontier pass per round, split two
+# ---------------------------------------------------------------------------
+
+def test_replay_fused_charges_one_pass_per_round():
+    from repro.tune import WaveProfile, replay
+    g = _graph(4, 5)
+    res = CycleService(EngineConfig(store=False)).enumerate(g)
+    prof = WaveProfile.from_history(res.history, n=g.n,
+                                    nw=g.adj_bits.shape[1])
+    fused = replay(prof, EngineConfig(store=False, fused_round=True))
+    split = replay(prof, EngineConfig(store=False, fused_round=False))
+    # exactly 2x the row traffic, nothing else moves
+    assert split.row_work == 2 * fused.row_work > 0
+    assert split.padded_waste == 2 * fused.padded_waste
+    assert split.n_dispatches == fused.n_dispatches
+    assert split.n_host_syncs == fused.n_host_syncs
+    assert split.n_programs == fused.n_programs
+
+
+def test_replay_batch_fused_charges_one_pass_per_round():
+    from repro.tune import WaveProfile, replay
+    specs = [grid_graph(3, 4), grid_graph(4, 4)]
+    gs = [build_graph(n, e) for n, e in specs]
+    svc = CycleService(EngineConfig(store=False, backend="pallas"))
+    batch = svc.enumerate_batch(gs)
+    nmax = max(g.n for g in gs)
+    prof = WaveProfile.from_batch(
+        [r.history for r in batch], lane_n=tuple(g.n for g in gs),
+        n=nmax, nw=max(g.adj_bits.shape[1] for g in gs))
+    fused = replay(prof, EngineConfig(store=False, fused_round=True))
+    split = replay(prof, EngineConfig(store=False, fused_round=False))
+    assert split.row_work == 2 * fused.row_work > 0
+    assert split.n_dispatches == fused.n_dispatches
+
+
+# ---------------------------------------------------------------------------
+# Tuner surface: fused_round is a searched knob; legacy entries still work
+# ---------------------------------------------------------------------------
+
+def test_tuner_searches_fused_round_axis():
+    from repro.tune import TUNED_KNOBS
+    from repro.tune.autotune import TuneSpace
+    assert "fused_round" in TUNED_KNOBS
+    space = TuneSpace()
+    assert set(space.fused_round) == {True, False}
+    sets = space.knob_sets(EngineConfig())
+    assert any(k.get("fused_round") is False for k in sets)
+    assert any(k.get("fused_round") is True for k in sets)
+
+
+def test_legacy_tune_entries_parse_and_apply():
+    """Pre-fusion stored entries carry neither a fused_round knob nor any
+    new key token: the key string round-trips and applying the legacy knob
+    dict preserves the base config's fused_round."""
+    from repro.tune import AutoTuner, TuneKey
+    legacy = "n32-m64-d8|count|bitword|pallas|wave|cpu"
+    key = TuneKey.from_str(legacy)
+    assert key.as_str() == legacy
+    cfg = EngineConfig(fused_round=True)
+    tuned = AutoTuner.apply({"superstep_rounds": 8}, cfg)
+    assert tuned.fused_round is True and tuned.superstep_rounds == 8
+    tuned2 = AutoTuner.apply({"fused_round": False}, cfg)
+    assert tuned2.fused_round is False
