@@ -16,7 +16,9 @@ Sections:
 → results/BENCH_service_smoke.json), the tuned-vs-default autotuner A/B
 (→ results/BENCH_tune_smoke.json), the fused-round contract — one pallas
 dispatch per round on the traced jaxpr plus the fused-vs-split A/B
-(→ results/BENCH_fused_smoke.json) — plus the engine A/B JSON emission on
+(→ results/BENCH_fused_smoke.json) — the sustained-traffic serving A/B
+(lane recycling vs wave-at-a-time, >=1.5x ms/graph asserted,
+→ results/BENCH_serve_smoke.json) — plus the engine A/B JSON emission on
 the two smallest graphs, asserting the wave engine's warm us/round beats
 the host engine on every smoke graph class. ``--nightly`` runs the paper's footnote-scale
 Grid_7x10 + Grid_8x10 count-only targets via the wave engine, the
@@ -143,6 +145,16 @@ def check() -> int:
                 if b:
                     cmp(f"fused[{fresh['graph']}]", fresh["fused_ms"],
                         b["fused_ms"])
+        base = _load_baseline("BENCH_serve_smoke.json")
+        if base:
+            print("== check: sustained serving (ms/graph) ==")
+            from . import serve_bench
+            row = serve_bench.serve_smoke(
+                out_path=os.path.join(tmp, "serve.json"))
+            cmp("serve.baseline", row["baseline_ms_per_graph"],
+                base["baseline_ms_per_graph"])
+            cmp("serve.recycle", row["recycle_ms_per_graph"],
+                base["recycle_ms_per_graph"])
 
     if not checked:
         print("check: no committed baselines found — run --smoke first")
@@ -170,6 +182,9 @@ def main() -> None:
         engine_bench.tune_smoke()
         print("\n== fused round (one-dispatch contract + A/B) ==")
         engine_bench.fused_smoke()
+        print("\n== sustained serving (lane recycling vs wave-at-a-time) ==")
+        from . import serve_bench
+        serve_bench.serve_smoke()
         print("\n== engine A/B (smoke subset) ==")
         # separate file: must not clobber the tracked full-suite baseline
         engine_bench.main(["Grid_5x6", "K_8_8"],

@@ -21,6 +21,13 @@ same-shaped request a service ever sees. This module owns that amortization:
                    frontier and counter arguments donated, plus the same
                    ``n_traces`` retrace observer. ``PlanKey(kind='dist')``
                    keys them in the same cache the wave path warms.
+* ``RecyclePlan`` — the recyclable-batch drain/admit merge (DESIGN.md
+                   §6.9): one jitted masked-select that retires finished
+                   lanes and seats freshly seeded same-class requests into
+                   them IN PLACE (graph pytree, frontier, CycleBuffer all
+                   donated). Fixed shapes regardless of how many lanes a
+                   boundary touches — one compiled program per pool shape,
+                   so continuous admission never retraces.
 * ``ProgramCache`` — the per-service LRU of plans with hit/miss/eviction
                    counters (``CycleService.stats``); ``max_plans`` bounds
                    long-lived services. Distinct services deliberately
@@ -115,6 +122,81 @@ class WavePlan:
 
     def lower(self, g, f, buf, rounds_limit):
         return self.fn.lower(g, f, buf, rounds_limit)
+
+
+def merge_lanes(admit, clear, gbat, f, buf, g_new, f_new):
+    """Drain/admit merge of one recyclable batch (DESIGN.md §6.9).
+
+    ``admit``/``clear`` are (B,) bool lane masks: admitted lanes take their
+    freshly seeded graph + frontier (``g_new``/``f_new``, stage-1 output at
+    the pool's pinned capacity), cleared lanes (retired with no successor)
+    keep their old leaves but drop their live counts to 0 (stale rows
+    beyond the count are never read — the superstep masks by count), and
+    everything else passes through untouched. The CycleBuffer count resets
+    on BOTH masks: retirement flushed those rows host-side already.
+
+    Per-leaf masked ``where`` keeps every shape fixed no matter how many
+    lanes a boundary touches — the whole continuous run reuses ONE compiled
+    merge program per pool shape (the no-retrace half of the admission
+    protocol; the other half is the seed capacity pin in
+    ``triplets.initial_frontier_batched``).
+    """
+    from .frontier import CycleBuffer, Frontier
+
+    B = admit.shape[0]
+
+    def sel(new, old):
+        m = admit.reshape((B,) + (1,) * (old.ndim - 1))
+        return jnp.where(m, new, old)
+
+    g = jax.tree_util.tree_map(sel, g_new, gbat)
+    fr = Frontier(
+        path=sel(f_new.path, f.path), blocked=sel(f_new.blocked, f.blocked),
+        v1=sel(f_new.v1, f.v1), l2=sel(f_new.l2, f.l2),
+        vlast=sel(f_new.vlast, f.vlast),
+        count=jnp.where(admit, f_new.count,
+                        jnp.where(clear, 0, f.count)).astype(jnp.int32))
+    bb = CycleBuffer(
+        masks=buf.masks,
+        count=jnp.where(admit | clear, 0, buf.count).astype(jnp.int32))
+    return g, fr, bb
+
+
+class RecyclePlan:
+    """One compiled drain/admit merge (``PlanKey(kind='recycle')``).
+
+    Same observability contract as ``WavePlan`` — ``n_traces`` increments
+    only while jax traces, so a sustained-traffic run proves its zero-
+    retrace claim on ``ProgramCache.n_traces``. The running frontier and
+    CycleBuffer (the pool's two big allocations) and the seed frontier are
+    donated: the merge updates the pool in place instead of doubling them
+    at every admission boundary. The graph pytrees are NOT donated — the
+    scheduler memoizes padded/stacked graph batches across boundaries
+    (``ContinuousScheduler._stacked``), and a donated cache entry would be
+    invalidated on first use.
+    """
+
+    def __init__(self, key: PlanKey, *, donate: bool | None = None):
+        donate = key.donate if donate is None else donate
+        self.key = key
+        self.n_traces = 0
+        self.n_calls = 0
+        self.donated = donate
+
+        def _traced(admit, clear, gbat, f, buf, g_new, f_new):
+            # runs once per TRACE (not per call): the retrace observer
+            self.n_traces += 1
+            return merge_lanes(admit, clear, gbat, f, buf, g_new, f_new)
+
+        self.fn = jax.jit(_traced,
+                          donate_argnums=(3, 4, 6) if donate else ())
+
+    def __call__(self, admit, clear, gbat, f, buf, g_new, f_new):
+        self.n_calls += 1
+        return self.fn(admit, clear, gbat, f, buf, g_new, f_new)
+
+    def lower(self, *args):
+        return self.fn.lower(*args)
 
 
 class DistPlan:

@@ -44,7 +44,8 @@ from .engine import (STATUS_NAMES, EngineConfig, EnumerationResult, _DONE,
                      _DRAIN, _GROW, _RUN, _SHRINK, _enumerate_host)
 from .frontier import (empty_cycle_buffer, empty_frontier, with_capacity,
                        with_capacity_batched)
-from .plan import PlanKey, ProgramCache, WavePlan, batch_graphs, batch_shape
+from .plan import (PlanKey, ProgramCache, RecyclePlan, WavePlan,
+                   batch_graphs, batch_shape)
 from ..tune.telemetry import WaveTrace, disabled_trace
 
 
@@ -78,7 +79,9 @@ class CycleService:
         self.cfg = config if config is not None else EngineConfig()
         self._cache = ProgramCache(max_plans=max_plans)
         self._counters = dict(requests=0, graphs=0, batches=0, streams=0,
-                              traces_recorded=0, tuned_requests=0)
+                              sessions=0, traces_recorded=0,
+                              tuned_requests=0)
+        self.last_session = None
         self._trace_enabled = bool(trace)
         self.last_trace: WaveTrace | None = None
         self._tuner = tuner
@@ -171,6 +174,20 @@ class CycleService:
                       donate=cfg.donate, fused=cfg.fused_round,
                       extra=(g_n, g_m))
         return self._cache.get_or_build(key, lambda: WavePlan(key))
+
+    def _recycle_plan(self, g_n: int, g_m: int, cap: int, cyc_cap: int,
+                      nw: int, delta: int, cfg: EngineConfig,
+                      batch: int) -> RecyclePlan:
+        """The drain/admit merge program of one recyclable pool shape
+        (DESIGN.md §6.9) — cached alongside the wave plans, so
+        ``ProgramCache.n_traces`` observes its retraces too (the sustained-
+        traffic zero-retrace assertion covers admission)."""
+        key = PlanKey(kind="recycle", bucket=cap, nw=nw, cyc_rows=cyc_cap,
+                      delta=delta, store=cfg.store,
+                      formulation=cfg.formulation, backend=cfg.backend,
+                      k_max=0, batch=batch, donate=cfg.donate,
+                      fused=cfg.fused_round, extra=(g_n, g_m))
+        return self._cache.get_or_build(key, lambda: RecyclePlan(key))
 
     def plan(self, g: BitsetGraph, *, config: EngineConfig | None = None
              ) -> WavePlan:
@@ -591,6 +608,43 @@ class CycleService:
                                stats["n_host_syncs"]
                                / max(int(its[i]), 1)))))
         return results
+
+
+    # -- execute: continuous lane-recycling sessions (DESIGN.md §6.9) ------
+
+    def session(self, *, slots: int | None = None,
+                config: EngineConfig | None = None):
+        """A ``repro.sched.ContinuousScheduler`` bound to this service.
+
+        The scheduler treats the lanes of ONE batched wave program as a
+        recyclable resource: finished lanes retire (results flushed) at
+        superstep boundaries and queued same-shape-class requests are
+        re-seeded into the freed lanes through the cached seed + merge
+        programs — no retrace, no wave-at-a-time barrier. ``slots=None``
+        resolves the pool size per shape class through the tuner (stored
+        ``slots`` knob) with a fixed default fallback."""
+        from ..sched import ContinuousScheduler
+        self._counters["sessions"] += 1
+        sched = ContinuousScheduler(self, slots=slots, config=config)
+        self.last_session = sched
+        return sched
+
+    def serve_stream(self, graphs: Sequence[BitsetGraph], *,
+                     arrivals: Sequence[float] | None = None,
+                     slots: int | None = None,
+                     config: EngineConfig | None = None
+                     ) -> Iterator[tuple[int, EnumerationResult]]:
+        """Serve a request stream through a lane-recycling session.
+
+        Yields ``(request_index, EnumerationResult)`` in COMPLETION order
+        (short-lived graphs overtake long-lived ones — that is the point);
+        results are bit-identical per request to ``enumerate_batch``.
+        ``arrivals`` gives each request's arrival offset in seconds (open-
+        loop traffic; ``None`` = everything queued up-front). Per-request
+        latency and lane-occupancy stats land on ``self.last_session.stats``.
+        """
+        return self.session(slots=slots, config=config).run(
+            graphs, arrivals=arrivals)
 
 
 # ---------------------------------------------------------------------------

@@ -229,7 +229,9 @@ def initial_frontier_device(g: BitsetGraph, *,
 
 
 def initial_frontier_batched(gbat: BitsetGraph, *, delta: int, bucket,
-                             backend: str = "jnp"):
+                             backend: str = "jnp",
+                             capacity: int | None = None,
+                             tri_capacity: int | None = None):
     """Device-side stage 1 for a stacked graph batch: ONE flags+counts
     dispatch for every lane, then ONE seeding dispatch that cumsum-scatters
     all B frontiers (and triangle bitmaps) — no host nonzero, no per-lane
@@ -239,15 +241,26 @@ def initial_frontier_batched(gbat: BitsetGraph, *, delta: int, bucket,
     device array, n_tri (B,) np.int64, n_trip (B,) np.int64). The shared
     ``cap`` is the bucket of the largest lane (the batch runs at one
     shape); ``tcap`` is the bucket of the largest lane's triangle count.
+
+    ``capacity`` / ``tri_capacity`` floor the output shapes: the recycling
+    scheduler pins them to the running pool's bucket so a re-seed lands at
+    the EXACT shape the cached merge/superstep programs were traced at
+    (rows stay identical — a larger capacity only grows the zero padding;
+    cumsum order over the flat grid does not depend on it). A lane whose
+    need exceeds the floor still wins: the floor is a max, never a trim.
     """
     tri, trip, ntri_j, ntrip_j = _flags_counts_program(
         delta, backend, True)(gbat)
     n_tri, n_trip = (np.asarray(jax.device_get(x), np.int64)
                      for x in (ntri_j, ntrip_j))
     cap = bucket(max(int(n_trip.max()), 1))
+    if capacity is not None:
+        cap = max(cap, int(capacity))
     # bucketed like cap — an exact tcap would recompile the fused seed
     # program per distinct triangle count (lanes are sliced to n_tri[i])
     tcap = bucket(max(int(n_tri.max()), 1))
+    if tri_capacity is not None:
+        tcap = max(tcap, int(tri_capacity))
     fbat, tri_masks, _, _ = _seed_program(
         delta, cap, tcap, True)(gbat, tri, trip)
     return fbat, tri_masks, n_tri, n_trip

@@ -2,23 +2,27 @@
 shared CycleService.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 24 --slots 4
+    PYTHONPATH=src python -m repro.launch.serve --requests 24 --recycle
 
 Production structure on the paper's workload: a queue of enumeration
-requests (mixed-size graphs) feeds fixed-size batch slots. The scheduler
-COALESCES by shape class (DESIGN.md §6.7): each wave picks the oldest
-request's ``tune.shape_class`` and pulls up to ``slots`` same-class
-requests from anywhere in the queue into ONE batched device dispatch
-(``CycleService.enumerate_batch`` — batch-native on every backend now,
-pallas included, so there is no per-graph fallback to schedule around).
-Same-class coalescing keeps the padded batch shape tight (lane-padded
-waste is bounded by the class bucket) and maximizes program-cache reuse
-across waves. Finished requests free their slots for the next wave
-(continuous batching).
+requests (mixed-size graphs) feeds fixed-size batch slots. Two schedulers
+share this file:
 
-Scheduler stats exported at the end: waves, coalesced-lanes count (how
-many requests were served inside a multi-lane dispatch — the number the
-batch-native backend layer exists to maximize), shape classes seen, warm
-ms/graph, and program-cache hit rate.
+* the WAVE-AT-A-TIME path (``serve``): COALESCE by shape class
+  (DESIGN.md §6.7) — each wave picks the oldest request's
+  ``tune.shape_class`` and pulls up to ``slots`` same-class requests from
+  anywhere in the queue into ONE batched device dispatch
+  (``CycleService.enumerate_batch``). Every lane rides the dispatch until
+  the slowest lane exits; a finished lane's dead bucket is waste.
+* the LANE-RECYCLING path (``--recycle`` → ``CycleService.serve_stream``,
+  DESIGN.md §6.9): finished lanes retire at superstep boundaries and
+  queued same-class requests are re-seeded into the freed lanes without
+  retracing — the continuous-batching idiom proper.
+
+Both paths export the same serving metrics at the end: per-request
+queue-wait and end-to-end latency (p50/p99), mean lane occupancy (the
+utilization recycling exists to raise), warm ms/graph, and the program-
+cache hit rate.
 
 (The LM decode-loop demo this file used to host lives on in
 ``examples/serve_lm.py``.)
@@ -56,31 +60,67 @@ def _shape_class(g) -> str:
     return shape_class(g.n, g.m, max(g.max_degree, 1))
 
 
+def _pop_class_batch(queue, slots: int):
+    """Pop the next coalesced wave off ``queue`` IN PLACE.
+
+    Class-FIFO contract (pinned by ``tests/test_sched.py``): the wave's
+    class is the OLDEST request's; up to ``slots`` same-class requests are
+    taken in queue order from anywhere in the queue; remaining requests
+    keep their relative order. Returns (batch, original_indices, cls).
+    Indices are popped in descending order so earlier pops never shift the
+    positions of later ones.
+    """
+    cls = _shape_class(queue[0])
+    idx = [i for i, g in enumerate(queue)
+           if _shape_class(g) == cls][:slots]
+    batch = [queue[i] for i in idx]
+    for i in reversed(idx):
+        queue.pop(i)
+    return batch, idx, cls
+
+
+def _percentiles(xs_ms):
+    from ..sched.traffic import percentiles
+    return percentiles(xs_ms)
+
+
 def serve(service, queue, *, slots: int = 4, verbose: bool = True) -> dict:
     """Drain ``queue`` through ``service`` with shape-class coalescing.
 
     Each wave: take the oldest request's shape class, pull up to ``slots``
     same-class requests (queue order preserved within the class) into one
     batched dispatch; singletons fall through to ``enumerate``. Returns the
-    scheduler stats dict (waves, coalesced_lanes, per-class wave counts,
-    total cycles, per-request latencies).
+    scheduler stats dict: waves, coalesced_lanes, per-class wave counts,
+    total cycles, per-request wave latencies, plus the serving metrics the
+    recycling path reports too — per-request queue wait / end-to-end
+    latency (every request "arrives" when serve() starts, so queue wait is
+    time spent behind earlier waves) and ``mean_lane_occupancy`` (per wave:
+    lane-rounds lived / lane-rounds dispatched — the dead-lane drag of
+    wave-at-a-time scheduling shows up here as occupancy < 1).
     """
     queue = list(queue)
     stats = dict(requests=0, waves=0, coalesced_lanes=0, solo_requests=0,
                  n_cycles=0, classes={})
     latencies = []
+    queue_wait_ms: list[float] = []
+    e2e_ms: list[float] = []
+    occupancy_sum = 0.0
+    t_start = time.perf_counter()
     while queue:
-        cls = _shape_class(queue[0])
-        idx = [i for i, g in enumerate(queue)
-               if _shape_class(g) == cls][:slots]
-        batch = [queue[i] for i in idx]
-        for i in reversed(idx):
-            queue.pop(i)
+        batch, idx, cls = _pop_class_batch(queue, slots)
 
         t1 = time.perf_counter()
         results = (service.enumerate_batch(batch) if len(batch) > 1
                    else [service.enumerate(batch[0])])
-        dt = time.perf_counter() - t1
+        t2 = time.perf_counter()
+        dt = t2 - t1
+
+        queue_wait_ms += [round((t1 - t_start) * 1e3, 3)] * len(batch)
+        e2e_ms += [round((t2 - t_start) * 1e3, 3)] * len(batch)
+        # lane-rounds lived over lane-rounds dispatched: every lane rides
+        # until the slowest lane's wave dies
+        rounds = [r.iterations + 1 for r in results]
+        occupancy_sum += sum(rounds) / (len(batch) * max(rounds))
 
         latencies.append(dt / len(batch))
         stats["requests"] += len(batch)
@@ -96,6 +136,42 @@ def serve(service, queue, *, slots: int = 4, verbose: bool = True) -> dict:
             print(f"wave {stats['waves']}: [{cls}] {len(batch)} lane(s), "
                   f"{total} cycles, {dt * 1e3 / len(batch):.1f} ms/graph")
     stats["latencies_ms"] = [round(x * 1e3, 2) for x in latencies]
+    stats["queue_wait_ms"] = queue_wait_ms
+    stats["e2e_ms"] = e2e_ms
+    stats["mean_lane_occupancy"] = round(
+        occupancy_sum / max(stats["waves"], 1), 4)
+    for name, xs in (("queue_wait_ms", queue_wait_ms), ("e2e_ms", e2e_ms)):
+        stats.update({f"{name}_{k}": v
+                      for k, v in _percentiles(xs).items()})
+    return stats
+
+
+def serve_recycled(service, queue, *, slots=None, arrivals=None,
+                   verbose: bool = True) -> dict:
+    """Drain ``queue`` through the lane-recycling scheduler
+    (``CycleService.serve_stream``) and return the same serving-metrics
+    dict shape ``serve`` produces, from the session's own stats."""
+    n_done = 0
+    n_cycles = 0
+    for ridx, res in service.serve_stream(queue, slots=slots,
+                                          arrivals=arrivals):
+        n_done += 1
+        n_cycles += res.n_cycles
+        if verbose:
+            print(f"done {n_done}/{len(queue)}: request {ridx}, "
+                  f"{res.n_cycles} cycles, "
+                  f"{res.stats['rounds']} rounds")
+    sess = service.last_session
+    stats = dict(requests=sess.stats["requests"], n_cycles=n_cycles,
+                 waves=sess.stats["supersteps"],
+                 boundaries=sess.stats["boundaries"],
+                 admissions=sess.stats["admissions"],
+                 retirements=sess.stats["retirements"],
+                 pools=sess.stats["pools"],
+                 classes=dict(sess.stats["classes"]),
+                 queue_wait_ms=list(sess.stats["queue_wait_ms"]),
+                 e2e_ms=list(sess.stats["e2e_ms"]))
+    stats.update(sess.latency_summary())
     return stats
 
 
@@ -111,6 +187,10 @@ def main():
     ap.add_argument("--formulation", default="bitword",
                     choices=("slot", "bitword"))
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--recycle", action="store_true",
+                    help="serve through the continuous lane-recycling "
+                         "scheduler (repro.sched) instead of "
+                         "wave-at-a-time coalescing")
     args = ap.parse_args()
 
     from ..core import CycleService, EngineConfig
@@ -121,21 +201,40 @@ def main():
     queue = build_request_queue(args.requests, args.seed)
 
     t0 = time.perf_counter()
-    sched = serve(service, queue, slots=args.slots)
+    if args.recycle:
+        sched = serve_recycled(service, queue, slots=args.slots)
+    else:
+        sched = serve(service, queue, slots=args.slots)
     wall = time.perf_counter() - t0
 
     s = service.stats
     hit_rate = s["cache_hits"] / max(s["cache_hits"] + s["cache_misses"], 1)
-    lat = sched["latencies_ms"]
-    steady = f"{min(lat):.1f} ms/graph" if lat else "n/a"
     done = sched["requests"]
-    print(f"all {done} requests served in {wall:.2f}s "
-          f"({done / max(wall, 1e-9):.1f} graphs/s; steady-state {steady})")
-    print(f"scheduler: {sched['waves']} waves, "
-          f"{sched['coalesced_lanes']} coalesced lanes "
-          f"({sched['coalesced_lanes'] / max(done, 1):.0%} of requests), "
-          f"{sched['solo_requests']} solo, "
-          f"{len(sched['classes'])} shape classes")
+    if args.recycle:
+        print(f"all {done} requests served in {wall:.2f}s "
+              f"({done / max(wall, 1e-9):.1f} graphs/s)")
+        print(f"scheduler: {sched['waves']} supersteps, "
+              f"{sched['boundaries']} recycle boundaries, "
+              f"{sched['admissions']} admissions / "
+              f"{sched['retirements']} retirements over "
+              f"{sched['pools']} pool(s), "
+              f"{len(sched['classes'])} shape classes")
+    else:
+        lat = sched["latencies_ms"]
+        steady = f"{min(lat):.1f} ms/graph" if lat else "n/a"
+        print(f"all {done} requests served in {wall:.2f}s "
+              f"({done / max(wall, 1e-9):.1f} graphs/s; "
+              f"steady-state {steady})")
+        print(f"scheduler: {sched['waves']} waves, "
+              f"{sched['coalesced_lanes']} coalesced lanes "
+              f"({sched['coalesced_lanes'] / max(done, 1):.0%} of requests), "
+              f"{sched['solo_requests']} solo, "
+              f"{len(sched['classes'])} shape classes")
+    print(f"latency: queue-wait p50 {sched['queue_wait_ms_p50']:.1f} ms / "
+          f"p99 {sched['queue_wait_ms_p99']:.1f} ms, "
+          f"e2e p50 {sched['e2e_ms_p50']:.1f} ms / "
+          f"p99 {sched['e2e_ms_p99']:.1f} ms, "
+          f"mean lane occupancy {sched['mean_lane_occupancy']:.2f}")
     print(f"service: {s['programs']} compiled programs, "
           f"{s['cache_hits']} hits / {s['cache_misses']} misses "
           f"({hit_rate:.0%} hit rate), {s['n_traces']} traces")

@@ -1,0 +1,25 @@
+"""repro.sched — continuous lane-recycling scheduler (DESIGN.md §6.9).
+
+Makes the lanes of one batched wave program a RECYCLABLE resource:
+
+* ``LanePool``            — host-side lane-liveness ledger (free / occupied
+                            / finished across supersteps);
+* ``ContinuousScheduler`` — the drain/admit loop: retire finished lanes at
+                            superstep boundaries, re-seed queued same-class
+                            requests into the freed lanes without
+                            retracing (``core.plan.RecyclePlan`` +
+                            capacity-pinned batched stage 1);
+* ``traffic``             — open-loop arrival processes and the
+                            imbalanced-lifetime queues the sustained
+                            benchmark drives.
+
+Entry points: ``CycleService.session()`` / ``CycleService.serve_stream()``,
+or ``python -m repro.launch.serve --recycle``.
+"""
+from .lanepool import LanePool, LaneRequest
+from .scheduler import (DEFAULT_SLOTS, ContinuousScheduler, class_shape,
+                        graph_class)
+from . import traffic
+
+__all__ = ["LanePool", "LaneRequest", "ContinuousScheduler",
+           "DEFAULT_SLOTS", "class_shape", "graph_class", "traffic"]

@@ -1,0 +1,123 @@
+"""LanePool — host-side lane-liveness ledger for one recyclable batch.
+
+The continuous scheduler (DESIGN.md §6.9) treats the B lanes of a batched
+wave dispatch as a *pool of recyclable resources*: a lane is OCCUPIED while
+a request's wave is alive on it, FINISHED the moment its per-lane budget is
+exhausted or its frontier dies (retirement flushes its CycleBuffer rows and
+yields the result), and FREE until the admission step re-seeds it with the
+next queued same-class request. This module owns the host half of that
+state machine — per-lane request assignment, iteration/limit/count arrays,
+per-lane histories and drained mask chunks — so the scheduler proper only
+orchestrates device dispatches.
+
+The device half (stacked frontier / CycleBuffer / graph pytree) lives in
+``ContinuousScheduler``; the drain/admit boundary mutates it through the
+cached ``RecyclePlan`` merge program (core/plan.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LaneRequest:
+    """One admitted enumeration request riding a lane."""
+    idx: int                  # position in the caller's request sequence
+    graph: object             # the ORIGINAL (unpadded) BitsetGraph
+    cls: str                  # tune.shape_class string
+    t_arrival: float = 0.0    # seconds on the scheduler clock
+    t_admit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(self.t_admit - self.t_arrival, 0.0)
+
+    @property
+    def e2e_s(self) -> float:
+        return max(self.t_done - self.t_arrival, 0.0)
+
+
+class LanePool:
+    """Per-lane liveness across supersteps (the recyclable resource).
+
+    Lane states: ``req[i] is None`` — FREE (dead weight until admission:
+    the vmapped superstep masks it with a zero round budget);
+    ``req[i] is not None`` and not finished — OCCUPIED;
+    ``finished_lanes()`` — retirement candidates at the next boundary.
+    """
+
+    def __init__(self, slots: int):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.slots = int(slots)
+        self.req: list[LaneRequest | None] = [None] * self.slots
+        self.its = np.zeros(self.slots, np.int64)
+        self.limits = np.zeros(self.slots, np.int64)
+        self.cnts = np.zeros(self.slots, np.int64)
+        self.n_cycles = [0] * self.slots
+        self.n_triangles = [0] * self.slots
+        self.histories: list[list[dict]] = [[] for _ in range(self.slots)]
+        self.chunks: list[list[np.ndarray]] = [[] for _ in range(self.slots)]
+
+    # -- state queries ----------------------------------------------------
+
+    def occupied_lanes(self) -> list[int]:
+        return [i for i in range(self.slots) if self.req[i] is not None]
+
+    def free_lanes(self) -> list[int]:
+        return [i for i in range(self.slots) if self.req[i] is None]
+
+    def active_mask(self) -> np.ndarray:
+        """Lanes whose wave still advances: occupied, budget left, frontier
+        alive. Drives the per-lane round budget (0 for inactive lanes — the
+        device while-cond masks them, exactly like ``enumerate_batch``)."""
+        occ = np.array([r is not None for r in self.req])
+        return occ & (self.its < self.limits) & (self.cnts > 0)
+
+    def finished_lanes(self) -> list[int]:
+        """Occupied lanes whose wave ended (budget exhausted or frontier
+        dead) — the retirement set of the next drain boundary."""
+        return [i for i in self.occupied_lanes()
+                if self.its[i] >= self.limits[i] or self.cnts[i] <= 0]
+
+    def n_active(self) -> int:
+        return int(self.active_mask().sum())
+
+    # -- lifecycle --------------------------------------------------------
+
+    def admit(self, lane: int, req: LaneRequest, *, limit: int, n0: int,
+              n_tri: int, tri_chunk: np.ndarray | None) -> None:
+        """Seat ``req`` on a FREE lane with its stage-1 output: per-lane
+        round budget reset, history restarted at step 0, triangle bitmaps
+        opening the mask chunk list (store mode)."""
+        if self.req[lane] is not None:
+            raise RuntimeError(f"lane {lane} is occupied (request "
+                               f"{self.req[lane].idx})")
+        self.req[lane] = req
+        self.its[lane] = 0
+        self.limits[lane] = int(limit)
+        self.cnts[lane] = int(n0)
+        self.n_cycles[lane] = int(n_tri)
+        self.n_triangles[lane] = int(n_tri)
+        self.histories[lane] = [dict(step=0, T=int(n0), C=int(n_tri))]
+        self.chunks[lane] = [tri_chunk] if tri_chunk is not None else []
+
+    def retire(self, lane: int) -> tuple[LaneRequest, dict]:
+        """Free the lane; returns its request plus the accumulated per-lane
+        state (the scheduler renders the ``EnumerationResult`` from it)."""
+        req = self.req[lane]
+        if req is None:
+            raise RuntimeError(f"lane {lane} is already free")
+        state = dict(n_cycles=self.n_cycles[lane],
+                     n_triangles=self.n_triangles[lane],
+                     iterations=int(self.its[lane]),
+                     history=self.histories[lane],
+                     chunks=self.chunks[lane])
+        self.req[lane] = None
+        self.histories[lane] = []
+        self.chunks[lane] = []
+        self.cnts[lane] = 0
+        return req, state

@@ -27,8 +27,10 @@ _EXPORTS = {
     "replay": ".cost_model", "CostModel": ".cost_model",
     "DEFAULT_COEFFS": ".cost_model",
     "DistProfile": ".cost_model", "replay_dist": ".cost_model",
+    "replay_sched": ".cost_model",
     "AutoTuner": ".autotune", "TuneSpace": ".autotune",
     "TUNED_KNOBS": ".autotune", "DIST_TUNED_KNOBS": ".autotune",
+    "SCHED_TUNED_KNOBS": ".autotune",
     "TuneStore": ".store", "TuneKey": ".store", "shape_class": ".store",
     "SCHEMA_VERSION": ".store",
 }

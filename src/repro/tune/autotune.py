@@ -45,6 +45,12 @@ TUNED_KNOBS = ("superstep_rounds", "growth_bits", "grow_headroom",
 # feasibility guard scores risky candidates infinite, and the driver counts
 # any drop it could not prevent.
 DIST_TUNED_KNOBS = ("superstep_rounds", "local_capacity", "balance_every")
+# the continuous-scheduler knob set (DESIGN.md §6.9). NOT part of ``apply``'s
+# allow-list on purpose: "slots" is a scheduler-layer resource count, not an
+# EngineConfig field — a stored sched entry applied to an engine config must
+# drop it rather than raise, which ``apply``'s TUNED+DIST filter already
+# guarantees. Sched entries live under their own ``engine="sched"`` TuneKey.
+SCHED_TUNED_KNOBS = ("slots",)
 
 
 def _device_kind() -> str:
@@ -69,6 +75,9 @@ class TuneSpace:
     # sharded axes
     local_capacity: tuple = (1 << 12, 1 << 14, 1 << 16)
     balance_every: tuple = (1, 2, 4)
+    # continuous-scheduler axis: admission slot counts (pool lane widths)
+    # searched by ``AutoTuner.tune_slots`` via ``CostModel.score_sched``
+    admit_slots: tuple = (2, 4, 8)
 
     def knob_sets(self, base_cfg) -> list[dict]:
         """Every candidate as a knob dict; the base config's own knobs are
@@ -145,7 +154,26 @@ class AutoTuner:
                        device_kind=self.device_kind, ndev=ndev,
                        batch=_p2(batch) if batch else 0)
 
+    def key_for_sched(self, n: int, m: int, delta: int, cfg) -> TuneKey:
+        """Key for a CONTINUOUS-SCHEDULER entry ({'slots': N}) of one shape
+        class. ``engine='sched'`` separates it from the engine-knob entries
+        (same free-form engine string mechanism 'dist' uses), and batch
+        stays 0 — the slot count is the OUTPUT of this entry, not part of
+        its identity."""
+        return TuneKey(shape=shape_class(n, m, delta), store=cfg.store,
+                       formulation=cfg.formulation, backend=cfg.backend,
+                       engine="sched", device_kind=self.device_kind)
+
     # -- warm path -------------------------------------------------------
+
+    def slots_for(self, key: TuneKey, default: int | None = None):
+        """Stored admission slot count for a sched key, or ``default``."""
+        knobs = self.store.get(key)
+        if knobs is None:
+            self._counters["lookup_misses"] += 1
+            return default
+        self._counters["warm_hits"] += 1
+        return int(knobs.get("slots", default or 0)) or default
 
     def lookup(self, key: TuneKey, cfg):
         """Stored tuned config for ``key`` (no search, no trace), or None."""
@@ -217,6 +245,36 @@ class AutoTuner:
                              peak=profile.peak, n0=profile.n0),
                 model=self.model.to_json()))
         return self.apply(best, base_cfg)
+
+    def tune_slots(self, profile: WaveProfile, base_cfg, *,
+                   key: TuneKey | None = None, traces=()) -> int:
+        """Search ``TuneSpace.admit_slots`` for the slot count that serves
+        ``profile``'s lanes-as-a-queue cheapest (``CostModel.score_sched``
+        over the scheduler twin). Persists ``{'slots': N}`` under ``key``
+        (an ``engine='sched'`` key from ``key_for_sched``); returns N.
+        Needs a lane-aware profile — single-lane profiles have no queue to
+        model, so the default slot count is returned unsearched."""
+        if not profile.lane_t:
+            return int(self.space.admit_slots[0])
+        self._counters["searches"] += 1
+        if traces:
+            self.model.fit(traces)
+        scored = sorted(
+            ((self.model.score_sched(profile, base_cfg, s,
+                                     objective=self.objective), s)
+             for s in self.space.admit_slots),
+            key=lambda t: (t[0], t[1]))
+        self._counters["candidates_scored"] += len(scored)
+        best_ms, best = scored[0]
+        if key is not None:
+            self.store.put(key, {"slots": int(best)}, meta=dict(
+                source="model", score_ms=round(best_ms, 4),
+                objective=self.objective,
+                n_candidates=len(scored),
+                profile=dict(rounds=len(profile.t_sizes),
+                             peak=profile.peak, n0=profile.n0,
+                             lanes=profile.lanes)))
+        return int(best)
 
     def observe(self, key: TuneKey, base_cfg, history, *, n: int, nw: int,
                 traces=(), measure=None):

@@ -41,6 +41,7 @@ driver's counters (``tests/test_tune.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
@@ -182,7 +183,8 @@ class ReplaySummary:
     est_peak_device: int = 0  # the guard's per-device peak estimate
 
 
-def replay(profile: WaveProfile, cfg) -> ReplaySummary:
+def replay(profile: WaveProfile, cfg, *, recycle: bool = False
+           ) -> ReplaySummary:
     """Digital twin of ``core.service._wave_events`` for a candidate config.
 
     ``cfg`` is duck-typed: needs ``bucket()``, ``store``,
@@ -193,10 +195,14 @@ def replay(profile: WaveProfile, cfg) -> ReplaySummary:
     the next bucket, and the ring carrying its fill across dispatches.
 
     Lane-aware profiles (``WaveProfile.from_batch``) replay through the
-    batched driver's twin instead (``_replay_batch``).
+    batched driver's twin instead (``_replay_batch``). ``recycle=True``
+    models the lane-recycling pool of DESIGN.md §6.9: a finished (or
+    aborted) lane's dead bucket is NOT charged for the rounds after it
+    exits — the waste the continuous scheduler reclaims. Single-lane
+    profiles have no dead lanes, so the flag is a no-op there.
     """
     if profile.lanes > 1:
-        return _replay_batch(profile, cfg)
+        return _replay_batch(profile, cfg, recycle=recycle)
     limit = profile.limit
     t, c = profile.t_sizes, profile.c_counts
     nw = max(profile.nw, 1)
@@ -307,7 +313,8 @@ def _lane_superstep(t, c, it, cnt, fill, k, cap, cyc_cap, store,
     return r, status, cnt, fill, pn, pc
 
 
-def _replay_batch(profile: WaveProfile, cfg) -> ReplaySummary:
+def _replay_batch(profile: WaveProfile, cfg, *,
+                  recycle: bool = False) -> ReplaySummary:
     """Digital twin of ``core.service.enumerate_batch`` for a lane-aware
     profile: per-lane supersteps simulated under the SHARED bucket/ring,
     host transitions aggregated exactly like the batched driver.
@@ -318,6 +325,11 @@ def _replay_batch(profile: WaveProfile, cfg) -> ReplaySummary:
     bucket until the dispatch's slowest lane exits — raising
     ``superstep_rounds`` amortizes dispatches but amplifies exactly this
     imbalance waste, which is the trade the autotuner searches.
+
+    ``recycle=True`` stops charging a lane once its rounds in the dispatch
+    are spent (the recycling pool masks exited lanes instead of dragging
+    their buckets) — the row-work delta between the two flags is exactly
+    the recoverable dead-lane waste.
     """
     B = profile.lanes
     t, c = profile.lane_t, profile.lane_c
@@ -388,8 +400,10 @@ def _replay_batch(profile: WaveProfile, cfg) -> ReplaySummary:
                     for i in range(B)]
         max_att = max(attempts, default=0)
         for j in range(max_att):
-            row_work += passes * B * cap * nw
-            for i in range(B):
+            lanes_j = ([i for i in range(B) if j < attempts[i]]
+                       if recycle else list(range(B)))
+            row_work += passes * len(lanes_j) * cap * nw
+            for i in lanes_j:
                 enter = enters[i] if j == 0 else (
                     t[i][its[i] - rs[i] + j - 1]
                     if its[i] - rs[i] + j - 1 < len(t[i]) and j <= attempts[i]
@@ -431,6 +445,163 @@ def _replay_batch(profile: WaveProfile, cfg) -> ReplaySummary:
         n_dispatches=dispatches, n_host_syncs=syncs,
         n_bucket_transitions=transitions, n_drains=drains,
         rounds=max(its, default=0), row_work=row_work, padded_waste=waste,
+        n_programs=len(programs), peak_bucket=peak, by_cause=by_cause)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler twin (sched.ContinuousScheduler's drain/admit loop; §6.9)
+# ---------------------------------------------------------------------------
+
+def replay_sched(profile: WaveProfile, cfg, *, slots: int) -> ReplaySummary:
+    """Digital twin of ``sched.ContinuousScheduler`` for a candidate slot
+    count: the profile's lanes become a FIFO request QUEUE served by a
+    ``slots``-lane recycling pool.
+
+    This is the trade ``TuneSpace.admit_slots`` searches: more slots
+    amortize dispatch/sync overhead across more lanes per launch but widen
+    every row of device work (``slots × cap`` rows per round, minus the
+    lanes recycling masks off), while fewer slots serve the queue in more
+    pool generations, each paying its own seed dispatch. Admission charges
+    the driver's seed cost (2 launches + 1 sync, the 'seed'/'recycle'
+    boundary events); retirement flushes a storing lane's ring
+    (sync + drain). Rounds report the TOTAL rounds advanced across all
+    requests (the queue is many enumerations, not one).
+    """
+    if not profile.lane_t:
+        raise ValueError("replay_sched needs a lane-aware profile "
+                         "(WaveProfile.from_batch)")
+    R = profile.lanes
+    B = max(int(slots), 1)
+    nw = max(profile.nw, 1)
+    passes = 1 if getattr(cfg, "fused_round", True) else 2
+    t_all, c_all, n0_all = profile.lane_t, profile.lane_c, profile.lane_n0
+    limits_all = []
+    for ln in profile.lane_n:
+        lim = max(int(ln) - 3, 0)
+        if profile.max_iters is not None:
+            lim = min(lim, profile.max_iters)
+        limits_all.append(lim)
+    queue = collections.deque(range(R))
+    K = cfg.superstep_rounds
+    cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
+
+    dispatches = syncs = transitions = drains = 0
+    row_work = waste = total_rounds = 0
+    by_cause: dict[str, int] = {}
+    programs = set()
+    cap = peak = 0
+    lane_req: list[int | None] = [None] * B
+    its = [0] * B
+    cnts = [0] * B
+    fills = [0] * B
+
+    def _bound(ridx):
+        return min(limits_all[ridx], len(t_all[ridx]))
+
+    guard = 0
+    guard_bound = 16 * (sum(limits_all) + R + 16)
+    while queue or any(r is not None for r in lane_req):
+        guard += 1
+        if guard > guard_bound:       # truncated-profile backstop
+            break
+        # --- admit: re-deal queued requests into every free lane ---------
+        free = [i for i in range(B) if lane_req[i] is None]
+        admitted = False
+        while queue and free:
+            i = free.pop(0)
+            ridx = queue.popleft()
+            lane_req[i] = ridx
+            its[i] = 0
+            cnts[i] = n0_all[ridx]
+            fills[i] = 0
+            admitted = True
+        if admitted:
+            dispatches += 2           # batched stage 1 + merge/seed launch
+            syncs += 1                # ... and its counts readback
+            by_cause[_RUN] = by_cause.get(_RUN, 0) + 1
+            occ0 = [i for i in range(B) if lane_req[i] is not None]
+            new_cap = cfg.bucket(max(max(cnts[i] for i in occ0), 1))
+            if new_cap > cap:
+                if cap:
+                    transitions += 1  # pre-grow before the merge
+                cap = new_cap
+        occ = [i for i in range(B) if lane_req[i] is not None]
+        act = [i for i in occ
+               if its[i] < _bound(lane_req[i]) and cnts[i] > 0]
+        if act:
+            programs.add((cap, cyc_cap))
+            peak = max(peak, cap)
+            shrink_below = cap // 4 if cap > 16 else 0
+            rs, statuses, pns, pcs = {}, {}, {}, {}
+            enters = {i: cnts[i] for i in occ}
+            for i in occ:
+                ridx = lane_req[i]
+                k = min(K, limits_all[ridx] - its[i]) if i in act else 0
+                r, status, cnt, fill, pn, pc = _lane_superstep(
+                    t_all[ridx], c_all[ridx], its[i], cnts[i], fills[i], k,
+                    cap, cyc_cap, cfg.store, shrink_below)
+                rs[i], statuses[i], pns[i], pcs[i] = r, status, pn, pc
+                cnts[i], fills[i] = cnt, fill
+                its[i] += r
+                total_rounds += r
+            dispatches += 1
+            syncs += 1
+            agg = next(s for s in (_DRAIN, _GROW, _SHRINK, _RUN, _DONE)
+                       if s in statuses.values())
+            by_cause[agg] = by_cause.get(agg, 0) + 1
+            # device work: only OCCUPIED lanes that still have rounds left
+            # in this dispatch are charged — exited/free lanes are the
+            # recycling savings (cf. _replay_batch recycle=True)
+            attempts = {i: rs[i] + (1 if statuses[i] in (_GROW, _DRAIN)
+                                    else 0) for i in occ}
+            max_att = max(attempts.values(), default=0)
+            for j in range(max_att):
+                lanes_j = [i for i in occ if j < attempts[i]]
+                row_work += passes * len(lanes_j) * cap * nw
+                for i in lanes_j:
+                    ridx = lane_req[i]
+                    enter = enters[i] if j == 0 else (
+                        t_all[ridx][its[i] - rs[i] + j - 1]
+                        if its[i] - rs[i] + j - 1 < len(t_all[ridx]) else 0)
+                    waste += passes * max(cap - max(enter, 1), 0) * nw
+            drain_lanes = [i for i in occ if statuses[i] == _DRAIN]
+            grow_lanes = [i for i in occ if statuses[i] == _GROW]
+            if drain_lanes:
+                for i in occ:
+                    if fills[i]:
+                        drains += 1
+                        fills[i] = 0
+                syncs += 1
+                cyc_cap = max(cyc_cap,
+                              cfg.bucket(max(max(pcs[i]
+                                                 for i in drain_lanes), 1)))
+            if grow_lanes:
+                need = max(pns[i] for i in grow_lanes)
+                new_cap = cfg.bucket(cfg.bucket(max(need, 1))
+                                     << max(cfg.grow_headroom, 0))
+                if new_cap != cap:
+                    cap = new_cap
+                    transitions += 1
+            elif not drain_lanes and max((cnts[i] for i in occ),
+                                         default=0) > 0:
+                new_cap = cfg.bucket(max(max(cnts[i] for i in occ), 1))
+                if new_cap < cap:
+                    cap = new_cap
+                    transitions += 1
+        # --- retire: flush + free every finished lane ---------------------
+        for i in occ:
+            ridx = lane_req[i]
+            if its[i] >= _bound(ridx) or cnts[i] <= 0:
+                if cfg.store and fills[i]:
+                    drains += 1
+                    syncs += 1
+                    fills[i] = 0
+                lane_req[i] = None
+                cnts[i] = 0
+    return ReplaySummary(
+        n_dispatches=dispatches, n_host_syncs=syncs,
+        n_bucket_transitions=transitions, n_drains=drains,
+        rounds=total_rounds, row_work=row_work, padded_waste=waste,
         n_programs=len(programs), peak_bucket=peak, by_cause=by_cause)
 
 
@@ -674,6 +845,20 @@ class CostModel:
         rep = self._replay_for(profile, cfg)
         if not rep.feasible:
             return float("inf")
+        rows = rep.row_work / max(profile.nw, 1)  # back to row units
+        ms = (self.dispatch_ms * rep.n_dispatches
+              + self.ms_per_mrow * rows / 1e6
+              + self.sync_ms * rep.n_host_syncs)
+        if objective == "cold":
+            ms += self.compile_ms * rep.n_programs
+        return ms
+
+    def score_sched(self, profile, cfg, slots: int, *,
+                    objective: str = "warm") -> float:
+        """Predicted ms to serve the profile's lanes as a request queue
+        through a ``slots``-lane recycling pool (``replay_sched``) — the
+        scoring function behind ``TuneSpace.admit_slots``."""
+        rep = replay_sched(profile, cfg, slots=slots)
         rows = rep.row_work / max(profile.nw, 1)  # back to row units
         ms = (self.dispatch_ms * rep.n_dispatches
               + self.ms_per_mrow * rows / 1e6

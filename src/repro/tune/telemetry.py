@@ -48,7 +48,7 @@ class TraceEvent:
     cost model charges for.
     """
     kind: str                  # 'superstep' | 'round' | 'batch' | 'dist'
-    #                            | 'deal'
+    #                            | 'deal' | 'seed' | 'recycle'
     bucket: int                # frontier capacity (rows) during the dispatch
     cyc_cap: int               # CycleBuffer capacity (1 in count-only mode)
     budget: int                # round budget k granted to the dispatch
@@ -74,6 +74,15 @@ class TraceEvent:
     moved: int = 0             # rows shipped by diffusion balancing
     lost: int = 0              # receiver-side balance overflow (must be 0
     #                            under backpressure; defensive counter)
+    # --- lane-recycling dispatches ('recycle' + scheduler 'batch'/'seed'
+    # events) only — DESIGN.md §6.9 ------------------------------------
+    lanes: int = 0             # pool size B of the recyclable batch
+    live_lanes: int = 0        # occupied lanes at the dispatch (occupancy
+    #                            numerator: mean occupancy = Σ live/lanes)
+    retired: int = 0           # lanes freed at this boundary (results
+    #                            flushed to their callers)
+    admitted: int = 0          # queued requests re-dealt into freed lanes
+    #                            at this boundary (without retracing)
 
     @property
     def rounds_attempted(self) -> int:
@@ -153,7 +162,9 @@ class WaveTrace:
                  pending_new: int = 0, pending_cyc: int = 0,
                  cyc_fill: int = 0, t_ms: float = 0.0,
                  fresh: bool = False, launches: int = 1, ndev: int = 0,
-                 per_device=(), moved: int = 0, lost: int = 0) -> None:
+                 per_device=(), moved: int = 0, lost: int = 0,
+                 lanes: int = 0, live_lanes: int = 0, retired: int = 0,
+                 admitted: int = 0) -> None:
         self.n_dispatches += launches
         self.by_cause[status] = self.by_cause.get(status, 0) + 1
         if not self.enabled:
@@ -166,7 +177,9 @@ class WaveTrace:
             pending_new=int(pending_new), pending_cyc=int(pending_cyc),
             cyc_fill=int(cyc_fill), t_ms=float(t_ms), fresh=bool(fresh),
             ndev=int(ndev), per_device=tuple(int(x) for x in per_device),
-            moved=int(moved), lost=int(lost)))
+            moved=int(moved), lost=int(lost), lanes=int(lanes),
+            live_lanes=int(live_lanes), retired=int(retired),
+            admitted=int(admitted)))
 
     # -- summaries -------------------------------------------------------
 

@@ -1,0 +1,393 @@
+"""Continuous lane-recycling scheduler (repro.sched, DESIGN.md §6.9).
+
+Pins the subsystem's contracts:
+
+* LanePool — the host-side lane-liveness ledger's state machine;
+* class-FIFO queue order of the legacy coalescing pop loop (regression);
+* bit-identity — recycled serving returns the SAME per-request results
+  (counts, histories, stored cycle masks) as ``enumerate_batch``, across
+  mixed queues × formulation × backend × pool size;
+* the no-retrace admission contract (trace counters + recycle events);
+* serving metrics exported by BOTH schedulers (queue wait / e2e / lane
+  occupancy);
+* tuner surface — ``admit_slots`` axis, ``slots`` knob persistence,
+  lane-aware ``replay(recycle=True)``, the ``replay_sched`` twin, and
+  legacy TuneKey/knob-dict compatibility.
+"""
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CycleService, EngineConfig, build_graph
+from repro.core.graphs import grid_graph, random_gnp
+from repro.sched import LanePool, LaneRequest
+from repro.sched.traffic import (connectors_graph, imbalanced_queue,
+                                 poisson_arrivals)
+
+
+def _mixed_queue():
+    """Two shape classes interleaved: grids/connectors (one class) plus a
+    couple of tiny G(n,p) graphs (another class) — exercises pool close /
+    reopen and class switching, all graphs < 32 vertices."""
+    qs = imbalanced_queue(n_long=2, shorts_per_long=2)
+    qs.insert(1, build_graph(*random_gnp(8, 0.4, 7)))
+    qs.append(build_graph(*random_gnp(9, 0.35, 11)))
+    return qs
+
+
+# ---------------------------------------------------------------------------
+# LanePool: the lane-liveness state machine
+# ---------------------------------------------------------------------------
+
+def test_lanepool_lifecycle():
+    pool = LanePool(3)
+    assert pool.free_lanes() == [0, 1, 2]
+    assert pool.occupied_lanes() == [] and pool.n_active() == 0
+
+    g = build_graph(*grid_graph(3, 3))
+    r = LaneRequest(idx=0, graph=g, cls="c")
+    pool.admit(1, r, limit=6, n0=4, n_tri=0, tri_chunk=None)
+    assert pool.occupied_lanes() == [1]
+    assert pool.free_lanes() == [0, 2]
+    assert pool.active_mask().tolist() == [False, True, False]
+    assert pool.finished_lanes() == []
+    assert pool.histories[1] == [dict(step=0, T=4, C=0)]
+
+    # seating on an occupied lane is a scheduler bug, not a silent overwrite
+    with pytest.raises(RuntimeError, match="lane 1 is occupied"):
+        pool.admit(1, LaneRequest(idx=9, graph=g, cls="c"),
+                   limit=1, n0=1, n_tri=0, tri_chunk=None)
+
+    # budget exhausted -> finished; frontier death -> finished
+    pool.its[1] = 6
+    assert pool.finished_lanes() == [1] and pool.n_active() == 0
+    pool.its[1] = 2
+    pool.cnts[1] = 0
+    assert pool.finished_lanes() == [1]
+
+    req, state = pool.retire(1)
+    assert req is r
+    assert state["iterations"] == 2 and state["history"]
+    assert pool.free_lanes() == [0, 1, 2]
+    with pytest.raises(RuntimeError, match="already free"):
+        pool.retire(1)
+
+    with pytest.raises(ValueError, match="slots"):
+        LanePool(0)
+
+
+# ---------------------------------------------------------------------------
+# Legacy coalescing pop loop: class-FIFO queue order (regression)
+# ---------------------------------------------------------------------------
+
+def test_pop_class_batch_queue_order():
+    """The wave's class is the OLDEST request's; same-class requests are
+    taken in queue order from anywhere in the queue; the remainder keeps
+    its relative order. Pinned because both the serving benchmark and the
+    recycling A/B rely on the two schedulers draining the same queue in
+    the same per-class order."""
+    from repro.launch.serve import _pop_class_batch
+
+    a = build_graph(*grid_graph(4, 4))        # class A (n16-m32-d4)
+    b = build_graph(*random_gnp(8, 0.4, 3))   # class B (n8-...)
+    c = build_graph(*connectors_graph())      # class A partner
+    queue = [a, b, c, a, b, c, a]
+
+    batch, idx, cls = _pop_class_batch(queue, slots=3)
+    assert idx == [0, 2, 3]                   # queue order, skipping class B
+    assert [g is x for g, x in zip(batch, (a, c, a))] == [True] * 3
+    assert [g is x for g, x in zip(queue, (b, b, c, a))] == [True] * 4
+
+    batch2, idx2, cls2 = _pop_class_batch(queue, slots=3)
+    assert cls2 != cls
+    assert idx2 == [0, 1]                     # both Bs, FIFO
+    assert [g is x for g, x in zip(queue, (c, a))] == [True, True]
+
+    # slots=1 degenerates to strict FIFO
+    batch3, idx3, _ = _pop_class_batch(queue, slots=1)
+    assert idx3 == [0] and batch3[0] is c
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: recycled serving == enumerate_batch, per request
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("formulation", ["slot", "bitword"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_recycled_results_bit_identical(formulation, backend):
+    cfg = EngineConfig(store=True, formulation=formulation, backend=backend,
+                       superstep_rounds=3)
+    svc = CycleService(cfg, auto_tune=False)
+    queue = _mixed_queue()
+    ref = [svc.enumerate(g) for g in queue]
+    got = dict(svc.serve_stream(queue, slots=2))
+    assert sorted(got) == list(range(len(queue)))
+    for i, r in enumerate(ref):
+        assert got[i].n_cycles == r.n_cycles, i
+        assert got[i].n_triangles == r.n_triangles, i
+        assert got[i].history == r.history, i
+        a, b = np.asarray(got[i].cycle_masks), np.asarray(r.cycle_masks)
+        assert a.shape == b.shape and (a == b).all(), (
+            f"request {i}: recycled cycle_masks differ")
+        assert got[i].stats["recycled"] is True
+
+
+@settings(max_examples=8, deadline=None)
+@given(slots=st.integers(2, 4), seed=st.integers(0, 40),
+       shorts=st.integers(1, 3))
+def test_recycled_counts_property(slots, seed, shorts):
+    """Count-only property sweep: arbitrary small mixed queues drain to the
+    same per-request counts/histories as per-graph enumeration, at any
+    pool size."""
+    cfg = EngineConfig(store=False, superstep_rounds=4)
+    svc = CycleService(cfg, auto_tune=False)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=shorts)
+    queue.append(build_graph(*random_gnp(10, 0.3, seed)))
+    ref = [svc.enumerate(g) for g in queue]
+    got = dict(svc.serve_stream(queue, slots=slots))
+    for i, r in enumerate(ref):
+        assert got[i].n_cycles == r.n_cycles, i
+        assert got[i].history == r.history, i
+
+
+def test_open_loop_arrivals_complete():
+    """Timed arrivals (open loop) still complete every request exactly
+    once, and the session's latency stats cover every request."""
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=4),
+                       auto_tune=False)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=1)
+    arrivals = poisson_arrivals(len(queue), qps=500.0, seed=1)
+    got = dict(svc.serve_stream(queue, arrivals=arrivals))
+    assert sorted(got) == list(range(len(queue)))
+    sess = svc.last_session
+    assert len(sess.stats["queue_wait_ms"]) == len(queue)
+    assert len(sess.stats["e2e_ms"]) == len(queue)
+    summ = sess.latency_summary()
+    for k in ("queue_wait_ms_p50", "queue_wait_ms_p99",
+              "e2e_ms_p50", "e2e_ms_p99", "mean_lane_occupancy"):
+        assert k in summ
+
+
+# ---------------------------------------------------------------------------
+# The no-retrace admission contract + recycle trace events
+# ---------------------------------------------------------------------------
+
+def test_sustained_serving_never_retraces_warm():
+    """After the first visit of a shape class, further serving — including
+    admissions into freed lanes mid-run and whole repeat runs — compiles
+    NOTHING: n_traces stays flat."""
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=3),
+                       auto_tune=False)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=3)
+    list(svc.serve_stream(queue, slots=2))
+    warm = svc.stats["n_traces"]
+    assert warm > 0
+    for _ in range(2):
+        got = dict(svc.serve_stream(queue, slots=2))
+        assert len(got) == len(queue)
+    assert svc.stats["n_traces"] == warm, (
+        f"sustained serving retraced: {warm} -> {svc.stats['n_traces']}")
+
+
+def test_recycle_trace_events_record_lane_occupancy():
+    """A traced run emits 'seed' and 'recycle' events carrying the
+    lane-occupancy fields (lanes / live_lanes / retired / admitted),
+    and admissions strictly outnumber pool openings (lanes were reused)."""
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=3),
+                       trace=True)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=3)
+    list(svc.serve_stream(queue, slots=2))
+    tr = svc.last_trace
+    assert tr is not None and tr.events
+    by_kind = {}
+    for ev in tr.events:
+        by_kind.setdefault(ev.kind, []).append(ev)
+    assert "seed" in by_kind, sorted(by_kind)
+    seeds = by_kind["seed"]
+    assert all(ev.lanes == 2 for ev in seeds)
+    assert all(1 <= ev.live_lanes <= ev.lanes for ev in seeds)
+    # 8 same-class requests through a 2-lane pool: re-seeds beyond the
+    # opening one prove recycling happened
+    assert sum(ev.admitted for ev in seeds) > 2
+    assert "recycle" in by_kind, sorted(by_kind)
+    recs = by_kind["recycle"]
+    assert all(ev.lanes == 2 for ev in recs)
+    assert sum(ev.retired for ev in recs) > 0
+    sess = svc.last_session
+    assert sess.stats["admissions"] == len(queue)
+    assert sess.stats["retirements"] == len(queue)
+    assert sess.stats["boundaries"] > 0
+    assert 0.0 < sess.mean_occupancy <= 1.0
+
+
+def test_mixed_class_queue_opens_one_pool_per_class():
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=3),
+                       auto_tune=False)
+    queue = _mixed_queue()
+    got = dict(svc.serve_stream(queue, slots=2))
+    assert len(got) == len(queue)
+    sess = svc.last_session
+    assert sess.stats["pools"] >= 2
+    assert len(sess.stats["classes"]) >= 2
+
+
+# ---------------------------------------------------------------------------
+# Serving metrics exported by the legacy wave-at-a-time path
+# ---------------------------------------------------------------------------
+
+def test_serve_exports_latency_and_occupancy():
+    from repro.launch.serve import serve
+
+    svc = CycleService(EngineConfig(store=False), auto_tune=False)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=2)
+    stats = serve(svc, queue, slots=4, verbose=False)
+    assert stats["requests"] == len(queue)
+    assert len(stats["queue_wait_ms"]) == len(queue)
+    assert len(stats["e2e_ms"]) == len(queue)
+    for k in ("queue_wait_ms_p50", "queue_wait_ms_p99",
+              "e2e_ms_p50", "e2e_ms_p99"):
+        assert isinstance(stats[k], float)
+    # e2e includes the wave the request rode, so it dominates its own wait
+    assert stats["e2e_ms_p99"] >= stats["queue_wait_ms_p99"]
+    # the imbalanced queue is the dead-lane showcase: occupancy must be a
+    # real fraction, and strictly < 1 (short lanes die under long ones)
+    occ = stats["mean_lane_occupancy"]
+    assert 0.0 < occ < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Tuner surface: slots knob, lane-aware replay, the scheduler twin
+# ---------------------------------------------------------------------------
+
+def test_tune_space_has_admit_slots_axis():
+    from repro.tune import SCHED_TUNED_KNOBS
+    from repro.tune.autotune import TuneSpace
+    assert SCHED_TUNED_KNOBS == ("slots",)
+    space = TuneSpace()
+    assert space.admit_slots and all(s >= 1 for s in space.admit_slots)
+
+
+def test_legacy_tune_keys_and_knob_dicts_still_parse():
+    """Stored entries from before the scheduler existed — bare engine
+    tokens, no 'slots' knob — round-trip; and a stored dict that DOES
+    carry 'slots' (a sched entry fed to the engine apply path) is dropped
+    instead of exploding EngineConfig."""
+    from repro.tune import AutoTuner, TuneKey
+
+    legacy = "n32-m64-d8|count|bitword|pallas|wave|cpu"
+    key = TuneKey.from_str(legacy)
+    assert key.as_str() == legacy
+
+    sched = "n32-m64-d8|count|bitword|pallas|sched|cpu"
+    skey = TuneKey.from_str(sched)
+    assert skey.engine == "sched" and skey.as_str() == sched
+
+    cfg = EngineConfig(superstep_rounds=2)
+    tuned = AutoTuner.apply({"superstep_rounds": 8}, cfg)
+    assert tuned.superstep_rounds == 8
+    tuned2 = AutoTuner.apply({"slots": 8, "superstep_rounds": 6}, cfg)
+    assert tuned2.superstep_rounds == 6
+    assert not hasattr(tuned2, "slots")
+
+
+def test_tune_slots_persists_and_reloads(tmp_path):
+    from repro.tune import AutoTuner, WaveProfile
+    from repro.tune.store import TuneStore
+
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=3),
+                       auto_tune=False)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=2)
+    ref = [svc.enumerate(g) for g in queue]
+    profile = WaveProfile.from_batch(
+        [r.history for r in ref], lane_n=[g.n for g in queue],
+        n=max(g.n for g in queue), nw=1)
+
+    store_path = str(tmp_path / "tune.json")
+    tuner = AutoTuner(store=TuneStore(path=store_path), device_kind="cpu")
+    cfg = EngineConfig(store=False)
+    key = tuner.key_for_sched(16, 24, 4, cfg)
+    assert key.engine == "sched"
+    best = tuner.tune_slots(profile, cfg, key=key)
+    assert best in tuner.space.admit_slots
+    assert tuner.slots_for(key) == best
+    # a fresh tuner over the same store file sees the persisted knob
+    tuner2 = AutoTuner(store=TuneStore(path=store_path), device_kind="cpu")
+    assert tuner2.slots_for(tuner2.key_for_sched(16, 24, 4, cfg)) == best
+    # no lane data -> fixed default, nothing to model
+    flat = WaveProfile.from_history(ref[0].history, n=queue[0].n, nw=1)
+    assert tuner.tune_slots(flat, cfg) == tuner.space.admit_slots[0]
+
+
+def test_replay_recycle_stops_charging_exited_lanes():
+    from repro.tune import WaveProfile, replay
+
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=3),
+                       auto_tune=False)
+    queue = imbalanced_queue(n_long=1, shorts_per_long=3)
+    ref = [svc.enumerate(g) for g in queue]
+    profile = WaveProfile.from_batch(
+        [r.history for r in ref], lane_n=[g.n for g in queue],
+        n=max(g.n for g in queue), nw=1)
+    cfg = EngineConfig(store=False, superstep_rounds=3)
+    full = replay(profile, cfg)
+    rec = replay(profile, cfg, recycle=True)
+    # the short lanes exit rounds before the grid lane: a recycling pool
+    # stops paying their row work, a wave-at-a-time batch does not
+    assert rec.row_work < full.row_work
+    assert rec.rounds == full.rounds
+    # single-lane profiles have no dead lanes to stop charging
+    flat = WaveProfile.from_history(ref[0].history, n=queue[0].n, nw=1)
+    assert replay(flat, cfg, recycle=True) == replay(flat, cfg)
+
+
+def test_replay_sched_models_the_admit_loop():
+    from repro.tune import WaveProfile, replay_sched
+    from repro.tune.cost_model import CostModel
+
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=3),
+                       auto_tune=False)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=3)
+    ref = [svc.enumerate(g) for g in queue]
+    profile = WaveProfile.from_batch(
+        [r.history for r in ref], lane_n=[g.n for g in queue],
+        n=max(g.n for g in queue), nw=1)
+    cfg = EngineConfig(store=False, superstep_rounds=3)
+
+    two = replay_sched(profile, cfg, slots=2)
+    four = replay_sched(profile, cfg, slots=4)
+    for s in (two, four):
+        assert s.n_dispatches > 0 and s.rounds > 0 and s.row_work > 0
+    # total rounds served is a property of the REQUESTS, not the pool
+    # size, and at least covers the longest single wave
+    assert two.rounds == four.rounds
+    assert two.rounds >= max(len(t) for t in profile.lane_t)
+    # scoring is finite and orderable — the tune_slots objective
+    model = CostModel()
+    scores = [model.score_sched(profile, cfg, s) for s in (2, 4)]
+    assert all(np.isfinite(s) and s > 0 for s in scores)
+
+    flat = WaveProfile.from_history(ref[0].history, n=queue[0].n, nw=1)
+    with pytest.raises(ValueError, match="lane"):
+        replay_sched(flat, cfg, slots=2)
+
+
+def test_first_class_visit_tunes_slots():
+    """An auto-tuning service's first completed pool stores a 'slots' knob
+    under the sched key; the next session for that class resolves it."""
+    svc = CycleService(EngineConfig(store=False, superstep_rounds=3),
+                       auto_tune=True)
+    queue = imbalanced_queue(n_long=2, shorts_per_long=2)
+    list(svc.serve_stream(queue))
+    tuner = svc._tuner
+    g = queue[0]
+    key = tuner.key_for_sched(*_pool_shape(g), svc.cfg)
+    stored = tuner.slots_for(key)
+    assert stored in tuner.space.admit_slots
+    sched = svc.session()
+    assert sched._resolve_slots(*_pool_shape(g), svc.cfg) == stored
+
+
+def _pool_shape(g):
+    from repro.sched import class_shape
+    return class_shape(g)
