@@ -155,6 +155,18 @@ def check() -> int:
                 base["baseline_ms_per_graph"])
             cmp("serve.recycle", row["recycle_ms_per_graph"],
                 base["recycle_ms_per_graph"])
+        print("== check: observability export schema ==")
+        from . import serve_bench as sb
+        row = sb.obs_smoke(out_dir=tmp)
+        checked += 1
+        if row["metrics_problems"] or row["trace_problems"]:
+            print(f"  FAIL obs: {row['metrics_problems']} metrics / "
+                  f"{row['trace_problems']} trace schema problems")
+            failures.append("obs.schema")
+        else:
+            print(f"  ok   obs: metrics + perfetto schemas valid "
+                  f"({row['n_trace_events']} events, "
+                  f"{row['n_spans']} spans)")
 
     if not checked:
         print("check: no committed baselines found — run --smoke first")
@@ -185,6 +197,8 @@ def main() -> None:
         print("\n== sustained serving (lane recycling vs wave-at-a-time) ==")
         from . import serve_bench
         serve_bench.serve_smoke()
+        print("\n== observability export (metrics + perfetto schema) ==")
+        serve_bench.obs_smoke()
         print("\n== engine A/B (smoke subset) ==")
         # separate file: must not clobber the tracked full-suite baseline
         engine_bench.main(["Grid_5x6", "K_8_8"],

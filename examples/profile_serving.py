@@ -1,0 +1,79 @@
+"""Profile a serving session: trace a recycled serve, export the Perfetto
+timeline + metrics snapshot, and read the request spans back (DESIGN.md
+§6.10).
+
+    PYTHONPATH=src python examples/profile_serving.py
+
+Writes ``profile_serving_trace.json`` (open it at https://ui.perfetto.dev
+or chrome://tracing) and ``profile_serving_metrics.json`` next to this
+file. The same artifacts come out of the serve CLI:
+
+    PYTHONPATH=src python -m repro.launch.serve --recycle \
+        --trace-out trace.json --metrics-json metrics.json
+"""
+import os
+
+from repro.core import CycleService, EngineConfig
+from repro.obs import (collect_events, to_perfetto, validate_metrics,
+                       validate_perfetto, write_json)
+from repro.sched.traffic import imbalanced_queue
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# An imbalanced queue — long-lived grids interleaved with short connector
+# graphs — is the workload lane recycling exists for, and the one worth
+# profiling: the trace shows short lanes retiring and re-seeding while
+# the long lanes keep stepping.
+queue = imbalanced_queue(n_long=4, shorts_per_long=3, scale="small")
+
+# trace=True turns on BOTH sinks: TraceEvents (device dispatches, with
+# lane attribution) and request Spans (queue_wait -> seed -> superstep
+# -> recycle/retire -> drain). Leave it False in production serving —
+# the disabled path retains nothing per dispatch.
+service = CycleService(
+    EngineConfig(store=True, formulation="bitword", backend="jnp",
+                 superstep_rounds=4),
+    trace=True)
+
+for idx, res in service.serve_stream(queue, slots=4):
+    print(f"  request {idx:2d}: {res.n_cycles:4d} cycles "
+          f"in {res.iterations} rounds")
+sess = service.last_session
+print(f"served {len(queue)} requests over {sess.stats['supersteps']} "
+      f"supersteps, {sess.stats['boundaries']} recycle boundaries")
+
+# --- request spans: the per-request latency decomposition -----------------
+# Every request owns a span tree rooted at "request"; rollup() sums child
+# wall time by phase so you can see where each request's latency went.
+rollups = [(rid, service.spans.rollup(rid)) for rid in service.spans.roots()]
+slowest_rid, slowest = max(rollups, key=lambda kv: kv[1]["e2e_ms"])
+print(f"\nslowest request {slowest_rid} "
+      f"({slowest['e2e_ms']:.1f} ms end-to-end, "
+      f"{slowest['accounted_ms']:.1f} ms accounted to slices):")
+for name, ms in sorted(slowest["slices_ms"].items(), key=lambda kv: -kv[1]):
+    print(f"  {name:12s} {ms:8.2f} ms")
+
+# --- metrics snapshot: counters / gauges / histograms ---------------------
+snap = service.metrics.snapshot()
+assert validate_metrics(snap) == []
+for labels, h in snap["histograms"]["queue_wait_ms"].items():
+    print(f"queue_wait[{labels}]: p50 {h['p50']:.2f} ms, "
+          f"p99 {h['p99']:.2f} ms over {h['count']} requests")
+metrics_path = os.path.join(HERE, "profile_serving_metrics.json")
+service.metrics.to_json(metrics_path, benchmark="profile_serving")
+
+# --- Perfetto export: one track per lane, one per request -----------------
+doc = to_perfetto(collect_events(service), service.spans.spans,
+                  meta=dict(example="profile_serving",
+                            n_requests=len(queue)))
+assert validate_perfetto(doc) == []
+trace_path = write_json(os.path.join(HERE, "profile_serving_trace.json"),
+                        doc)
+evs = doc["traceEvents"]
+lanes = {e["tid"] for e in evs if e.get("ph") == "X" and e["pid"] == 1}
+print(f"\nwrote {trace_path} ({len(evs)} events, {len(lanes)} lane tracks)")
+print(f"wrote {metrics_path}")
+print("open the trace at https://ui.perfetto.dev — pid 1 is the lane "
+      "grid (one track per lane, slices labelled by request), pid 2 the "
+      "request spans, pid 3 the engine boundaries (seed/recycle wall "
+      "time), plus frontier/ring/live-lane counter tracks.")

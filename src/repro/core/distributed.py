@@ -406,7 +406,8 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
     trace.sync()
     trace.dispatch(kind="deal", bucket=cap, cyc_cap=0, budget=0, rounds=0,
                    status="RUN", enter_count=live, exit_count=live,
-                   t_ms=trace.toc_ms(), fresh=fresh, ndev=ndev)
+                   t_ms=trace.toc_ms(), fresh=fresh,
+                   plan_key=str(deal.key), ndev=ndev)
     if overflow:
         raise ValueError(
             f"initial triplets overflow local_capacity={cap} by {overflow} "
@@ -454,7 +455,8 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
             status=STATUS_NAMES[int(status_h)],
             t_sizes=np.asarray(th_h)[:r_h], c_counts=ch_round,
             enter_count=live, exit_count=int(th_h[r_h - 1]),
-            t_ms=trace.toc_ms(), fresh=fresh, ndev=ndev,
+            t_ms=trace.toc_ms(), fresh=fresh, plan_key=str(step.key),
+            ndev=ndev,
             per_device=tuple(int(x) for x in peak_dev),
             moved=moved_d, lost=lost_d)
         for i in range(r_h):

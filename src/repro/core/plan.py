@@ -242,7 +242,7 @@ class ProgramCache:
     recompiles (counted in ``evictions``/``cache_misses``). ``None`` keeps
     the unbounded pre-eviction behaviour."""
 
-    def __init__(self, max_plans: int | None = None):
+    def __init__(self, max_plans: int | None = None, metrics=None):
         if max_plans is not None and max_plans < 1:
             raise ValueError(f"max_plans must be >= 1 or None, "
                              f"got {max_plans}")
@@ -252,20 +252,35 @@ class ProgramCache:
         self.misses = 0
         self.evictions = 0
         self._retired_traces = 0  # n_traces stays monotonic across evictions
+        # optional repro.obs registry: push counters mirror hit/miss/evict,
+        # pull gauges keep programs/n_traces live views over this cache
+        self._m_hits = self._m_misses = self._m_evictions = None
+        if metrics is not None:
+            self._m_hits = metrics.counter("plan_cache_hits_total")
+            self._m_misses = metrics.counter("plan_cache_misses_total")
+            self._m_evictions = metrics.counter("plan_evictions_total")
+            metrics.gauge("plan_programs").set_fn(lambda: len(self._plans))
+            metrics.gauge("plan_traces").set_fn(lambda: self.n_traces)
 
     def get_or_build(self, key: PlanKey, builder):
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
+            if self._m_hits is not None:
+                self._m_hits.inc()
             self._plans.move_to_end(key)
             return plan
         self.misses += 1
+        if self._m_misses is not None:
+            self._m_misses.inc()
         plan = builder()
         self._plans[key] = plan
         while self.max_plans is not None and len(self._plans) > self.max_plans:
             _, evicted = self._plans.popitem(last=False)
             self._retired_traces += getattr(evicted, "n_traces", 0)
             self.evictions += 1
+            if self._m_evictions is not None:
+                self._m_evictions.inc()
         return plan
 
     def __len__(self):

@@ -32,6 +32,8 @@ LRU-bounds the program cache.
 """
 from __future__ import annotations
 
+import collections
+import time
 from typing import Callable, Iterator, Sequence
 
 import numpy as np
@@ -46,7 +48,26 @@ from .frontier import (empty_cycle_buffer, empty_frontier, with_capacity,
                        with_capacity_batched)
 from .plan import (PlanKey, ProgramCache, RecyclePlan, WavePlan,
                    batch_graphs, batch_shape)
+from ..obs.metrics import MetricsRegistry
+from ..obs.spans import SpanLog, new_request_id
 from ..tune.telemetry import WaveTrace, disabled_trace
+
+# legacy CycleService.stats request-accounting keys → canonical registry
+# metric names (the stats dict is a VIEW over these — DESIGN.md §6.10)
+_SERVICE_COUNTERS = dict(
+    requests="service_requests_total", graphs="service_graphs_total",
+    batches="service_batches_total", streams="service_streams_total",
+    sessions="service_sessions_total",
+    traces_recorded="service_traces_recorded_total",
+    tuned_requests="service_tuned_requests_total")
+# divergent legacy stat names across CycleService.stats / serve() /
+# serve_recycled(), normalized onto one canonical metric each
+_LEGACY_ALIASES = dict(
+    cache_hits="plan_cache_hits_total", hits="plan_cache_hits_total",
+    cache_misses="plan_cache_misses_total",
+    misses="plan_cache_misses_total", evictions="plan_evictions_total",
+    programs="plan_programs", n_traces="plan_traces",
+    **_SERVICE_COUNTERS)
 
 
 class CycleService:
@@ -63,7 +84,8 @@ class CycleService:
     def __init__(self, config: EngineConfig | None = None, *,
                  auto_tune: bool = False, tuner=None,
                  tune_store: "str | object | None" = None,
-                 trace: bool = False, max_plans: int | None = None):
+                 trace: bool = False, max_plans: int | None = None,
+                 metrics: MetricsRegistry | None = None, recorder=None):
         """``auto_tune=True`` resolves every request's config through an
         ``repro.tune.AutoTuner``: the first request of a workload class runs
         the base config while recording a ``WaveTrace``, the tuner fits its
@@ -73,16 +95,32 @@ class CycleService:
         ``AutoTuner`` (e.g. with measured trials); ``tune_store`` is a
         ``TuneStore`` or a JSON path for persistence across processes.
         ``trace=True`` records telemetry on every request
-        (``service.last_trace``); ``max_plans`` LRU-bounds the program
-        cache for long-lived services.
+        (``service.last_trace``/``service.trace_log``) plus request spans
+        (``service.spans``); ``max_plans`` LRU-bounds the program cache
+        for long-lived services. ``metrics`` injects a shared
+        ``repro.obs.MetricsRegistry`` (default: one per service);
+        ``recorder`` attaches a ``repro.obs.FlightRecorder`` that rides
+        every run as a telemetry observer (bounded ring + anomaly dumps,
+        works even with ``trace=False``).
         """
         self.cfg = config if config is not None else EngineConfig()
-        self._cache = ProgramCache(max_plans=max_plans)
-        self._counters = dict(requests=0, graphs=0, batches=0, streams=0,
-                              sessions=0, traces_recorded=0,
-                              tuned_requests=0)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._obs_t0 = time.perf_counter()   # the shared span/event clock
+        self._cache = ProgramCache(max_plans=max_plans,
+                                   metrics=self.metrics)
+        # request accounting lives IN the registry; the legacy stats dict
+        # is a view over it (`stats` property)
+        self._m = {name: self.metrics.counter(canon)
+                   for name, canon in _SERVICE_COUNTERS.items()}
+        self._m_boundary = self.metrics.counter("boundary_ms_total")
+        for legacy, canon in _LEGACY_ALIASES.items():
+            self.metrics.alias(legacy, canon)
+        self._recorder = recorder
         self.last_session = None
         self._trace_enabled = bool(trace)
+        self.spans = SpanLog(enabled=self._trace_enabled,
+                             origin=self._obs_t0)
+        self.trace_log: collections.deque = collections.deque(maxlen=512)
         self.last_trace: WaveTrace | None = None
         self._tuner = tuner
         if tuner is not None and tune_store is not None:
@@ -96,15 +134,22 @@ class CycleService:
             store = tune_store
             if isinstance(store, str):
                 store = TuneStore(path=store)
-            self._tuner = AutoTuner(store=store)
+            self._tuner = AutoTuner(store=store, metrics=self.metrics)
+        if self._tuner is not None and \
+                getattr(self._tuner, "_metrics", None) is None:
+            # injected tuner: route its counters through this registry too
+            self._tuner._metrics = self.metrics
 
     # -- stats ------------------------------------------------------------
 
     @property
     def stats(self) -> dict:
-        """Program-cache hit/miss/trace counters + request accounting."""
+        """Program-cache hit/miss/trace counters + request accounting.
+
+        The legacy dict shape (pinned in tests/test_obs.py) is a VIEW over
+        the metrics registry — the registry counters are the storage."""
         out = self._cache.stats()
-        out.update(self._counters)
+        out.update({name: int(c.value()) for name, c in self._m.items()})
         if self._tuner is not None:
             out["tune"] = self._tuner.stats()
         return out
@@ -137,20 +182,27 @@ class CycleService:
         key = self._tuner.key_for(n, m, delta, cfg, batch=batch)
         tuned = self._tuner.lookup(key, cfg)
         if tuned is not None:
-            self._counters["tuned_requests"] += 1
+            self._m["tuned_requests"].inc()
             return tuned, key, False
         return cfg, key, True
 
     def _new_trace(self, observing: bool) -> WaveTrace:
         """Telemetry recorder for one run: retains events when the service
         records traces OR this run feeds the tuner; counters-only (near-zero
-        overhead) otherwise."""
+        overhead) otherwise. Every trace shares the service clock
+        (``origin``) so its events and the request spans land on one
+        timeline; an attached FlightRecorder observes events even on the
+        disabled path (observer-only — nothing retained per dispatch)."""
+        observer = self._recorder.record if self._recorder is not None \
+            else None
         if self._trace_enabled or observing:
-            tr = WaveTrace(enabled=True)
-            self._counters["traces_recorded"] += 1
+            tr = WaveTrace(enabled=True, origin=self._obs_t0,
+                           observer=observer)
+            self._m["traces_recorded"].inc()
             self.last_trace = tr
+            self.trace_log.append(tr)
             return tr
-        return disabled_trace()
+        return disabled_trace(origin=self._obs_t0, observer=observer)
 
     def _after_run(self, g: BitsetGraph, cfg: EngineConfig, tune_key,
                    observe: bool, trace: WaveTrace,
@@ -162,6 +214,23 @@ class CycleService:
             return
         self._tuner.observe(tune_key, cfg, res.history, n=g.n,
                             nw=g.adj_bits.shape[1], traces=(trace,))
+
+    def _request_spans(self, rid: str, t_req: float,
+                       trace: WaveTrace) -> None:
+        """Decompose one finished run into request spans (DESIGN.md §6.10):
+        a root ``request`` slice covering the whole call plus one child per
+        recorded dispatch, all on the shared service clock. Only runs when
+        spans are enabled AND the run recorded events — the disabled path
+        constructs no Span objects at all (overhead contract)."""
+        if not rid or not self.spans.enabled:
+            return
+        for wave, ev in enumerate(getattr(trace, "events", ())):
+            self.spans.add(ev.kind, rid, ev.t_start_ms,
+                           max(ev.wall_ms, ev.t_ms), wave=wave,
+                           status=ev.status, rounds=ev.rounds,
+                           bucket=ev.bucket)
+        self.spans.add("request", rid, t_req,
+                       self.spans.now_ms() - t_req)
 
     # -- plan (compile) ---------------------------------------------------
 
@@ -227,8 +296,10 @@ class CycleService:
                   ) -> EnumerationResult:
         """Enumerate (or count) all chordless cycles of ``g``."""
         cfg = config if config is not None else self.cfg
-        self._counters["requests"] += 1
-        self._counters["graphs"] += 1
+        self._m["requests"].inc()
+        self._m["graphs"].inc()
+        rid = new_request_id() if self.spans.enabled else ""
+        t_req = self.spans.now_ms() if rid else 0.0
         cfg, tkey, observe = self._resolve_config(
             g.n, g.m, max(g.max_degree, 1), cfg, explicit=config is not None)
         trace = self._new_trace(observe)
@@ -237,12 +308,14 @@ class CycleService:
             res = enumerate_sharded(g, cfg, cache=self._cache, trace=trace,
                                     progress=progress)
             self._after_run(g, cfg, tkey, observe, trace, res)
+            self._request_spans(rid, t_req, trace)
             return res
         if cfg.engine == "host":
             res = _enumerate_host(g, cfg, progress, trace=trace)
             self._after_run(g, cfg, tkey, observe, trace, res)
+            self._request_spans(rid, t_req, trace)
             return res
-        gen = self._wave_events(g, cfg, progress, trace)
+        gen = self._wave_events(g, cfg, progress, trace, rid=rid)
         chunks: list[np.ndarray] = []
         while True:
             try:
@@ -255,6 +328,7 @@ class CycleService:
             res.cycle_masks = (np.concatenate(chunks, axis=0) if chunks
                                else np.zeros((0, nw), np.uint32))
         self._after_run(g, cfg, tkey, observe, trace, res)
+        self._request_spans(rid, t_req, trace)
         return res
 
     def stream(self, g: BitsetGraph, *,
@@ -283,13 +357,14 @@ class CycleService:
         if cfg.engine != "wave":
             raise ValueError("stream() requires engine='wave' (the host "
                              "engine has no device-resident cycle buffer)")
-        self._counters["requests"] += 1
-        self._counters["graphs"] += 1
-        self._counters["streams"] += 1
+        self._m["requests"].inc()
+        self._m["graphs"].inc()
+        self._m["streams"].inc()
+        rid = new_request_id() if self.spans.enabled else ""
         cfg, tkey, observe = self._resolve_config(
             g.n, g.m, max(g.max_degree, 1), cfg, explicit=config is not None)
         trace = self._new_trace(observe)
-        gen = self._wave_events(g, cfg, progress, trace)
+        gen = self._wave_events(g, cfg, progress, trace, rid=rid)
         if tkey is None:
             return gen
         return self._observed_stream(gen, g, cfg, tkey, observe, trace)
@@ -303,7 +378,7 @@ class CycleService:
 
     def _wave_events(self, g: BitsetGraph, cfg: EngineConfig,
                      progress: Callable[[dict], None] | None,
-                     trace: WaveTrace | None = None):
+                     trace: WaveTrace | None = None, rid: str = ""):
         """The wave driver loop as an event generator: yields drained mask
         chunks (store mode), returns the EnumerationResult (masks unset).
         Port of the PR-1 ``_enumerate_wave`` with the superstep dispatch
@@ -352,7 +427,10 @@ class CycleService:
                 t_sizes=th_h[:int(r_h)], c_counts=ch_h[:int(r_h)],
                 enter_count=cnt_in, exit_count=int(cnt_h),
                 pending_new=int(pn_h), pending_cyc=int(pc_h),
-                cyc_fill=int(bc_h), t_ms=trace.toc_ms(), fresh=fresh)
+                cyc_fill=int(bc_h), t_ms=trace.toc_ms(), fresh=fresh,
+                plan_key=str(plan.key),
+                lane_rids=(rid,) if rid else (),
+                lane_rounds=(it + int(r_h),) if rid else ())
 
             for i in range(int(r_h)):
                 n_cycles += int(ch_h[i])
@@ -436,9 +514,11 @@ class CycleService:
         if len(graphs) == 1 or cfg.engine == "host":
             return [self.enumerate(g, config=cfg) for g in graphs]
 
-        self._counters["requests"] += 1
-        self._counters["graphs"] += len(graphs)
-        self._counters["batches"] += 1
+        self._m["requests"].inc()
+        self._m["graphs"].inc(len(graphs))
+        self._m["batches"].inc()
+        rid = new_request_id() if self.spans.enabled else ""
+        t_req = self.spans.now_ms() if rid else 0.0
 
         B = len(graphs)
         n_pad, m_pad, delta = batch_shape(graphs)
@@ -454,16 +534,22 @@ class CycleService:
 
         # stage 1 device-side: one counts dispatch + ONE seeding dispatch
         # scatter every lane's triplets (and triangle bitmaps) in place —
-        # no host nonzero, no per-lane H2D (DESIGN.md §6.7).
+        # no host nonzero, no per-lane H2D (DESIGN.md §6.7). wall_ms spans
+        # the whole boundary (staging included), not just the device time.
+        wall_t0 = time.perf_counter()
         trace.tic()
         fbat, tri_bat, ntris, cnts = T.initial_frontier_batched(
             gbat, delta=delta, bucket=cfg.bucket, backend=cfg.backend)
         cap = fbat.path.shape[1]
         trace.sync()
+        seed_wall_ms = (time.perf_counter() - wall_t0) * 1e3
+        self._m_boundary.inc(seed_wall_ms)
         trace.dispatch(
             kind="seed", bucket=cap, cyc_cap=0, budget=0, rounds=0,
             status="RUN", enter_count=int(cnts.sum()),
-            exit_count=int(cnts.sum()), t_ms=trace.toc_ms(), launches=2)
+            exit_count=int(cnts.sum()), t_ms=trace.toc_ms(), launches=2,
+            wall_ms=seed_wall_ms,
+            lane_rids=(rid,) * B if rid else ())
 
         cyc_cap = (cfg.bucket(max(cfg.cycle_buffer_rows, 16))
                    if cfg.store else 1)
@@ -513,7 +599,12 @@ class CycleService:
                 enter_count=live_in,
                 exit_count=int(np.asarray(cnt_h).sum()),
                 cyc_fill=int(np.asarray(bc_h).sum()),
-                t_ms=trace.toc_ms(), fresh=fresh)
+                t_ms=trace.toc_ms(), fresh=fresh,
+                plan_key=str(plan.key),
+                lane_rids=(rid,) * B if rid else (),
+                lane_rounds=tuple(
+                    int(v) for v in its + np.asarray(r_h, np.int64))
+                if rid else ())
 
             for i in range(B):
                 for j in range(int(r_h[i])):
@@ -586,6 +677,7 @@ class CycleService:
                 max_iters=cfg.max_iters)
             self._tuner.observe_profile(tkey, cfg, profile, traces=(trace,))
 
+        self._request_spans(rid, t_req, trace)
         stats = trace.finalize(rounds=int(its.max()))
         results = []
         for i in range(B):
@@ -624,7 +716,7 @@ class CycleService:
         resolves the pool size per shape class through the tuner (stored
         ``slots`` knob) with a fixed default fallback."""
         from ..sched import ContinuousScheduler
-        self._counters["sessions"] += 1
+        self._m["sessions"].inc()
         sched = ContinuousScheduler(self, slots=slots, config=config)
         self.last_session = sched
         return sched

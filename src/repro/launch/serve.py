@@ -101,6 +101,14 @@ def serve(service, queue, *, slots: int = 4, verbose: bool = True) -> dict:
     queue = list(queue)
     stats = dict(requests=0, waves=0, coalesced_lanes=0, solo_requests=0,
                  n_cycles=0, classes={})
+    # registry mirrors (DESIGN.md §6.10): the returned dict stays the
+    # legacy view, every count double-writes into the service's registry
+    m = service.metrics
+    mc = {name: m.counter(f"serve_{name}_total")
+          for name in ("requests", "waves", "coalesced_lanes",
+                       "solo_requests")}
+    h_wait = m.histogram("queue_wait_ms")
+    h_e2e = m.histogram("e2e_ms")
     latencies = []
     queue_wait_ms: list[float] = []
     e2e_ms: list[float] = []
@@ -117,6 +125,9 @@ def serve(service, queue, *, slots: int = 4, verbose: bool = True) -> dict:
 
         queue_wait_ms += [round((t1 - t_start) * 1e3, 3)] * len(batch)
         e2e_ms += [round((t2 - t_start) * 1e3, 3)] * len(batch)
+        for _ in batch:
+            h_wait.observe((t1 - t_start) * 1e3, sched="wave")
+            h_e2e.observe((t2 - t_start) * 1e3, sched="wave")
         # lane-rounds lived over lane-rounds dispatched: every lane rides
         # until the slowest lane's wave dies
         rounds = [r.iterations + 1 for r in results]
@@ -124,12 +135,16 @@ def serve(service, queue, *, slots: int = 4, verbose: bool = True) -> dict:
 
         latencies.append(dt / len(batch))
         stats["requests"] += len(batch)
+        mc["requests"].inc(len(batch))
         stats["waves"] += 1
+        mc["waves"].inc()
         stats["classes"][cls] = stats["classes"].get(cls, 0) + 1
         if len(batch) > 1:
             stats["coalesced_lanes"] += len(batch)
+            mc["coalesced_lanes"].inc(len(batch))
         else:
             stats["solo_requests"] += 1
+            mc["solo_requests"].inc()
         total = sum(r.n_cycles for r in results)
         stats["n_cycles"] += total
         if verbose:
@@ -191,13 +206,29 @@ def main():
                     help="serve through the continuous lane-recycling "
                          "scheduler (repro.sched) instead of "
                          "wave-at-a-time coalescing")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the unified metrics-registry snapshot "
+                         "(repro.obs) to PATH after serving")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record telemetry + request spans and write a "
+                         "Chrome/Perfetto trace_event JSON to PATH "
+                         "(open at ui.perfetto.dev)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="attach a FlightRecorder that auto-dumps recent "
+                         "telemetry to DIR on guard storms / warm "
+                         "retraces / occupancy collapse")
     args = ap.parse_args()
 
     from ..core import CycleService, EngineConfig
+    from ..obs import FlightRecorder
 
+    recorder = (FlightRecorder(dump_dir=args.flight_dir)
+                if args.flight_dir else None)
     service = CycleService(EngineConfig(store=args.store,
                                         formulation=args.formulation,
-                                        backend=args.backend))
+                                        backend=args.backend),
+                           trace=args.trace_out is not None,
+                           recorder=recorder)
     queue = build_request_queue(args.requests, args.seed)
 
     t0 = time.perf_counter()
@@ -238,6 +269,29 @@ def main():
     print(f"service: {s['programs']} compiled programs, "
           f"{s['cache_hits']} hits / {s['cache_misses']} misses "
           f"({hit_rate:.0%} hit rate), {s['n_traces']} traces")
+
+    if args.metrics_json:
+        from ..obs import validate_metrics
+        service.metrics.to_json(
+            args.metrics_json, recycle=args.recycle,
+            requests=args.requests, slots=args.slots)
+        errs = validate_metrics(service.metrics.snapshot())
+        print(f"metrics snapshot -> {args.metrics_json}"
+              + (f" ({len(errs)} schema problems!)" if errs else ""))
+    if args.trace_out:
+        from ..obs import (collect_events, to_perfetto, validate_perfetto,
+                           write_json)
+        doc = to_perfetto(collect_events(service), service.spans.spans,
+                          meta=dict(recycle=args.recycle,
+                                    requests=args.requests))
+        errs = validate_perfetto(doc)
+        write_json(args.trace_out, doc)
+        print(f"perfetto trace -> {args.trace_out} "
+              f"({len(doc['traceEvents'])} events"
+              + (f", {len(errs)} schema problems!)" if errs else ")"))
+    if recorder is not None and recorder.dumps:
+        print(f"flight recorder: {len(recorder.dumps)} dump(s) "
+              f"-> {args.flight_dir} ({dict(recorder.trips)})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,314 @@
+"""Metrics registry — the unified counter/gauge/histogram layer of
+``repro.obs`` (DESIGN.md §6.10).
+
+Before this module the stack's visibility was three divergent ad-hoc
+dicts: ``CycleService.stats`` (program-cache + request accounting),
+``launch.serve.serve()``'s scheduler dict, and the continuous scheduler's
+session stats — no common schema, no single export. This registry is the
+one place every layer emits through:
+
+* ``Counter``   — monotone labeled accumulator (``inc``),
+* ``Gauge``     — last-write labeled value (``set``/``inc``), optionally a
+                  *pull* gauge bound to a callable (``set_fn``) so values
+                  like "compiled programs" stay views over their owner,
+* ``Histogram`` — fixed-bucket labeled distribution with count/sum and
+                  interpolated ``percentile`` (p50/p99 in the snapshot),
+* ``MetricsRegistry`` — get-or-create factory, legacy-name aliases, and a
+                  JSON-stable ``snapshot()``.
+
+The legacy stats dicts are PRESERVED as views over this registry: the
+canonical metric names carry the data, ``alias()`` maps each legacy key
+(``cache_hits``, ``hits``, ``misses``, ...) onto its canonical metric, and
+the regression tests in ``tests/test_obs.py`` pin both the legacy dict
+shapes and the dict==registry equality.
+
+Zero-dependency by design (stdlib only, no jax/numpy import) so every
+layer — core, sched, tune, launch — can emit without import cycles.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+
+# Default latency buckets (ms): sub-ms dispatches up to multi-second waves.
+DEFAULT_MS_BUCKETS = (0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0,
+                      100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0)
+
+SNAPSHOT_SCHEMA = "repro.obs/metrics/v1"
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def _label_str(key: tuple) -> str:
+    return ",".join(f"{k}={v}" for k, v in key)
+
+
+class _Metric:
+    kind = "metric"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self._values: dict[tuple, float] = {}
+
+    def value(self, **labels) -> float:
+        return float(self._values.get(_label_key(labels), 0.0))
+
+    def total(self) -> float:
+        """Sum across every label set (the unlabeled rollup)."""
+        return float(sum(self._values.values()))
+
+    def snapshot(self):
+        if not self._values:
+            return {}
+        return {_label_str(k): v for k, v in sorted(self._values.items())}
+
+
+class Counter(_Metric):
+    """Monotone accumulator. ``inc`` with a negative value raises — a
+    counter that can go down is a gauge wearing the wrong hat."""
+    kind = "counter"
+
+    def inc(self, value: float = 1.0, **labels) -> None:
+        if value < 0:
+            raise ValueError(f"counter {self.name}: negative inc {value}")
+        k = _label_key(labels)
+        self._values[k] = self._values.get(k, 0.0) + value
+
+
+class Gauge(_Metric):
+    """Last-write value; ``set_fn`` turns it into a pull gauge whose value
+    is read from its owner at snapshot time (a live *view*, never stale)."""
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):
+        super().__init__(name, help)
+        self._fns: dict[tuple, object] = {}
+
+    def set(self, value: float, **labels) -> None:
+        self._values[_label_key(labels)] = float(value)
+
+    def inc(self, value: float = 1.0, **labels) -> None:
+        k = _label_key(labels)
+        self._values[k] = self._values.get(k, 0.0) + value
+
+    def set_fn(self, fn, **labels) -> None:
+        self._fns[_label_key(labels)] = fn
+
+    def value(self, **labels) -> float:
+        k = _label_key(labels)
+        if k in self._fns:
+            return float(self._fns[k]())
+        return float(self._values.get(k, 0.0))
+
+    def snapshot(self):
+        out = {_label_str(k): v for k, v in sorted(self._values.items())}
+        for k, fn in sorted(self._fns.items()):
+            out[_label_str(k)] = float(fn())
+        return out
+
+
+class Histogram(_Metric):
+    """Fixed-bucket distribution. Buckets are upper bounds; one implicit
+    +inf bucket catches the tail. ``percentile`` interpolates linearly
+    inside the winning bucket (exact min/max are tracked, so p0/p100 and
+    single-observation distributions come back exact)."""
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: tuple = DEFAULT_MS_BUCKETS):
+        super().__init__(name, help)
+        self.buckets = tuple(float(b) for b in buckets)
+        if list(self.buckets) != sorted(self.buckets):
+            raise ValueError(f"histogram {self.name}: buckets must ascend")
+        self._state: dict[tuple, dict] = {}
+
+    def _slot(self, labels: dict) -> dict:
+        k = _label_key(labels)
+        st = self._state.get(k)
+        if st is None:
+            st = dict(counts=[0] * (len(self.buckets) + 1), sum=0.0, n=0,
+                      min=float("inf"), max=float("-inf"))
+            self._state[k] = st
+        return st
+
+    def observe(self, value: float, **labels) -> None:
+        v = float(value)
+        st = self._slot(labels)
+        i = 0
+        while i < len(self.buckets) and v > self.buckets[i]:
+            i += 1
+        st["counts"][i] += 1
+        st["sum"] += v
+        st["n"] += 1
+        st["min"] = min(st["min"], v)
+        st["max"] = max(st["max"], v)
+
+    def count(self, **labels) -> int:
+        st = self._state.get(_label_key(labels))
+        return int(st["n"]) if st else 0
+
+    def sum(self, **labels) -> float:
+        st = self._state.get(_label_key(labels))
+        return float(st["sum"]) if st else 0.0
+
+    def percentile(self, p: float, **labels) -> float:
+        st = self._state.get(_label_key(labels))
+        if not st or not st["n"]:
+            return 0.0
+        target = (p / 100.0) * st["n"]
+        seen = 0
+        for i, c in enumerate(st["counts"]):
+            if not c:
+                continue
+            lo = self.buckets[i - 1] if i > 0 else min(st["min"], 0.0)
+            hi = self.buckets[i] if i < len(self.buckets) else st["max"]
+            lo, hi = max(lo, st["min"]), min(max(hi, lo), st["max"])
+            if seen + c >= target:
+                frac = (target - seen) / c
+                return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+            seen += c
+        return st["max"]
+
+    def snapshot(self):
+        out = {}
+        for k, st in sorted(self._state.items()):
+            out[_label_str(k)] = dict(
+                count=int(st["n"]), sum=round(st["sum"], 4),
+                min=round(st["min"], 4), max=round(st["max"], 4),
+                p50=round(self.percentile(50, **dict(k)), 4),
+                p99=round(self.percentile(99, **dict(k)), 4),
+                buckets=list(self.buckets),
+                counts=list(st["counts"]))
+        return out
+
+
+class MetricsRegistry:
+    """Get-or-create factory for the three instrument kinds, plus the
+    legacy-name alias table and the JSON snapshot every export consumes.
+
+    One registry per ``CycleService`` by default (the service passes it to
+    its ``ProgramCache``, tuner, and every scheduler session); pass a
+    shared registry to aggregate several services into one export.
+    """
+
+    def __init__(self):
+        self._metrics: dict[str, _Metric] = {}
+        self._aliases: dict[str, tuple[str, dict]] = {}
+        self._lock = threading.Lock()
+
+    # -- factories ---------------------------------------------------------
+
+    def _get_or_create(self, cls, name: str, help: str, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = cls(name, help, **kw)
+                self._metrics[name] = m
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{m.kind}, requested {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: tuple = DEFAULT_MS_BUCKETS) -> Histogram:
+        return self._get_or_create(Histogram, name, help, buckets=buckets)
+
+    # -- lookup ------------------------------------------------------------
+
+    def get(self, name: str) -> _Metric | None:
+        return self._metrics.get(name)
+
+    def value(self, name: str, **labels) -> float:
+        m = self._metrics.get(name)
+        return m.value(**labels) if m is not None else 0.0
+
+    # -- legacy aliases (satellite: stat-name normalization) ---------------
+
+    def alias(self, legacy: str, canonical: str, **labels) -> None:
+        """Map a legacy stat name (``cache_hits``, ``hits``, ...) onto a
+        canonical metric; ``snapshot()['aliases']`` resolves every alias to
+        its current value so old dashboards read the new registry."""
+        self._aliases[legacy] = (canonical, labels)
+
+    def legacy_view(self, names) -> dict:
+        """A legacy-shaped dict over the registry (the satellite's
+        "legacy dict shapes preserved as views" mechanism)."""
+        out = {}
+        for legacy in names:
+            canonical, labels = self._aliases.get(legacy, (legacy, {}))
+            out[legacy] = self.value(canonical, **labels)
+        return out
+
+    # -- export ------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        out = dict(schema=SNAPSHOT_SCHEMA, counters={}, gauges={},
+                   histograms={}, aliases={})
+        for name, m in sorted(self._metrics.items()):
+            section = {"counter": "counters", "gauge": "gauges",
+                       "histogram": "histograms"}[m.kind]
+            out[section][name] = m.snapshot()
+        for legacy, (canonical, labels) in sorted(self._aliases.items()):
+            out["aliases"][legacy] = self.value(canonical, **labels)
+        return out
+
+    def to_json(self, path: str | None = None, **meta) -> str:
+        doc = self.snapshot()
+        if meta:
+            doc["meta"] = meta
+        s = json.dumps(doc, indent=2, sort_keys=True)
+        if path:
+            with open(path, "w") as f:
+                f.write(s)
+        return s
+
+
+def validate_metrics(snapshot: dict) -> list[str]:
+    """Schema check for a registry snapshot: required sections, numeric
+    values, well-formed histograms (count == Σcounts, ascending buckets).
+    Returns a list of problems (empty == valid) so callers choose between
+    gating (``run.py --check``) and reporting."""
+    errs: list[str] = []
+    if not isinstance(snapshot, dict):
+        return ["snapshot is not a dict"]
+    if snapshot.get("schema") != SNAPSHOT_SCHEMA:
+        errs.append(f"schema != {SNAPSHOT_SCHEMA}: "
+                    f"{snapshot.get('schema')!r}")
+    for section in ("counters", "gauges", "histograms", "aliases"):
+        if not isinstance(snapshot.get(section), dict):
+            errs.append(f"missing section {section!r}")
+    for section in ("counters", "gauges"):
+        for name, vals in snapshot.get(section, {}).items():
+            if not isinstance(vals, dict):
+                errs.append(f"{section}.{name}: not a label map")
+                continue
+            for k, v in vals.items():
+                if not isinstance(v, (int, float)):
+                    errs.append(f"{section}.{name}[{k}]: non-numeric {v!r}")
+                elif section == "counters" and v < 0:
+                    errs.append(f"counters.{name}[{k}]: negative {v}")
+    for name, vals in snapshot.get("histograms", {}).items():
+        for k, st in (vals or {}).items():
+            for req in ("count", "sum", "p50", "p99", "buckets", "counts"):
+                if req not in st:
+                    errs.append(f"histograms.{name}[{k}]: missing {req!r}")
+            if "buckets" in st and \
+                    list(st["buckets"]) != sorted(st["buckets"]):
+                errs.append(f"histograms.{name}[{k}]: buckets not ascending")
+            if "counts" in st and "count" in st and \
+                    sum(st["counts"]) != st["count"]:
+                errs.append(f"histograms.{name}[{k}]: count != sum(counts)")
+    for legacy, v in snapshot.get("aliases", {}).items():
+        if not isinstance(v, (int, float)):
+            errs.append(f"aliases.{legacy}: non-numeric {v!r}")
+    return errs

@@ -30,6 +30,7 @@ class LaneRequest:
     t_arrival: float = 0.0    # seconds on the scheduler clock
     t_admit: float = 0.0
     t_done: float = 0.0
+    rid: str = ""             # obs request-id ("" when spans are disabled)
 
     @property
     def queue_wait_s(self) -> float:

@@ -41,6 +41,7 @@ from ..core.engine import (STATUS_NAMES, EngineConfig, EnumerationResult,
                            _DONE, _DRAIN, _GROW, _RUN, _SHRINK)
 from ..core.frontier import empty_cycle_buffer, with_capacity_batched
 from ..core.plan import pad_graph
+from ..obs.spans import new_request_id
 from ..tune.store import _p2, shape_class
 from .lanepool import LanePool, LaneRequest
 
@@ -86,8 +87,31 @@ class ContinuousScheduler:
         self.stats = dict(
             requests=0, completed=0, supersteps=0, boundaries=0,
             admissions=0, retirements=0, pools=0, classes={},
-            occupancy_sum=0.0, n_cycles=0,
+            occupancy_sum=0.0, n_cycles=0, boundary_ms=0.0,
             queue_wait_ms=[], e2e_ms=[])
+        # registry mirrors (DESIGN.md §6.10): the legacy stats dict above
+        # stays the session-local view, every count double-writes into the
+        # service's shared MetricsRegistry via _bump (dict == registry is
+        # regression-pinned in tests/test_obs.py)
+        m = service.metrics
+        self._m = {name: m.counter(f"sched_{name}_total")
+                   for name in ("requests", "completed", "supersteps",
+                                "boundaries", "admissions", "retirements",
+                                "pools")}
+        self._m_boundary = m.counter("boundary_ms_total")
+        self._h_wait = m.histogram("queue_wait_ms")
+        self._h_e2e = m.histogram("e2e_ms")
+        self._g_live = m.gauge("sched_live_lanes")
+        self._g_slots = m.gauge("sched_pool_slots")
+        self._spans = service.spans
+
+    def _bump(self, name: str, n: int = 1) -> None:
+        self.stats[name] += n
+        self._m[name].inc(n)
+
+    def _span_ms(self, t: float) -> float:
+        """Scheduler-clock seconds → the shared service span clock (ms)."""
+        return (self._t0 - self.service._obs_t0 + t) * 1e3
 
     # -- derived stats ----------------------------------------------------
 
@@ -118,12 +142,14 @@ class ContinuousScheduler:
                              f"{len(arrivals)} arrivals")
         self._timed = any(a > 0 for a in arrivals)
         self._t0 = time.perf_counter()
+        span_on = self._spans.enabled
         pending = sorted(
             (LaneRequest(idx=i, graph=g, cls=graph_class(g),
-                         t_arrival=float(arrivals[i]))
+                         t_arrival=float(arrivals[i]),
+                         rid=new_request_id() if span_on else "")
              for i, g in enumerate(graphs)),
             key=lambda r: (r.t_arrival, r.idx))
-        self.stats["requests"] += len(pending)
+        self._bump("requests", len(pending))
 
         while pending or (self.pool and self.pool.occupied_lanes()):
             now = self._now()
@@ -216,7 +242,8 @@ class ContinuousScheduler:
         self._retired_since_event = 0
         self._relaunches = 0
         self._limit_cap = 1
-        self.stats["pools"] += 1
+        self._bump("pools")
+        self._g_slots.set(slots)
         self.stats["classes"][head.cls] = \
             self.stats["classes"].get(head.cls, 0) + 1
 
@@ -232,7 +259,8 @@ class ContinuousScheduler:
             rows)
         fbat, ntris, ntrips, tri_h = self._seed(self._gbat,
                                                 live=len(reqs),
-                                                admitted=len(reqs))
+                                                admitted=len(reqs),
+                                                reqs=reqs)
         self._fbat = fbat
         self._cap = fbat.path.shape[1]
         for lane, r in enumerate(reqs):
@@ -299,10 +327,13 @@ class ContinuousScheduler:
 
     # -- admission (the no-retrace re-seed) --------------------------------
 
-    def _seed(self, gbat, *, live: int, admitted: int):
+    def _seed(self, gbat, *, live: int, admitted: int, reqs=()):
         """Batched stage 1 at the pool's pinned capacity. Returns
-        (fbat, n_tri, n_trip, tri_masks host array)."""
+        (fbat, n_tri, n_trip, tri_masks host array). ``wall_ms`` on the
+        boundary event covers the whole seed (staging included), not just
+        the device time, and accumulates into ``boundary_ms_total``."""
         cfg, trace = self._cfg, self._trace
+        wall_t0 = time.perf_counter()
         trace.tic()
         fbat, tri_bat, ntris, ntrips = T.initial_frontier_batched(
             gbat, delta=self._shape[2], bucket=cfg.bucket,
@@ -310,11 +341,19 @@ class ContinuousScheduler:
             tri_capacity=self._tcap)
         self._tcap = tri_bat.shape[1]
         trace.sync()
+        wall_ms = (time.perf_counter() - wall_t0) * 1e3
+        self.stats["boundary_ms"] += wall_ms
+        self._m_boundary.inc(wall_ms)
         trace.dispatch(
             kind="seed", bucket=fbat.path.shape[1], cyc_cap=0, budget=0,
             rounds=0, status="RUN", enter_count=int(ntrips.sum()),
             exit_count=int(ntrips.sum()), t_ms=trace.toc_ms(), launches=2,
-            lanes=self.pool.slots, live_lanes=live, admitted=admitted)
+            lanes=self.pool.slots, live_lanes=live, admitted=admitted,
+            wall_ms=wall_ms, lane_rids=tuple(r.rid for r in reqs))
+        if self._spans.enabled and reqs:
+            t_end = self._spans.now_ms()
+            for r in reqs:
+                self._spans.add("seed", r.rid, t_end - wall_ms, wall_ms)
         tri_h = np.asarray(tri_bat) if cfg.store else None
         return fbat, ntris, ntrips, tri_h
 
@@ -330,10 +369,16 @@ class ContinuousScheduler:
         req.t_admit = now
         self.pool.admit(lane, req, limit=limit, n0=int(n0),
                         n_tri=int(n_tri), tri_chunk=chunk)
-        self.stats["admissions"] += 1
+        self._bump("admissions")
         # untimed queues arrive at t=0, so the wait is time spent behind
         # earlier admissions — the same convention the legacy path reports
-        self.stats["queue_wait_ms"].append(round(req.queue_wait_s * 1e3, 3))
+        wait_ms = req.queue_wait_s * 1e3
+        self.stats["queue_wait_ms"].append(round(wait_ms, 3))
+        self._h_wait.observe(wait_ms, sched="recycle")
+        if self._spans.enabled and req.rid:
+            self._spans.add("queue_wait", req.rid,
+                            self._span_ms(req.t_arrival), wait_ms,
+                            lane=lane)
 
     def _admit(self, pending, now: float) -> None:
         """Deal arrived same-class requests into the free lanes, re-seeding
@@ -360,8 +405,9 @@ class ContinuousScheduler:
         g_new = self._stacked(
             [by_lane[i].graph if i in by_lane else filler_g
              for i in range(B)], rows)
-        f_new, ntris, ntrips, tri_h = self._seed(g_new, live=len(
-            self.pool.occupied_lanes()) + len(reqs), admitted=len(reqs))
+        f_new, ntris, ntrips, tri_h = self._seed(
+            g_new, live=len(self.pool.occupied_lanes()) + len(reqs),
+            admitted=len(reqs), reqs=reqs)
         new_cap = f_new.path.shape[1]
         if new_cap > self._cap:
             # an incoming lane outgrew the pool bucket: pre-grow the
@@ -381,19 +427,31 @@ class ContinuousScheduler:
         rplan = self.service._recycle_plan(
             n_pad, m_pad, self._cap, self._cyc_cap, self._nw, d_pad,
             self._cfg, B)
+        wall_t0 = time.perf_counter()
         self._trace.tic()
         self._gbat, self._fbat, self._bufbat = rplan(
             jnp.asarray(admit), jnp.asarray(clear), self._gbat, self._fbat,
             self._bufbat, g_new, f_new)
         self._trace.sync()
+        merge_ms = (time.perf_counter() - wall_t0) * 1e3
         self._bc_h[admit | clear] = 0
         for lane, r in zip(lanes, reqs):
             self._seat(lane, r, ntrips[lane], ntris[lane], tri_h, now)
-        self._boundary_event(admitted=len(reqs), t_ms=self._trace.toc_ms())
+        if self._spans.enabled:
+            t_end = self._spans.now_ms()
+            for lane, r in zip(lanes, reqs):
+                self._spans.add("recycle", r.rid, t_end - merge_ms,
+                                merge_ms, lane=lane)
+        self._boundary_event(admitted=len(reqs),
+                             t_ms=self._trace.toc_ms(), wall_ms=merge_ms)
 
-    def _boundary_event(self, *, admitted: int, t_ms: float = 0.0) -> None:
+    def _boundary_event(self, *, admitted: int, t_ms: float = 0.0,
+                        wall_ms: float = 0.0) -> None:
         retired = self._retired_since_event
         self._retired_since_event = 0
+        if wall_ms:
+            self.stats["boundary_ms"] += wall_ms
+            self._m_boundary.inc(wall_ms)
         self._trace.dispatch(
             kind="recycle", bucket=self._cap, cyc_cap=self._cyc_cap,
             budget=0, rounds=0, status="RUN",
@@ -401,8 +459,12 @@ class ContinuousScheduler:
             launches=1 if admitted else 0,
             lanes=self.pool.slots,
             live_lanes=len(self.pool.occupied_lanes()),
-            retired=retired, admitted=admitted)
-        self.stats["boundaries"] += 1
+            retired=retired, admitted=admitted, wall_ms=wall_ms,
+            lane_rids=tuple(r.rid if r is not None else ""
+                            for r in self.pool.req),
+            lane_rounds=tuple(int(v) for v in self.pool.its))
+        self._g_live.set(len(self.pool.occupied_lanes()))
+        self._bump("boundaries")
 
     # -- the superstep dispatch -------------------------------------------
 
@@ -421,8 +483,9 @@ class ContinuousScheduler:
         k_i = np.where(active, np.minimum(cfg.superstep_rounds,
                                           pool.limits - pool.its), 0)
         occ = pool.occupied_lanes()
-        self.stats["supersteps"] += 1
+        self._bump("supersteps")
         self.stats["occupancy_sum"] += len(occ) / B
+        self._g_live.set(len(occ))
 
         n_pad, m_pad, d_pad = self._shape
         plan = self.service._wave_plan(n_pad, m_pad, self._cap,
@@ -443,14 +506,26 @@ class ContinuousScheduler:
         lane_statuses = {int(status_h[i]) for i in occ}
         agg = next((s for s in (_DRAIN, _GROW, _SHRINK, _RUN, _DONE)
                     if s in lane_statuses), _RUN)
+        step_ms = trace.toc_ms()
         trace.dispatch(
             kind="batch", bucket=cap_in, cyc_cap=self._cyc_cap,
             budget=int(k_i.max()), rounds=int(np.asarray(r_h).max()),
             status=STATUS_NAMES[agg], enter_count=live_in,
             exit_count=int(sum(int(cnt_h[i]) for i in occ)),
             cyc_fill=int(sum(int(bc_h[i]) for i in occ)),
-            t_ms=trace.toc_ms(), fresh=fresh,
-            lanes=B, live_lanes=len(occ))
+            t_ms=step_ms, fresh=fresh, plan_key=str(plan.key),
+            lanes=B, live_lanes=len(occ),
+            lane_rids=tuple(r.rid if r is not None else ""
+                            for r in pool.req),
+            lane_rounds=tuple(int(pool.its[i]) + int(r_h[i])
+                              for i in range(B)))
+        if self._spans.enabled:
+            t_end = self._spans.now_ms()
+            for i in occ:
+                self._spans.add(
+                    "superstep", pool.req[i].rid, t_end - step_ms, step_ms,
+                    lane=i, wave=int(pool.its[i]) + int(r_h[i]),
+                    rounds=int(r_h[i]))
 
         for i in occ:
             for j in range(int(r_h[i])):
@@ -507,17 +582,20 @@ class ContinuousScheduler:
         finished = pool.finished_lanes()
         if not finished:
             return
-        now = self._now()
         masks_h = None
+        drain_t0 = self._spans.now_ms() if self._spans.enabled else 0.0
         if cfg.store and any(self._bc_h[i] for i in finished):
             masks_h = np.asarray(self._bufbat.masks)
             self._trace.sync()
+        now = self._now()
         for i in finished:
+            drained = False
             if cfg.store and self._bc_h[i]:
                 pool.chunks[i].append(
                     masks_h[i, :int(self._bc_h[i])].copy())
                 self._trace.drain()
                 self._bc_h[i] = 0
+                drained = True
                 # the device-side count stays stale until the admission
                 # merge clears it; rows beyond the host mirror are never
                 # re-flushed because retirement is the only reader
@@ -526,10 +604,22 @@ class ContinuousScheduler:
             self._done.append((req, state))
             self._relaunches = 0
             self._retired_since_event += 1
-            self.stats["retirements"] += 1
-            self.stats["completed"] += 1
+            self._bump("retirements")
+            self._bump("completed")
             self.stats["n_cycles"] += state["n_cycles"]
-            self.stats["e2e_ms"].append(round(req.e2e_s * 1e3, 3))
+            e2e = req.e2e_s * 1e3
+            self.stats["e2e_ms"].append(round(e2e, 3))
+            self._h_e2e.observe(e2e, sched="recycle")
+            if self._spans.enabled and req.rid:
+                t_done_ms = self._span_ms(req.t_done)
+                if drained:
+                    self._spans.add("drain", req.rid, drain_t0,
+                                    max(t_done_ms - drain_t0, 0.0), lane=i)
+                self._spans.add("retire", req.rid, t_done_ms, 0.0, lane=i,
+                                rounds=state["iterations"])
+                self._spans.add("request", req.rid,
+                                self._span_ms(req.t_arrival), e2e, lane=i,
+                                idx=req.idx, cls=req.cls)
             yield req.idx, self._render(req, state)
 
     def _render(self, req: LaneRequest, state: dict) -> EnumerationResult:

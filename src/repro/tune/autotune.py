@@ -123,7 +123,7 @@ class AutoTuner:
                  model: CostModel | None = None,
                  space: TuneSpace | None = None,
                  trials: int = 0, objective: str = "warm",
-                 device_kind: str | None = None):
+                 device_kind: str | None = None, metrics=None):
         self.store = store if store is not None else TuneStore()
         self.model = model if model is not None else CostModel()
         self.space = space if space is not None else TuneSpace()
@@ -132,6 +132,14 @@ class AutoTuner:
         self._device_kind = device_kind
         self._counters = dict(searches=0, candidates_scored=0, trials_run=0,
                               warm_hits=0, lookup_misses=0, observations=0)
+        # optional repro.obs.MetricsRegistry: every counter double-writes
+        # as tune_<name>_total (the dict stays the legacy stats() view)
+        self._metrics = metrics
+
+    def _bump(self, name: str, n: int = 1) -> None:
+        self._counters[name] += n
+        if self._metrics is not None:
+            self._metrics.counter(f"tune_{name}_total").inc(n)
 
     # -- identity --------------------------------------------------------
 
@@ -170,18 +178,18 @@ class AutoTuner:
         """Stored admission slot count for a sched key, or ``default``."""
         knobs = self.store.get(key)
         if knobs is None:
-            self._counters["lookup_misses"] += 1
+            self._bump("lookup_misses")
             return default
-        self._counters["warm_hits"] += 1
+        self._bump("warm_hits")
         return int(knobs.get("slots", default or 0)) or default
 
     def lookup(self, key: TuneKey, cfg):
         """Stored tuned config for ``key`` (no search, no trace), or None."""
         knobs = self.store.get(key)
         if knobs is None:
-            self._counters["lookup_misses"] += 1
+            self._bump("lookup_misses")
             return None
-        self._counters["warm_hits"] += 1
+        self._bump("warm_hits")
         return self.apply(knobs, cfg)
 
     @staticmethod
@@ -210,7 +218,7 @@ class AutoTuner:
         model first; ``measure(cfg) -> ms`` enables measured trials of the
         model's top candidates. With ``key``, the winner is persisted.
         """
-        self._counters["searches"] += 1
+        self._bump("searches")
         if traces:
             self.model.fit(traces)
         candidates = self.space.knob_sets(base_cfg)
@@ -219,7 +227,7 @@ class AutoTuner:
                                objective=self.objective), i, kn)
              for i, kn in enumerate(candidates)),
             key=lambda t: (t[0], t[1]))
-        self._counters["candidates_scored"] += len(scored)
+        self._bump("candidates_scored", len(scored))
         source, best_ms, best = "model", scored[0][0], scored[0][2]
         if measure is not None and self.trials > 0:
             # never TIME an infeasible candidate: a config that drops
@@ -233,7 +241,7 @@ class AutoTuner:
             for kn in pool:
                 ms = float(measure(self.apply(kn, base_cfg)))
                 timed.append((ms, kn))
-                self._counters["trials_run"] += 1
+                self._bump("trials_run")
             best_ms, best = min(timed, key=lambda t: t[0])
             source = "measured"
         if key is not None:
@@ -256,7 +264,7 @@ class AutoTuner:
         model, so the default slot count is returned unsearched."""
         if not profile.lane_t:
             return int(self.space.admit_slots[0])
-        self._counters["searches"] += 1
+        self._bump("searches")
         if traces:
             self.model.fit(traces)
         scored = sorted(
@@ -264,7 +272,7 @@ class AutoTuner:
                                      objective=self.objective), s)
              for s in self.space.admit_slots),
             key=lambda t: (t[0], t[1]))
-        self._counters["candidates_scored"] += len(scored)
+        self._bump("candidates_scored", len(scored))
         best_ms, best = scored[0]
         if key is not None:
             self.store.put(key, {"slots": int(best)}, meta=dict(
@@ -300,7 +308,7 @@ class AutoTuner:
         path profiles its per-lane histories into one lane-aware
         ``WaveProfile`` (``from_batch``) and hands it here; the lane-aware
         replay twin then scores candidates with lane-padded occupancy."""
-        self._counters["observations"] += 1
+        self._bump("observations")
         return self.tune(profile, base_cfg, key=key, traces=traces,
                          measure=measure)
 

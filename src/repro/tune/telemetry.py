@@ -62,9 +62,24 @@ class TraceEvent:
     pending_cyc: int           # aborted round's exact |C| (DRAIN) or 0
     cyc_fill: int              # CycleBuffer fill on exit
     t_ms: float                # host wall time of the dispatch (incl. sync)
+    t_start_ms: float = 0.0    # dispatch start on the recorder clock (ms
+    #                            since the trace origin — the service passes
+    #                            ONE origin to every recorder + the span
+    #                            log, so events/spans share a timeline)
+    wall_ms: float = 0.0       # host wall time of the FULL boundary this
+    #                            event closes (staging + padding + dispatch
+    #                            + merge) — seed/recycle events only; the
+    #                            boundary overhead t_ms alone was blind to
+    #                            (the PR-7 small-scale loss), rolled up as
+    #                            the boundary_ms_total metric
     fresh: bool = False        # first execution of a fresh program (t_ms
     #                            includes trace+compile; the cost-model fit
     #                            separates these from warm dispatches)
+    plan_key: str = ""         # stable identity of the compiled program
+    #                            (str(PlanKey)) — distinguishes a cold
+    #                            compile of a NEW key from a re-trace of
+    #                            one that already ran warm (FlightRecorder
+    #                            warm_retrace trigger)
     # --- sharded dispatches ('dist' / 'deal' events) only ----------------
     ndev: int = 0              # devices the dispatch spanned (0: unsharded;
     #                            row-work terms scale by max(ndev, 1))
@@ -83,6 +98,13 @@ class TraceEvent:
     #                            flushed to their callers)
     admitted: int = 0          # queued requests re-dealt into freed lanes
     #                            at this boundary (without retracing)
+    lane_rids: tuple = ()      # per-lane request id riding the dispatch
+    #                            ("" for free lanes) — the attribution that
+    #                            turns a dispatch stream into per-request
+    #                            spans (repro.obs, DESIGN.md §6.10)
+    lane_rounds: tuple = ()    # per-lane rounds applied this dispatch (the
+    #                            per-lane slice of ``rounds``, which is the
+    #                            max across lanes)
 
     @property
     def rounds_attempted(self) -> int:
@@ -117,9 +139,17 @@ class WaveTrace:
     """
 
     __slots__ = ("enabled", "events", "n_dispatches", "n_host_syncs",
-                 "n_bucket_transitions", "n_drains", "by_cause", "_t0")
+                 "n_bucket_transitions", "n_drains", "by_cause", "_t0",
+                 "_origin", "_ticked", "observer")
 
-    def __init__(self, enabled: bool = True):
+    def __init__(self, enabled: bool = True, origin: float | None = None,
+                 observer=None):
+        """``origin`` is the perf_counter epoch ``t_start_ms`` is relative
+        to (the service passes one shared epoch so every recorder — and the
+        span log — lands on a single timeline). ``observer`` is called with
+        each TraceEvent as it is recorded (the flight-recorder hook); an
+        observer forces event CONSTRUCTION but not retention, so a bounded
+        ring can watch a run whose full trace is off."""
         self.enabled = enabled
         self.events: list[TraceEvent] = []
         self.n_dispatches = 0
@@ -128,6 +158,9 @@ class WaveTrace:
         self.n_drains = 0
         self.by_cause: dict[str, int] = {}
         self._t0 = 0.0
+        self._origin = time.perf_counter() if origin is None else origin
+        self._ticked = False
+        self.observer = observer
 
     # -- timing ----------------------------------------------------------
 
@@ -135,6 +168,7 @@ class WaveTrace:
         """Mark the start of a dispatch (cheap even when disabled — the
         wall time also feeds the fitted cost model)."""
         self._t0 = time.perf_counter()
+        self._ticked = True
 
     def toc_ms(self) -> float:
         return (time.perf_counter() - self._t0) * 1e3
@@ -161,25 +195,42 @@ class WaveTrace:
                  enter_count: int = 0, exit_count: int = 0,
                  pending_new: int = 0, pending_cyc: int = 0,
                  cyc_fill: int = 0, t_ms: float = 0.0,
-                 fresh: bool = False, launches: int = 1, ndev: int = 0,
+                 fresh: bool = False, plan_key: str = "",
+                 launches: int = 1, ndev: int = 0,
                  per_device=(), moved: int = 0, lost: int = 0,
                  lanes: int = 0, live_lanes: int = 0, retired: int = 0,
-                 admitted: int = 0) -> None:
+                 admitted: int = 0, wall_ms: float = 0.0, lane_rids=(),
+                 lane_rounds=(), t_start_ms: float | None = None) -> None:
         self.n_dispatches += launches
         self.by_cause[status] = self.by_cause.get(status, 0) + 1
-        if not self.enabled:
+        if not self.enabled and self.observer is None:
+            self._ticked = False
             return
-        self.events.append(TraceEvent(
+        if t_start_ms is None:
+            # the matching tic() marked the dispatch start; un-tic'd events
+            # (boundary markers without a timed section) stamp "now"
+            base = self._t0 if self._ticked else time.perf_counter()
+            t_start_ms = (base - self._origin) * 1e3
+        self._ticked = False
+        ev = TraceEvent(
             kind=kind, bucket=bucket, cyc_cap=cyc_cap, budget=budget,
             rounds=rounds, status=status, t_sizes=tuple(int(t) for t in t_sizes),
             c_counts=tuple(int(c) for c in c_counts),
             enter_count=int(enter_count), exit_count=int(exit_count),
             pending_new=int(pending_new), pending_cyc=int(pending_cyc),
-            cyc_fill=int(cyc_fill), t_ms=float(t_ms), fresh=bool(fresh),
+            cyc_fill=int(cyc_fill), t_ms=float(t_ms),
+            t_start_ms=float(t_start_ms), wall_ms=float(wall_ms),
+            fresh=bool(fresh), plan_key=str(plan_key),
             ndev=int(ndev), per_device=tuple(int(x) for x in per_device),
             moved=int(moved), lost=int(lost), lanes=int(lanes),
             live_lanes=int(live_lanes), retired=int(retired),
-            admitted=int(admitted)))
+            admitted=int(admitted),
+            lane_rids=tuple(str(r) for r in lane_rids),
+            lane_rounds=tuple(int(r) for r in lane_rounds))
+        if self.enabled:
+            self.events.append(ev)
+        if self.observer is not None:
+            self.observer(ev)
 
     # -- summaries -------------------------------------------------------
 
@@ -210,6 +261,8 @@ class WaveTrace:
         return out
 
 
-def disabled_trace() -> WaveTrace:
-    """A counters-only recorder (no event retention)."""
-    return WaveTrace(enabled=False)
+def disabled_trace(origin: float | None = None,
+                   observer=None) -> WaveTrace:
+    """A counters-only recorder (no event retention; an ``observer`` still
+    sees each event flow past — the flight-recorder path)."""
+    return WaveTrace(enabled=False, origin=origin, observer=observer)
