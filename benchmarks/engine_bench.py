@@ -493,10 +493,9 @@ def dist_smoke(out_path: str | None = None):
     import subprocess
     import sys
 
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
-               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
+    from repro.launch.env import host_sim_env
+    env = host_sim_env(4, src_path=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
     out = subprocess.run([sys.executable, "-c", _DIST_SMOKE_CODE], env=env,
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]

@@ -18,7 +18,10 @@ Sections:
 dispatch per round on the traced jaxpr plus the fused-vs-split A/B
 (→ results/BENCH_fused_smoke.json) — the sustained-traffic serving A/B
 (lane recycling vs wave-at-a-time, >=1.5x ms/graph asserted,
-→ results/BENCH_serve_smoke.json) — plus the engine A/B JSON emission on
+→ results/BENCH_serve_smoke.json) — the 2-level hierarchical-mesh A/B
+(flat 8-dev vs 2×4 host×device vs EF-compressed cross-host wire, equal
+counts/histories + >=4x cross-host byte reduction asserted,
+→ results/BENCH_multihost_smoke.json) — plus the engine A/B JSON emission on
 the two smallest graphs, asserting the wave engine's warm us/round beats
 the host engine on every smoke graph class. ``--nightly`` runs the paper's footnote-scale
 Grid_7x10 + Grid_8x10 count-only targets via the wave engine, the
@@ -125,6 +128,18 @@ def check() -> int:
                 if b:
                     cmp(f"dist[{fresh['arm']}]", fresh["t_warm_ms"],
                         b["t_warm_ms"])
+        base = _load_baseline("BENCH_multihost_smoke.json")
+        if base:
+            print("== check: 2-level hierarchical mesh (warm ms) ==")
+            from . import dist_enum
+            doc = dist_enum.multihost_smoke(
+                out_path=os.path.join(tmp, "multihost.json"))
+            by_arm = {r["arm"]: r for r in base["rows"]}
+            for fresh in doc["rows"]:
+                b = by_arm.get(fresh["arm"])
+                if b:
+                    cmp(f"multihost[{fresh['arm']}]", fresh["t_warm_ms"],
+                        b["t_warm_ms"])
         base = _load_baseline("BENCH_batch_smoke.json")
         if base:
             print("== check: batched pallas (ms/graph) ==")
@@ -197,6 +212,9 @@ def main() -> None:
         print("\n== sustained serving (lane recycling vs wave-at-a-time) ==")
         from . import serve_bench
         serve_bench.serve_smoke()
+        print("\n== 2-level hierarchical mesh (flat vs 2x4 vs compressed) ==")
+        from . import dist_enum
+        dist_enum.multihost_smoke()
         print("\n== observability export (metrics + perfetto schema) ==")
         serve_bench.obs_smoke()
         print("\n== engine A/B (smoke subset) ==")

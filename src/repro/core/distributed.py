@@ -31,11 +31,31 @@ REFUSES the donation (give = 0) — live rows are never dropped by balancing
 (``lost`` is a defensive counter that must stay 0; conservation is
 property-tested).
 
+Two-level meshes (DESIGN.md §7): with ``cfg.host_axis`` set the frontier
+shards over a ``(host, device)`` mesh — real multi-process or simulated via
+``--xla_force_host_platform_device_count`` (``launch/env.py``) — and the
+superstep becomes TIERED:
+
+* termination psums nest hierarchically (``psum`` over the device axis,
+  then over the host axis);
+* diffusion runs on the cheap device ring every ``balance_every`` rounds,
+  and on the expensive host ring only every ``cross_balance_every``-th
+  balance round, gated additionally by the cross-tier mean load;
+* with ``compress_cross_host`` the cross-host hop ships a COMPRESSED wire:
+  the mean-load signal goes through ``dist.collectives.ef_psum_tree``
+  (int8 wire, error-feedback residual carried in the loop state) and
+  donated rows ship as bit-packed paths + ``ef_quantize``d endpoint ids
+  (exact for n ≤ 127), with ``blocked``/``l2`` reconstructed receiver-side
+  from the chordless-path invariant. Row counts and backpressure stay
+  exact int32, so compression never loses rows (``lost`` stays 0).
+
 Compilation and buffer donation are owned by ``core.plan.DistPlan``
 (``kind='dist'`` plans in the same ProgramCache the wave path warms);
 request routing and autotuning by ``core.service.CycleService`` —
 mesh-routed requests resolve ``superstep_rounds`` / ``local_capacity`` /
-``balance_every`` through ``repro.tune`` like single-device requests do.
+``balance_every`` (and, on 2-level meshes, ``cross_balance_every`` /
+``compress_cross_host``) through ``repro.tune`` like single-device
+requests do.
 
 Fault tolerance: the sharded frontier + counters form a pytree —
 ``checkpoint.save_pytree`` snapshots it at superstep boundaries; a restart
@@ -60,11 +80,19 @@ from .engine import STATUS_NAMES, EngineConfig, EnumerationResult
 from .frontier import Frontier
 from . import expand as E
 from . import triplets as T
+from ..dist.collectives import ef_psum_tree, ef_quantize
+from ..dist import sharding as SH
 from ..tune.telemetry import disabled_trace
 
 # sharded supersteps exit RUN (round budget spent) or DONE (wave died);
 # codes index telemetry.STATUSES like the single-device engine's.
 _RUN, _DONE = 0, 1
+
+# counter columns of the sharded superstep's per-device accumulator
+# (``counters`` below): cycles found, rows dropped (compaction overflow +
+# balance loss), rows moved by intra-host diffusion, rows moved by the
+# cross-host hop, and the defensive receiver-overflow counter.
+_N_COUNTERS = 5
 
 
 def as_engine_config(mesh: Mesh, axis: str, cfg: EngineConfig | None,
@@ -96,9 +124,31 @@ def as_engine_config(mesh: Mesh, axis: str, cfg: EngineConfig | None,
     return out
 
 
-def _fspec(axis: str) -> Frontier:
-    return Frontier(path=P(axis), blocked=P(axis), v1=P(axis), l2=P(axis),
-                    vlast=P(axis), count=P(axis))
+def _row_axes(cfg: EngineConfig) -> tuple[str, ...]:
+    """Mesh axes the frontier's row dim shards over — (host, device) on a
+    2-level config, the flat data axis otherwise."""
+    return (cfg.host_axis, cfg.axis) if cfg.host_axis else (cfg.axis,)
+
+
+def _fspec(mesh: Mesh, row_axes: tuple[str, ...]) -> Frontier:
+    """Frontier PartitionSpec pytree, resolved through the logical-axis
+    rules (``dist.sharding``): rows shard over every tier of ``row_axes``,
+    bitset words replicate."""
+    rules = dict(SH.DEFAULT_RULES, frontier_rows=tuple(row_axes),
+                 mask_words=())
+    rows = SH.logical_to_spec(("frontier_rows",), rules, mesh)
+    return Frontier(path=rows, blocked=rows, v1=rows, l2=rows,
+                    vlast=rows, count=rows)
+
+
+def _psum_tiers(x, axis: str, host_axis: str | None):
+    """Hierarchical reduction: the device tier first, then the host tier
+    (one nested psum per mesh level; collapses to a plain psum on flat
+    meshes)."""
+    x = jax.lax.psum(x, axis)
+    if host_axis:
+        x = jax.lax.psum(x, host_axis)
+    return x
 
 
 def _local_step(g: BitsetGraph, f: Frontier, delta: int, cap: int,
@@ -162,6 +212,101 @@ def _donate(f: Frontier, give: jnp.ndarray, block: int, axis: str,
     return f2, k, lost
 
 
+def _onehot_rows(v: jnp.ndarray, nw: int) -> jnp.ndarray:
+    """(len(v), nw) uint32 masks with bit ``v`` set per row."""
+    wi = (v // 32)[:, None]
+    return jnp.where(jnp.arange(nw)[None, :] == wi,
+                     jnp.uint32(1) << (v % 32).astype(jnp.uint32)[:, None],
+                     jnp.uint32(0))
+
+
+def _donate_compressed(g: BitsetGraph, f: Frontier, give: jnp.ndarray,
+                       block: int, axis: str, axis_size: int,
+                       id_err: jnp.ndarray):
+    """Cross-host donation over a COMPRESSED wire (DESIGN.md §7).
+
+    The chordless-path invariant makes most of a frontier row redundant on
+    the wire: ``blocked`` is ∪ Adj(v) over the path's INTERNAL vertices
+    (path minus v1/vlast — the exact set ``expand`` accumulated it from),
+    and ``l2`` is the label of the unique path vertex adjacent to ``v1``
+    (every vertex after v2 was admitted through ``~closes``, so exactly one
+    path member neighbors v1). So only the bit-packed path (⌈n/8⌉ bytes)
+    and the two endpoint ids cross the slow link — int8 via ``ef_quantize``
+    against a static unit scale, exact for n ≤ 127 (|round(v) − v| = 0 for
+    integer v ≤ 127), with the residuals carried by the caller in the loop
+    state and provably zero. The receiver rebuilds ``blocked``/``l2`` from
+    its replicated graph, bit-identically to what ``_donate`` would have
+    shipped: ≈(8·nw+12)/(⌈n/8⌉+2)× less cross-host traffic per row.
+
+    The row counter ``k`` and the append path stay exact int32 —
+    backpressure (and so ``lost == 0``) is preserved under compression.
+
+    Returns (f', moved, lost, id_err').
+    """
+    cap = f.capacity
+    nw = f.n_words
+    n = g.labels.shape[0]
+    nb = (n + 7) // 8
+    cnt = f.count
+    k = jnp.minimum(jnp.where(give > 0, block, 0), cnt).astype(jnp.int32)
+    start = cnt - k
+    idx = (start + jnp.arange(block, dtype=jnp.int32)) % jnp.maximum(cap, 1)
+    perm = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    send = lambda x: jax.lax.ppermute(x, axis, perm)
+
+    # pack: explicit byte extraction (endian-free; path bits ≥ n are 0, so
+    # slicing to nb bytes is lossless)
+    sh8 = jnp.uint32(8) * jnp.arange(4, dtype=jnp.uint32)
+    by = ((f.path[idx][:, :, None] >> sh8[None, None, :])
+          & jnp.uint32(0xFF))
+    by = by.reshape(block, nw * 4)[:, :nb].astype(jnp.uint8)
+    unit = jnp.float32(1.0)
+    qv1, _, e1 = ef_quantize(f.v1[idx].astype(jnp.float32), id_err[0],
+                             scale=unit)
+    qvl, _, e2 = ef_quantize(f.vlast[idx].astype(jnp.float32), id_err[1],
+                             scale=unit)
+
+    r_by, r_q1, r_ql, rk = send(by), send(qv1), send(qvl), send(k)
+
+    # receiver: unpack the path, rederive blocked and l2 from the graph
+    full = jnp.zeros((block, nw * 4), jnp.uint32).at[:, :nb].set(
+        r_by.astype(jnp.uint32))
+    w4 = full.reshape(block, nw, 4)
+    r_path = (w4[..., 0] | (w4[..., 1] << jnp.uint32(8))
+              | (w4[..., 2] << jnp.uint32(16))
+              | (w4[..., 3] << jnp.uint32(24)))
+    v1r = r_q1.astype(jnp.int32)
+    vlr = r_ql.astype(jnp.int32)
+    v1c = jnp.clip(v1r, 0, n - 1)
+    vlc = jnp.clip(vlr, 0, n - 1)
+    pa = r_path & g.adj_bits[v1c]  # path ∩ Adj(v1) = {v2} on live rows
+    v2 = E._select_kth_bit(pa, jnp.zeros((block,), jnp.int32))
+    l2r = g.labels[jnp.clip(v2, 0, n - 1)].astype(jnp.int32)
+    internal = r_path & ~_onehot_rows(v1c, nw) & ~_onehot_rows(vlc, nw)
+    vs = jnp.arange(n, dtype=jnp.int32)
+    sel = ((internal[:, vs // 32] >> (vs % 32).astype(jnp.uint32))
+           & jnp.uint32(1)).astype(bool)                     # (block, n)
+    masked = jnp.where(sel[:, :, None], g.adj_bits[None, :, :],
+                       jnp.uint32(0))
+    blockedr = jax.lax.reduce(masked, jnp.uint32(0), jax.lax.bitwise_or,
+                              (1,))
+
+    new_cnt = cnt - k
+    appended = jnp.minimum(rk, cap - new_cnt)
+    lost = rk - appended
+    dest = new_cnt + jnp.arange(block, dtype=jnp.int32)
+    dest = jnp.where(jnp.arange(block) < appended, dest, cap)
+    f2 = Frontier(
+        path=f.path.at[dest].set(r_path, mode="drop"),
+        blocked=f.blocked.at[dest].set(blockedr, mode="drop"),
+        v1=f.v1.at[dest].set(v1r, mode="drop"),
+        l2=f.l2.at[dest].set(l2r, mode="drop"),
+        vlast=f.vlast.at[dest].set(vlr, mode="drop"),
+        count=new_cnt + appended,
+    )
+    return f2, k, lost, jnp.stack([e1, e2])
+
+
 def _balance(f: Frontier, block: int, axis: str, axis_size: int, cap: int,
              do_bal: jnp.ndarray):
     """One diffusion step with receiver backpressure.
@@ -189,6 +334,55 @@ def _balance(f: Frontier, block: int, axis: str, axis_size: int, cap: int,
     return jax.lax.cond(do_bal, run, skip, f)
 
 
+def _cross_balance(g: BitsetGraph, f: Frontier, block: int, host_axis: str,
+                   host_size: int, cap: int, do_cross: jnp.ndarray,
+                   compress: bool, ef):
+    """One cross-host diffusion step (the expensive tier; DESIGN.md §7).
+
+    Same give rule on the host ring as ``_balance`` on the device ring,
+    plus a mean-load gate: donate only when this shard is above the
+    cross-tier mean — the global signal that keeps the slow hop quiet when
+    imbalance is purely local. In compressed mode the mean arrives through
+    ``ef_psum_tree`` (int8 on the wire; the error-feedback residual rides
+    ``ef`` across loop rounds, so the quantization error telescopes
+    instead of accumulating) and donated rows ship through
+    ``_donate_compressed``. The neighbor count and the row counter stay
+    exact int32, so receiver backpressure — and therefore ``lost == 0`` —
+    holds under compression: compression can never lose rows.
+
+    ``ef = dict(psum_err=f32[], id_err=f32[2, block])``.
+    Returns (f', moved, lost, ef').
+    """
+
+    def run(args):
+        f, ef = args
+        cnt = f.count
+        perm_rev = [((i + 1) % host_size, i) for i in range(host_size)]
+        rcnt = jax.lax.ppermute(cnt, host_axis, perm_rev)
+        cntf = cnt.astype(jnp.float32)
+        if compress:
+            mean, psum_err = ef_psum_tree(cntf, ef["psum_err"], host_axis)
+        else:
+            mean = jax.lax.psum(cntf, host_axis) / host_size
+            psum_err = ef["psum_err"]
+        give = ((cntf > mean + block) & (cnt > rcnt + block)
+                & (cap - rcnt >= block)).astype(jnp.int32)
+        if compress:
+            f2, k, lost, id_err = _donate_compressed(
+                g, f, give, block, host_axis, host_size, ef["id_err"])
+        else:
+            f2, k, lost = _donate(f, give, block, host_axis, host_size)
+            id_err = ef["id_err"]
+        return (f2, dict(psum_err=psum_err, id_err=id_err)), k, lost
+
+    def skip(args):
+        f, ef = args
+        return (f, ef), jnp.int32(0), jnp.int32(0)
+
+    (f2, ef2), moved, lost = jax.lax.cond(do_cross, run, skip, (f, ef))
+    return f2, moved, lost, ef2
+
+
 def make_balance_step(mesh: Mesh, axis: str, cap: int, block: int):
     """One jitted diffusion-balance step over a sharded frontier.
 
@@ -197,7 +391,7 @@ def make_balance_step(mesh: Mesh, axis: str, cap: int, block: int):
     Returns ``step(f) -> (f', moved (ndev,), lost (ndev,))``.
     """
     axis_size = int(mesh.shape[axis])
-    fspec = _fspec(axis)
+    fspec = _fspec(mesh, (axis,))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=(fspec,),
                        out_specs=(fspec, P(axis), P(axis)), check_rep=False)
@@ -215,45 +409,52 @@ def make_balance_step(mesh: Mesh, axis: str, cap: int, block: int):
 # Stage 1: device-side deal
 # ---------------------------------------------------------------------------
 
-def make_dist_deal(mesh: Mesh, axis: str, g_spec, cap: int, delta: int):
+def make_dist_deal(mesh: Mesh, axis: str, g_spec, cap: int, delta: int,
+                   host_axis: str | None = None):
     """Device-side stage 1: jitted triplet flags → rank-mod-ndev deal →
     cumsum-scatter straight into the sharded frontier.
 
     Replaces the host round-robin deal (host nonzero + python loop + H2D of
     every initial row). Each device evaluates the replicated flag grid,
-    keeps the triplets whose rank ≡ its axis index (mod ndev) — the exact
-    rows the host deal would have sent it — and scatters them into its
-    local frontier shard. Triangles are counted by the same rank-sharing
-    trick and ``psum``-reduced.
+    keeps the triplets whose rank ≡ its GLOBAL index (mod ndev; on a
+    2-level mesh the global index is host·D + device) — the exact rows the
+    host deal would have sent it — and scatters them into its local
+    frontier shard. Triangles are counted by the same rank-sharing trick
+    and hierarchically ``psum``-reduced.
 
     Returns the UNJITTED shard_map callable
     ``deal(g) -> (frontier, meta)`` with replicated
     ``meta = [n_triangles, total_live, overflow]``.
     """
-    axis_size = int(mesh.shape[axis])
-    fspec = _fspec(axis)
+    dev_size = int(mesh.shape[axis])
+    host_size = int(mesh.shape[host_axis]) if host_axis else 1
+    ndev = dev_size * host_size
+    row_axes = (host_axis, axis) if host_axis else (axis,)
+    fspec = _fspec(mesh, row_axes)
 
     @functools.partial(shard_map, mesh=mesh, in_specs=(g_spec,),
                        out_specs=(fspec, P()), check_rep=False)
     def deal(g):
         me = jax.lax.axis_index(axis)
+        if host_axis:
+            me = me + dev_size * jax.lax.axis_index(host_axis)
         tri, trip = T.triplet_flags(g, delta)
         flat_tri = tri.reshape(-1)
         flat_trip = trip.reshape(-1)
         n_grid = flat_trip.shape[0]
         # deal triplet RANKS round-robin (the host deal's rows % ndev == d)
         rank = jnp.cumsum(flat_trip.astype(jnp.int32)) - 1
-        mine = flat_trip & ((rank % axis_size) == me)
+        mine = flat_trip & ((rank % ndev) == me)
         dest, total = E.compaction_dests(mine, cap)
         idx = jnp.zeros((cap,), jnp.int32).at[dest].set(
             jnp.arange(n_grid, dtype=jnp.int32), mode="drop")
         f = T.gather_triplets(g, idx, jnp.minimum(total, cap), cap)
-        overflow = jax.lax.psum(jnp.maximum(total - cap, 0), axis)
+        overflow = _psum_tiers(jnp.maximum(total - cap, 0), axis, host_axis)
         # triangles: count my round-robin share, psum to the global total
         trank = jnp.cumsum(flat_tri.astype(jnp.int32)) - 1
-        my_tri = (flat_tri & ((trank % axis_size) == me)).sum(dtype=jnp.int32)
-        n_tri = jax.lax.psum(my_tri, axis)
-        live = jax.lax.psum(f.count, axis)
+        my_tri = (flat_tri & ((trank % ndev) == me)).sum(dtype=jnp.int32)
+        n_tri = _psum_tiers(my_tri, axis, host_axis)
+        live = _psum_tiers(f.count, axis, host_axis)
         f = dataclasses.replace(f, count=f.count[None])
         return f, jnp.stack([n_tri, live, overflow])
 
@@ -271,8 +472,12 @@ def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
     One ``shard_map(lax.while_loop)`` program runs up to
     min(k_max, rounds_limit) fused rounds: local slot expansion + in-bucket
     compaction at the fixed ``local_capacity``, a diffusion-balance step
-    every ``balance_every`` rounds (``lax.cond``-gated so the collectives
-    only run on balance rounds), and a per-round ``psum`` of live counts
+    every ``balance_every`` rounds on the device ring (``lax.cond``-gated
+    so the collectives only run on balance rounds), a cross-host donation
+    every ``balance_every × cross_balance_every`` rounds on the host ring
+    (2-level meshes only; optionally EF-compressed, with the error-feedback
+    residuals carried in the while_loop state), and a per-round
+    hierarchical ``psum`` of live counts (device tier, then host tier)
     that is carried into the loop condition — the wave terminates ON DEVICE
     the round the global frontier empties, with no host involvement.
 
@@ -282,8 +487,8 @@ def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
 
     Returns ``superstep(g, f, counters, rounds_limit, round_base) ->
     (f', counters', rounds_done, status, total_hist, cyc_hist, live_hist)``
-    (``round_base`` = rounds completed by earlier supersteps, so the
-    balance cadence runs over the global round index)
+    (``round_base`` = rounds completed by earlier supersteps, so both
+    balance cadences run over the global round index)
     where ``total_hist`` (k_max,) is the replicated per-round global live
     count, and ``cyc_hist`` / ``live_hist`` (ndev, k_max) are the
     per-device per-round cycle counts and live counts (the per-device wave
@@ -292,47 +497,63 @@ def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
     cap = int(cfg.local_capacity)
     block = int(cfg.balance_block)
     every = max(int(cfg.balance_every), 1)
-    axis_size = int(mesh.shape[axis])
-    fspec = _fspec(axis)
+    host_axis = cfg.host_axis
+    dev_size = int(mesh.shape[axis])
+    host_size = int(mesh.shape[host_axis]) if host_axis else 1
+    cross_period = every * max(int(cfg.cross_balance_every), 1)
+    compress = bool(cfg.compress_cross_host)
+    row_axes = (host_axis, axis) if host_axis else (axis,)
+    fspec = _fspec(mesh, row_axes)
+    rspec = fspec.count  # P over the row tiers (per-device outputs)
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(g_spec, fspec, P(axis), P(), P()),
-        out_specs=(fspec, P(axis), P(), P(), P(), P(axis), P(axis)),
+        in_specs=(g_spec, fspec, rspec, P(), P()),
+        out_specs=(fspec, rspec, P(), P(), P(), rspec, rspec),
         check_rep=False)
     def superstep(g, f, counters, rounds_limit, round_base):
         f = dataclasses.replace(f, count=f.count[0])
-        cnts = counters[0]  # (4,) cumulative [cycles, dropped, moved, lost]
+        cnts = counters[0]  # (_N_COUNTERS,) cumulative — see _N_COUNTERS
 
         def cond(c):
-            f, cnts, r, total, th, ch, lh = c
+            f, cnts, r, total, th, ch, lh, ef = c
             return (r < rounds_limit) & (total > 0)
 
         def body(c):
-            f, cnts, r, total, th, ch, lh = c
+            f, cnts, r, total, th, ch, lh, ef = c
             f2, n_cyc, drop = _local_step(g, f, delta, cap,
                                           fused=bool(cfg.fused_round))
-            if axis_size > 1:
+            moved_i = moved_x = lost = jnp.int32(0)
+            if dev_size > 1:
                 # cadence over the GLOBAL round index (round_base carries
                 # the rounds done by earlier supersteps) — the knob means
                 # "every N rounds of the run", not of this dispatch
                 do_bal = ((round_base + r) % every) == (every - 1)
-                f2, moved, lost = _balance(f2, block, axis, axis_size, cap,
-                                           do_bal)
-            else:
-                moved = lost = jnp.int32(0)
-            total = jax.lax.psum(f2.count, axis)
+                f2, moved_i, lost_i = _balance(f2, block, axis, dev_size,
+                                               cap, do_bal)
+                lost = lost + lost_i
+            if host_size > 1:
+                do_x = ((round_base + r) % cross_period) == (cross_period
+                                                             - 1)
+                f2, moved_x, lost_x, ef = _cross_balance(
+                    g, f2, block, host_axis, host_size, cap, do_x,
+                    compress, ef)
+                lost = lost + lost_x
+            total = _psum_tiers(f2.count, axis, host_axis)
             th = th.at[r].set(total)
             ch = ch.at[r].set(n_cyc)
             lh = lh.at[r].set(f2.count)
-            cnts = cnts + jnp.stack([n_cyc, drop + lost, moved, lost])
-            return f2, cnts, r + 1, total, th, ch, lh
+            cnts = cnts + jnp.stack([n_cyc, drop + lost, moved_i, moved_x,
+                                     lost])
+            return f2, cnts, r + 1, total, th, ch, lh, ef
 
         zeros = jnp.zeros((k_max,), jnp.int32)
-        total0 = jax.lax.psum(f.count, axis)
-        f, cnts, r, total, th, ch, lh = jax.lax.while_loop(
+        total0 = _psum_tiers(f.count, axis, host_axis)
+        ef0 = dict(psum_err=jnp.float32(0.0),
+                   id_err=jnp.zeros((2, block), jnp.float32))
+        f, cnts, r, total, th, ch, lh, ef = jax.lax.while_loop(
             cond, body,
-            (f, cnts, jnp.int32(0), total0, zeros, zeros, zeros))
+            (f, cnts, jnp.int32(0), total0, zeros, zeros, zeros, ef0))
         status = jnp.where(total == 0, jnp.int32(_DONE), jnp.int32(_RUN))
         f = dataclasses.replace(f, count=f.count[None])
         return f, cnts[None], r, status, th, ch[None], lh[None]
@@ -345,25 +566,42 @@ def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
 # ---------------------------------------------------------------------------
 
 def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
-                      trace=None, progress=None) -> EnumerationResult:
-    """Count all chordless cycles using every device on ``cfg.axis`` of
-    ``cfg.mesh`` (the CycleService sharded path; cfg validated eagerly to
-    slot/jnp/count-only at construction).
+                      trace=None, progress=None,
+                      metrics=None) -> EnumerationResult:
+    """Count all chordless cycles using every device of ``cfg.mesh`` (the
+    CycleService sharded path; cfg validated eagerly to slot/jnp/count-only
+    at construction). With ``cfg.host_axis`` the mesh is 2-level and the
+    superstep runs tiered (hierarchical psums, intra/cross balancing,
+    optionally EF-compressed cross-host donation).
 
     The host loop relaunches the sharded superstep until the wave dies or
     the |V|−3 budget runs out — one batched readback per superstep, so host
     syncs are O(iterations / superstep_rounds) + O(1). ``cache`` (a
     ``core.plan.ProgramCache``) memoizes the jitted deal + superstep across
     requests on the same mesh/shape; ``trace`` (a ``tune.telemetry
-    .WaveTrace``) records per-dispatch events incl. per-device wave peaks.
+    .WaveTrace``) records per-dispatch events incl. per-device wave peaks
+    and per-tier balance traffic; ``metrics`` (a ``obs.MetricsRegistry``)
+    accumulates the ``dist_comm_bytes`` / ``dist_balance_moved`` per-tier
+    counters.
     """
-    mesh, axis = cfg.mesh, cfg.axis
-    ndev = int(mesh.shape[axis])
+    mesh, axis, host_axis = cfg.mesh, cfg.axis, cfg.host_axis
+    dev_size = int(mesh.shape[axis])
+    host_size = int(mesh.shape[host_axis]) if host_axis else 1
+    ndev = dev_size * host_size
     cap = int(cfg.local_capacity)
+    block = int(cfg.balance_block)
     k_max = int(cfg.superstep_rounds)
+    every = max(int(cfg.balance_every), 1)
+    cross_period = every * max(int(cfg.cross_balance_every), 1)
     delta = max(g.max_degree, 1)
     nw = g.adj_bits.shape[1]
     trace = trace if trace is not None else disabled_trace()
+
+    if cfg.compress_cross_host and host_size > 1 and g.n > 127:
+        raise ValueError(
+            f"compress_cross_host requires n <= 127 (int8 vertex ids are "
+            f"exact there); got n={g.n} — disable compression or split "
+            "the graph")
 
     if g.m == 0:  # edgeless: nothing to deal (flag kernels need neighbors)
         return EnumerationResult(
@@ -371,6 +609,8 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
             history=[dict(step=0, T=0, C=0)], stats=dict(
                 trace.finalize(rounds=0), n_cycles=0, n_triangles=0,
                 iterations=0, dropped=0, moved=0, lost=0, n_devices=ndev,
+                moved_intra=0, moved_cross=0, n_hosts=host_size,
+                comm_bytes_intra=0, comm_bytes_cross=0,
                 per_device_live=[0] * ndev, superstep_rounds=k_max),
             trace=trace if trace.enabled else None)
 
@@ -379,21 +619,24 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
     g_spec = jax.tree_util.tree_map(lambda _: P(), g)
 
     from .plan import DistPlan, PlanKey
+    from ..tune.cost_model import dist_wire_bytes
 
     def _plan(tag, builder, donate=()):
         key = PlanKey(kind="dist", bucket=cap, nw=nw, cyc_rows=0,
                       delta=delta, store=False, formulation=cfg.formulation,
                       backend=cfg.backend, k_max=k_max, batch=ndev,
                       donate=bool(donate), fused=bool(cfg.fused_round),
-                      extra=(tag, mesh, axis, cfg.balance_block,
-                             cfg.balance_every, g.n, g.m))
+                      extra=(tag, mesh, axis, host_axis, cfg.balance_block,
+                             cfg.balance_every, cfg.cross_balance_every,
+                             bool(cfg.compress_cross_host), g.n, g.m))
         if cache is None:
             return DistPlan(key, builder(), donate_argnums=donate)
         return cache.get_or_build(
             key, lambda: DistPlan(key, builder(), donate_argnums=donate))
 
     deal = _plan("deal",
-                 lambda: make_dist_deal(mesh, axis, g_spec, cap, delta))
+                 lambda: make_dist_deal(mesh, axis, g_spec, cap, delta,
+                                        host_axis=host_axis))
     step = _plan("step",
                  lambda: make_dist_superstep(mesh, axis, g_spec, cfg, delta,
                                              k_max),
@@ -413,14 +656,21 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
             f"initial triplets overflow local_capacity={cap} by {overflow} "
             f"rows across {ndev} devices; raise cfg.local_capacity")
 
+    # modeled per-hop wire bytes (the same formula replay_dist charges)
+    row_b, stat_b = dist_wire_bytes(g.n, nw, False)
+    xrow_b, xstat_b = dist_wire_bytes(g.n, nw, bool(cfg.compress_cross_host))
+
     history = [dict(step=0, T=live, C=n_tri)]
     n_cycles = n_tri
-    counters = jax.device_put(np.zeros((ndev, 4), np.int32),
-                              jax.sharding.NamedSharding(mesh, P(axis)))
+    row_axes = (host_axis, axis) if host_axis else (axis,)
+    counters = jax.device_put(
+        np.zeros((ndev, _N_COUNTERS), np.int32),
+        jax.sharding.NamedSharding(mesh, _fspec(mesh, row_axes).count))
     limit = cfg.max_iters if cfg.max_iters is not None else max(g.n - 3, 0)
     it = 0
     next_ckpt = cfg.checkpoint_every or 0
-    prev_moved = prev_lost = 0
+    prev_moved_i = prev_moved_x = prev_lost = 0
+    bytes_intra = bytes_cross = 0
     while it < limit and live > 0:
         k = min(k_max, limit - it)
         fresh = step.n_calls == 0
@@ -446,10 +696,38 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
                 f"(per-device peaks {[int(x) for x in peak_dev]}); raise "
                 "cfg.local_capacity — a count computed past a drop would "
                 "be silently wrong")
-        moved_d = int(c_now[:, 2].sum()) - prev_moved
-        lost_d = int(c_now[:, 3].sum()) - prev_lost
-        prev_moved += moved_d
+        moved_i_d = int(c_now[:, 2].sum()) - prev_moved_i
+        moved_x_d = int(c_now[:, 3].sum()) - prev_moved_x
+        lost_d = int(c_now[:, 4].sum()) - prev_lost
+        prev_moved_i += moved_i_d
+        prev_moved_x += moved_x_d
         prev_lost += lost_d
+        # per-tier balance wire traffic of this dispatch: every device
+        # sends one block-sized hop on each balance round of its tier
+        # (sends are unconditional — static shapes — so cadence, not
+        # ``give``, sets the traffic)
+        n_bal = sum(1 for i in range(it, it + r_h)
+                    if dev_size > 1 and i % every == every - 1)
+        n_crs = sum(1 for i in range(it, it + r_h)
+                    if host_size > 1 and i % cross_period
+                    == cross_period - 1)
+        b_intra = n_bal * ndev * (block * row_b + stat_b)
+        b_cross = n_crs * ndev * (block * xrow_b + xstat_b)
+        bytes_intra += b_intra
+        bytes_cross += b_cross
+        if metrics is not None:
+            if b_intra:
+                metrics.counter("dist_comm_bytes").inc(b_intra,
+                                                       tier="intra")
+            if b_cross:
+                metrics.counter("dist_comm_bytes").inc(b_cross,
+                                                       tier="cross")
+            if moved_i_d:
+                metrics.counter("dist_balance_moved").inc(moved_i_d,
+                                                          tier="intra")
+            if moved_x_d:
+                metrics.counter("dist_balance_moved").inc(moved_x_d,
+                                                          tier="cross")
         trace.dispatch(
             kind="dist", bucket=cap, cyc_cap=0, budget=k, rounds=r_h,
             status=STATUS_NAMES[int(status_h)],
@@ -458,7 +736,9 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
             t_ms=trace.toc_ms(), fresh=fresh, plan_key=str(step.key),
             ndev=ndev,
             per_device=tuple(int(x) for x in peak_dev),
-            moved=moved_d, lost=lost_d)
+            moved=moved_i_d + moved_x_d, lost=lost_d,
+            moved_cross=moved_x_d,
+            comm_bytes_intra=b_intra, comm_bytes_cross=b_cross)
         for i in range(r_h):
             n_cycles += int(ch_round[i])
             rec = dict(step=it + i + 1, T=int(th_h[i]), C=n_cycles)
@@ -481,8 +761,11 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
     stats = trace.finalize(rounds=it)
     stats.update(
         n_cycles=n_cycles, n_triangles=n_tri, iterations=it,
-        dropped=int(c[:, 1].sum()), moved=int(c[:, 2].sum()),
-        lost=int(c[:, 3].sum()), n_devices=ndev,
+        dropped=int(c[:, 1].sum()),
+        moved=int(c[:, 2].sum()) + int(c[:, 3].sum()),
+        moved_intra=int(c[:, 2].sum()), moved_cross=int(c[:, 3].sum()),
+        lost=int(c[:, 4].sum()), n_devices=ndev, n_hosts=host_size,
+        comm_bytes_intra=bytes_intra, comm_bytes_cross=bytes_cross,
         per_device_live=[int(x) for x in np.asarray(live_h)],
         superstep_rounds=k_max)
     return EnumerationResult(

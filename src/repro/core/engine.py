@@ -110,6 +110,20 @@ class EngineConfig:
     checkpoint_every: int = 0      # 0 = off
     checkpoint_dir: str = "/tmp/repro_enum_ckpt"
 
+    # --- 2-level (host, device) mesh (DESIGN.md §7) -----------------------
+    host_axis: str | None = None   # outer mesh axis; non-None selects the
+    # hierarchical superstep: frontier rows shard over (host_axis, axis),
+    # termination psums nest (device tier, then host tier), and balancing
+    # becomes tiered — intra-host diffusion on the device ring every
+    # `balance_every` rounds, cross-host donation on the host ring only
+    # every `cross_balance_every`-th balance round.
+    cross_balance_every: int = 4   # balance rounds between cross-host hops
+    compress_cross_host: bool = False  # EF-int8 compressed cross-host wire
+    # (bit-packed paths + quantized endpoint ids; blocked/l2 are
+    # reconstructed receiver-side from the chordless-path invariant).
+    # Requires n <= 127 so vertex ids are exact in int8 (checked at
+    # enumerate time, where the graph is known).
+
     def __post_init__(self):
         if self.formulation not in FORMULATIONS:
             raise ValueError(
@@ -122,7 +136,8 @@ class EngineConfig:
             raise ValueError(
                 f"unknown engine {self.engine!r}; allowed: {ENGINES}")
         for field in ("growth_bits", "superstep_rounds", "cycle_buffer_rows",
-                      "local_capacity", "balance_block", "balance_every"):
+                      "local_capacity", "balance_block", "balance_every",
+                      "cross_balance_every"):
             if getattr(self, field) < 1:
                 raise ValueError(f"{field} must be >= 1, got "
                                  f"{getattr(self, field)}")
@@ -151,6 +166,21 @@ class EngineConfig:
                     "mesh-sharded enumeration only supports the "
                     "slot/jnp/count-only combination; got "
                     + "; ".join(bad))
+            if self.host_axis is not None:
+                if self.host_axis == self.axis:
+                    raise ValueError(
+                        f"host_axis and axis must differ, both are "
+                        f"{self.axis!r}")
+                missing = [a for a in (self.host_axis, self.axis)
+                           if a not in self.mesh.shape]
+                if missing:
+                    raise ValueError(
+                        f"mesh axes {missing} not in mesh "
+                        f"{dict(self.mesh.shape)}; a 2-level config needs "
+                        "both host_axis and axis on the mesh")
+        elif self.host_axis is not None:
+            raise ValueError("host_axis requires a mesh (2-level sharding "
+                             "is a property of the sharded path)")
 
     def bucket(self, c: int) -> int:
         return _bucket(c, growth_bits=self.growth_bits)

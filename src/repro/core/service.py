@@ -306,7 +306,7 @@ class CycleService:
         if cfg.mesh is not None:
             from .distributed import enumerate_sharded
             res = enumerate_sharded(g, cfg, cache=self._cache, trace=trace,
-                                    progress=progress)
+                                    progress=progress, metrics=self.metrics)
             self._after_run(g, cfg, tkey, observe, trace, res)
             self._request_spans(rid, t_req, trace)
             return res

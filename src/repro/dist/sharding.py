@@ -40,7 +40,32 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "qkv": (),
     "layers": (),
     "gnn": (),
+    # chordless-cycle enumeration (core/distributed, DESIGN.md §5/§7):
+    # frontier and cycle-buffer ROWS shard over every data-parallel tier —
+    # (host, device) on a 2-level mesh, plain "data" on a flat one — while
+    # the bitset words and the (small, replicated) graph never shard.
+    "frontier_rows": ("host", "device", "data"),
+    "cycle_rows": ("host", "device", "data"),
+    "mask_words": (),
+    "graph_nodes": (),
 }
+
+
+def enum_row_axes(mesh: Mesh | None,
+                  rules: Mapping[str, Sequence[str]] | None = None
+                  ) -> tuple[str, ...]:
+    """Mesh axes the enumeration frontier's ROW dim shards over.
+
+    The sharded superstep's PartitionSpecs are derived from the same
+    logical-axis rules as everything else: ``("frontier_rows",)`` resolves
+    to ``("host", "device")`` on a 2-level mesh and ``("data",)`` on a flat
+    one, so ``core/distributed`` never hard-codes mesh axis names.
+    """
+    spec = logical_to_spec(("frontier_rows",), rules, mesh)
+    entry = spec[0] if len(spec) else None
+    if entry is None:
+        return ()
+    return (entry,) if isinstance(entry, str) else tuple(entry)
 
 
 def _is_logical(x: Any) -> bool:

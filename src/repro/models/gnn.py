@@ -138,7 +138,7 @@ def encode_process_decode(params, batch, cfg: GNNConfig, *, mesh=None,
     if remat == "full":
         step = jax.checkpoint(step,
                               policy=jax.checkpoint_policies.nothing_saveable)
-    if unroll:  # exact cost_analysis (scan body costed once — DESIGN.md §7)
+    if unroll:  # exact cost_analysis (scan body costed once — DESIGN.md §8)
         carry = (h, e)
         for i in range(cfg.n_layers):
             lp = jax.tree_util.tree_map(lambda p: p[i], params["proc"])

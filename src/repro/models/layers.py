@@ -84,7 +84,7 @@ def gqa_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
     flash-style running max/sum — peak temp is one block of scores, not
     Sq×Skv (full 32k prefill scores would be ~15 GB/device on unshardable
     head counts). Chunks are PYTHON-unrolled so compiled cost_analysis sees
-    every block (a lax.scan body is costed once — measured, DESIGN.md §7),
+    every block (a lax.scan body is costed once — measured, DESIGN.md §8),
     and fully-masked causal blocks are skipped STATICALLY, so the ~2×
     causal flop saving shows up in the roofline.
     """

@@ -197,7 +197,7 @@ def forward(params, tokens, cfg: LMConfig, *, kv_caches=None, positions=None,
         # every layer appears in the HLO so compiled.cost_analysis() is
         # exact (a scan body is costed ONCE regardless of trip count —
         # measured; the dry-run extrapolates full depth from unrolled 1- and
-        # 2-layer programs, DESIGN.md §7).
+        # 2-layer programs, DESIGN.md §8).
         carry = (x, jnp.float32(0))
         new_ks, new_vs = [], []
         for i in range(cfg.n_layers):

@@ -12,7 +12,9 @@ span set (``obs.spans``) as a Chrome ``trace_event`` JSON document that
                      → seed → superstep… → recycle/retire → drain) under
                      its ``request`` root;
 * pid 3 "engine"   — seed / recycle / deal boundary dispatches;
-* counter tracks   — frontier rows, cycle-ring fill, live lanes;
+* counter tracks   — frontier rows, cycle-ring fill, live lanes, and (for
+                     hierarchical dispatches) per-tier interconnect bytes
+                     and balance-moved rows (intra vs cross series);
 * instant events   — guard trips and bucket GROW / SHRINK / DRAIN
                      transitions.
 
@@ -115,6 +117,18 @@ def to_perfetto(events, spans=(), *, meta: dict | None = None) -> dict:
             te.append({"ph": "C", "name": "live_lanes", "pid": PID_LANES,
                        "tid": 0, "ts": t_end,
                        "args": {"lanes": ev.live_lanes}})
+        if ev.comm_bytes_intra or ev.comm_bytes_cross:
+            # per-tier interconnect traffic of hierarchical dispatches —
+            # one multi-series counter track, intra vs cross stacked
+            te.append({"ph": "C", "name": "dist_comm_bytes",
+                       "pid": PID_LANES, "tid": 0, "ts": t_end,
+                       "args": {"intra": ev.comm_bytes_intra,
+                                "cross": ev.comm_bytes_cross}})
+        if ev.moved or ev.moved_cross:
+            te.append({"ph": "C", "name": "dist_balance_moved",
+                       "pid": PID_LANES, "tid": 0, "ts": t_end,
+                       "args": {"intra": ev.moved - ev.moved_cross,
+                                "cross": ev.moved_cross}})
         if ev.status in ("GROW", "SHRINK", "DRAIN"):
             te.append({"ph": "i", "s": "p",
                        "name": f"guard:{ev.status}", "pid": PID_LANES,

@@ -43,8 +43,12 @@ TUNED_KNOBS = ("superstep_rounds", "growth_bits", "grow_headroom",
 # rows per device, and the diffusion-balance cadence. local_capacity is
 # equivalence-preserving only while nothing overflows — the replay twin's
 # feasibility guard scores risky candidates infinite, and the driver counts
-# any drop it could not prevent.
-DIST_TUNED_KNOBS = ("superstep_rounds", "local_capacity", "balance_every")
+# any drop it could not prevent. The last two axes are 2-level-mesh-only
+# (cross-host balance cadence and EF-compressed wire, DESIGN.md §7) — both
+# equivalence-preserving (placement/encoding only), searched only when the
+# base config names a host_axis.
+DIST_TUNED_KNOBS = ("superstep_rounds", "local_capacity", "balance_every",
+                    "cross_balance_every", "compress_cross_host")
 # the continuous-scheduler knob set (DESIGN.md §6.9). NOT part of ``apply``'s
 # allow-list on purpose: "slots" is a scheduler-layer resource count, not an
 # EngineConfig field — a stored sched entry applied to an engine config must
@@ -75,6 +79,9 @@ class TuneSpace:
     # sharded axes
     local_capacity: tuple = (1 << 12, 1 << 14, 1 << 16)
     balance_every: tuple = (1, 2, 4)
+    # 2-level-mesh axes (searched only when base_cfg.host_axis is set)
+    cross_balance_every: tuple = (1, 2, 4, 8)
+    compress_cross_host: tuple = (False, True)
     # continuous-scheduler axis: admission slot counts (pool lane widths)
     # searched by ``AutoTuner.tune_slots`` via ``CostModel.score_sched``
     admit_slots: tuple = (2, 4, 8)
@@ -86,6 +93,9 @@ class TuneSpace:
             axes = dict(superstep_rounds=self.superstep_rounds,
                         local_capacity=self.local_capacity,
                         balance_every=self.balance_every)
+            if getattr(base_cfg, "host_axis", None):
+                axes["cross_balance_every"] = self.cross_balance_every
+                axes["compress_cross_host"] = self.compress_cross_host
         else:
             axes = dict(superstep_rounds=self.superstep_rounds,
                         growth_bits=self.growth_bits,
@@ -155,12 +165,16 @@ class AutoTuner:
         a power-of-two batch-size class — lane imbalance changes which
         round budget wins, so batched classes tune separately."""
         mesh = getattr(cfg, "mesh", None)
-        ndev = int(mesh.shape[cfg.axis]) if mesh is not None else 0
+        host_axis = getattr(cfg, "host_axis", None)
+        nhost = int(mesh.shape[host_axis]) if mesh is not None and \
+            host_axis else 0
+        ndev = int(mesh.shape[cfg.axis]) * max(nhost, 1) \
+            if mesh is not None else 0
         return TuneKey(shape=shape_class(n, m, delta), store=cfg.store,
                        formulation=cfg.formulation, backend=cfg.backend,
                        engine="dist" if ndev else cfg.engine,
                        device_kind=self.device_kind, ndev=ndev,
-                       batch=_p2(batch) if batch else 0)
+                       batch=_p2(batch) if batch else 0, nhost=nhost)
 
     def key_for_sched(self, n: int, m: int, delta: int, cfg) -> TuneKey:
         """Key for a CONTINUOUS-SCHEDULER entry ({'slots': N}) of one shape
@@ -292,9 +306,11 @@ class AutoTuner:
         peaks from the recorded trace) and replay through the sharded twin."""
         mesh = getattr(base_cfg, "mesh", None)
         if mesh is not None:
+            host_axis = getattr(base_cfg, "host_axis", None)
+            ndev = int(mesh.shape[base_cfg.axis]) * (
+                int(mesh.shape[host_axis]) if host_axis else 1)
             profile = DistProfile.from_run(
-                history, n=n, nw=nw,
-                ndev=int(mesh.shape[base_cfg.axis]), cfg=base_cfg,
+                history, n=n, nw=nw, ndev=ndev, cfg=base_cfg,
                 traces=traces)
         else:
             profile = WaveProfile.from_history(

@@ -181,6 +181,10 @@ class ReplaySummary:
     #                           hold the estimated per-device peak → scored
     #                           infinite, never picked over the base config
     est_peak_device: int = 0  # the guard's per-device peak estimate
+    # two-tier link traffic (2-level meshes; DESIGN.md §7) — modeled wire
+    # bytes of the balance hops, per tier, charged at per-tier bandwidth
+    bytes_intra: int = 0      # intra-host (device-ring) balance bytes
+    bytes_cross: int = 0      # cross-host (host-ring) balance bytes
 
 
 def replay(profile: WaveProfile, cfg, *, recycle: bool = False
@@ -609,6 +613,24 @@ def replay_sched(profile: WaveProfile, cfg, *, slots: int) -> ReplaySummary:
 # Sharded twin (core/distributed.py's superstep driver)
 # ---------------------------------------------------------------------------
 
+def dist_wire_bytes(n: int, nw: int, compress: bool) -> tuple[int, int]:
+    """Modeled wire size of one balance hop: (bytes per donated row,
+    per-round stat overhead per device).
+
+    The SAME formula the sharded driver charges into its per-tier metrics
+    and trace events — replay and reality share one accounting. Exact rows
+    ship path + blocked (nw uint32 words each) + three int32 ids, plus the
+    int32 count and the reverse-permuted neighbor count. The compressed
+    cross-host wire ships the bit-packed path (⌈n/8⌉ bytes) + two
+    ``ef_quantize``d int8 endpoint ids per row (``blocked``/``l2`` are
+    reconstructed receiver-side), plus the int8 mean-load payload, its fp32
+    shared scale, and the exact counts.
+    """
+    if compress:
+        return (int(n) + 7) // 8 + 2, 17
+    return 8 * int(nw) + 12, 8
+
+
 @dataclasses.dataclass(frozen=True)
 class DistProfile:
     """Wave shape of one SHARDED enumeration plus the placement facts the
@@ -631,6 +653,9 @@ class DistProfile:
     base_balance_every: int
     balance_block: int
     max_iters: int | None = None
+    # 2-level mesh facts (flat runs leave the defaults; DESIGN.md §7)
+    nhost: int = 1                     # host-tier size H (ndev = H·D)
+    base_cross_balance_every: int = 1  # cross cadence of the profiled run
 
     @property
     def limit(self) -> int:
@@ -658,13 +683,19 @@ class DistProfile:
                     peak_dev = max(peak_dev, max(e.per_device))
         if peak_dev == 0:
             peak_dev = base.peak
+        host_axis = getattr(cfg, "host_axis", None)
+        nhost = (int(cfg.mesh.shape[host_axis])
+                 if host_axis and getattr(cfg, "mesh", None) is not None
+                 else 1)
         return cls(n=n, nw=nw, ndev=max(int(ndev), 1), n0=base.n0,
                    t_sizes=base.t_sizes, c_counts=base.c_counts,
                    peak_device_live=peak_dev,
                    base_local_capacity=int(cfg.local_capacity),
                    base_balance_every=max(int(cfg.balance_every), 1),
                    balance_block=int(cfg.balance_block),
-                   max_iters=cfg.max_iters)
+                   max_iters=cfg.max_iters, nhost=max(nhost, 1),
+                   base_cross_balance_every=max(
+                       int(getattr(cfg, "cross_balance_every", 1)), 1))
 
 
 def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
@@ -681,34 +712,50 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
     the cadence ratio) and a candidate is marked infeasible unless its
     capacity holds twice the estimate (capacities at or above the base
     config's, which demonstrably ran, are always feasible). Balance traffic
-    is charged as block·ndev row-work per balance round.
+    is charged as block·ndev row-work per balance round, and — on 2-level
+    profiles — as per-tier WIRE BYTES (``dist_wire_bytes``, the same
+    formula the driver meters) so ``CostModel.score`` can price the
+    cross-host hop at its own bandwidth: the balance-cadence ↔
+    interconnect-bandwidth trade the tuner searches.
     """
     limit = profile.limit
     t = profile.t_sizes
     nw = max(profile.nw, 1)
     ndev = max(profile.ndev, 1)
+    nhost = max(getattr(profile, "nhost", 1), 1)
+    dev_size = max(ndev // nhost, 1)
     cap = int(cfg.local_capacity)
     K = max(int(cfg.superstep_rounds), 1)
     every = max(int(cfg.balance_every), 1)
     block = int(cfg.balance_block)
+    cross_every = max(int(getattr(cfg, "cross_balance_every", 1)), 1)
+    cross_period = every * cross_every
+    compress = bool(getattr(cfg, "compress_cross_host", False))
 
     # --- feasibility guard ------------------------------------------------
     # the base config's capacity is only known-safe at the base BALANCE
     # CADENCE — a sparser cadence lets per-device peaks grow between
     # balance steps, so it must re-pass the headroom check against the
-    # cadence-scaled peak estimate like any other candidate.
+    # cadence-scaled peak estimate like any other candidate. On 2-level
+    # profiles the CROSS cadence scales the estimate too: rows pile up
+    # inside a host column between cross hops.
     n0_dev = -(-profile.n0 // ndev)          # deal is an even split
     cadence = -(-every // profile.base_balance_every)
+    if nhost > 1:
+        base_period = (profile.base_balance_every
+                       * profile.base_cross_balance_every)
+        cadence = max(cadence, -(-cross_period // max(base_period, 1)))
     est_peak = min(profile.peak,
                    max(profile.peak_device_live, n0_dev) * max(cadence, 1))
-    feasible = (cap >= n0_dev
-                and ((cap >= profile.base_local_capacity
-                      and every <= profile.base_balance_every)
-                     or cap >= 2 * est_peak))
+    base_ok = (cap >= profile.base_local_capacity
+               and every <= profile.base_balance_every
+               and (nhost <= 1
+                    or cross_every <= profile.base_cross_balance_every))
+    feasible = cap >= n0_dev and (base_ok or cap >= 2 * est_peak)
 
     passes = 1 if getattr(cfg, "fused_round", True) else 2
     dispatches = syncs = 0
-    row_work = waste = balance_rounds = 0
+    row_work = waste = balance_rounds = cross_rounds = 0
     by_cause: dict[str, int] = {}
     cnt = profile.n0
     dispatches += 1                           # stage-1 device-side deal
@@ -724,9 +771,11 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
             row_work += passes * cap * ndev * nw
             waste += passes * max(cap * ndev - max(enter, 1), 0) * nw
             r += 1
-            # global-round cadence, matching the driver's round_base + r
-            if ndev > 1 and (it + r) % every == 0:
+            # global-round cadences, matching the driver's round_base + r
+            if dev_size > 1 and (it + r) % every == 0:
                 balance_rounds += 1
+            if nhost > 1 and (it + r) % cross_period == 0:
+                cross_rounds += 1
         dispatches += 1
         syncs += 1
         status = _DONE if cnt == 0 else _RUN
@@ -735,14 +784,19 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
         if r == 0:
             break
     syncs += 1                                # final counter readback
-    row_work += balance_rounds * block * ndev * nw
+    row_work += (balance_rounds + cross_rounds) * block * ndev * nw
+    row_b, stat_b = dist_wire_bytes(profile.n, nw, False)
+    xrow_b, xstat_b = dist_wire_bytes(profile.n, nw, compress)
+    bytes_intra = balance_rounds * ndev * (block * row_b + stat_b)
+    bytes_cross = cross_rounds * ndev * (block * xrow_b + xstat_b)
     return ReplaySummary(
         n_dispatches=dispatches, n_host_syncs=syncs,
         n_bucket_transitions=0, n_drains=0, rounds=it,
         row_work=row_work, padded_waste=waste,
         n_programs=2,                         # the deal + the superstep
         peak_bucket=cap, by_cause=by_cause,
-        feasible=feasible, est_peak_device=int(est_peak))
+        feasible=feasible, est_peak_device=int(est_peak),
+        bytes_intra=int(bytes_intra), bytes_cross=int(bytes_cross))
 
 
 # ---------------------------------------------------------------------------
@@ -751,8 +805,13 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
 
 # conservative CPU-interpret defaults (measured magnitudes on the smoke
 # grids); relative ranking — the autotuner's need — is robust to these.
+# The per-tier link coefficients default to an 8× intra/cross bandwidth
+# gap (NVLink-class vs DCN-class); ``fit`` replaces them with MEASURED
+# values when 'dist' events carrying per-tier bytes provide enough
+# variation to solve for them.
 DEFAULT_COEFFS = dict(dispatch_ms=0.6, ms_per_mrow=180.0, sync_ms=0.05,
-                      compile_ms=150.0)
+                      compile_ms=150.0,
+                      intra_ms_per_mb=0.05, cross_ms_per_mb=0.4)
 
 
 @dataclasses.dataclass
@@ -772,10 +831,16 @@ class CostModel:
     ms_per_mrow: float = DEFAULT_COEFFS["ms_per_mrow"]
     sync_ms: float = DEFAULT_COEFFS["sync_ms"]
     compile_ms: float = DEFAULT_COEFFS["compile_ms"]
+    # per-tier link cost (ms per MB on the wire): intra-host rows move over
+    # the fast tier, cross-host rows over the slow one. These rank the
+    # tuner's cross_balance_every × compress_cross_host grid.
+    intra_ms_per_mb: float = DEFAULT_COEFFS["intra_ms_per_mb"]
+    cross_ms_per_mb: float = DEFAULT_COEFFS["cross_ms_per_mb"]
     n_fit_events: int = 0
     window: int = 256          # sliding-window length (fit points retained)
     warm_points: list = dataclasses.field(default_factory=list, repr=False)
     fresh_points: list = dataclasses.field(default_factory=list, repr=False)
+    dist_points: list = dataclasses.field(default_factory=list, repr=False)
 
     # -- fitting ---------------------------------------------------------
 
@@ -788,6 +853,15 @@ class CostModel:
             for e in getattr(tr, "events", []):
                 if e.t_ms <= 0.0:
                     continue
+                if e.kind == "dist" and not e.fresh and (
+                        e.comm_bytes_intra or e.comm_bytes_cross):
+                    # tiered dispatches carry the MODELED wire bytes each
+                    # tier moved — enough to measure per-tier bandwidth
+                    # (ms/MB) directly instead of trusting the defaults.
+                    rows = e.rounds_attempted * e.bucket * max(e.ndev, 1)
+                    self.dist_points.append(
+                        (rows, e.comm_bytes_intra, e.comm_bytes_cross,
+                         e.t_ms))
                 if e.kind != "superstep":
                     # only single-graph wave dispatches have the 1-event ↔
                     # 1-launch ↔ bucket·rounds row-work correspondence the
@@ -797,7 +871,8 @@ class CostModel:
                     # 'dist' events fold ndev-way parallel row work plus
                     # per-round collectives into one wall time (the sharded
                     # twin reuses the fitted coefficients for RANKING, which
-                    # is robust to the absolute scale being off)
+                    # is robust to the absolute scale being off — EXCEPT the
+                    # per-tier byte columns, measured above)
                     continue
                 x = e.rounds_attempted * e.bucket  # frontier-row units
                 if e.fresh:
@@ -822,6 +897,25 @@ class CostModel:
             est = float(np.median(over))
             if est > 0:
                 self.compile_ms = est
+        # per-tier bandwidth: ms ≈ a + b·rows/1e6 + i·MB_intra + c·MB_cross
+        # over warm dist dispatches. Needs variation in BOTH byte columns
+        # (e.g. an A/B with compression toggled) to be solvable; degenerate
+        # windows keep the default 8× intra/cross gap.
+        del self.dist_points[:-self.window]
+        if len(self.dist_points) >= 5:
+            bi = [p[1] for p in self.dist_points]
+            bc = [p[2] for p in self.dist_points]
+            if len(set(bi)) >= 2 and len(set(bc)) >= 2:
+                A = np.stack([np.ones(len(self.dist_points)),
+                              np.asarray([p[0] for p in self.dist_points],
+                                         dtype=float) / 1e6,
+                              np.asarray(bi, dtype=float) / 1e6,
+                              np.asarray(bc, dtype=float) / 1e6], axis=1)
+                y = np.asarray([p[3] for p in self.dist_points])
+                sol, *_ = np.linalg.lstsq(A, y, rcond=None)
+                im, cm = float(sol[2]), float(sol[3])
+                if im > 0 and cm > 0:
+                    self.intra_ms_per_mb, self.cross_ms_per_mb = im, cm
         return self
 
     def predict_dispatch(self, row_units: float) -> float:
@@ -848,7 +942,9 @@ class CostModel:
         rows = rep.row_work / max(profile.nw, 1)  # back to row units
         ms = (self.dispatch_ms * rep.n_dispatches
               + self.ms_per_mrow * rows / 1e6
-              + self.sync_ms * rep.n_host_syncs)
+              + self.sync_ms * rep.n_host_syncs
+              + self.intra_ms_per_mb * rep.bytes_intra / 1e6
+              + self.cross_ms_per_mb * rep.bytes_cross / 1e6)
         if objective == "cold":
             ms += self.compile_ms * rep.n_programs
         return ms
@@ -879,10 +975,13 @@ class CostModel:
                     row_work=rep.row_work, padded_waste=rep.padded_waste,
                     n_programs=rep.n_programs, peak_bucket=rep.peak_bucket,
                     by_cause=dict(rep.by_cause), feasible=rep.feasible,
-                    est_peak_device=rep.est_peak_device)
+                    est_peak_device=rep.est_peak_device,
+                    bytes_intra=rep.bytes_intra, bytes_cross=rep.bytes_cross)
 
     def to_json(self) -> dict:
         return dict(dispatch_ms=self.dispatch_ms,
                     ms_per_mrow=self.ms_per_mrow,
                     sync_ms=self.sync_ms, compile_ms=self.compile_ms,
+                    intra_ms_per_mb=self.intra_ms_per_mb,
+                    cross_ms_per_mb=self.cross_ms_per_mb,
                     n_fit_events=self.n_fit_events)

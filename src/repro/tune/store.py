@@ -80,8 +80,11 @@ class TuneKey:
     backend: str
     engine: str           # 'wave' | 'host' | 'dist' (mesh-routed)
     device_kind: str      # jax platform: 'cpu' | 'gpu' | 'tpu'
-    ndev: int = 0         # mesh axis size (0: unsharded)
+    ndev: int = 0         # TOTAL device count H·D (0: unsharded)
     batch: int = 0        # batch-size class (pow2 bucket of B; 0: unbatched)
+    nhost: int = 0        # host tier size of a 2-level mesh (0: flat) — a
+    #                       2×4 mesh tunes apart from a flat 8: cross-host
+    #                       knobs only exist (and pay off) on the former
 
     def as_str(self) -> str:
         mode = "store" if self.store else "count"
@@ -91,21 +94,25 @@ class TuneKey:
             parts.append(f"x{self.ndev}")
         if self.batch:    # unbatched keys keep the pre-batch string format
             parts.append(f"b{self.batch}")
+        if self.nhost:    # flat-mesh keys keep the pre-hierarchy format
+            parts.append(f"h{self.nhost}")
         return "|".join(parts)
 
     @classmethod
     def from_str(cls, s: str) -> "TuneKey":
         shape, mode, formulation, backend, engine, device, *rest = \
             s.split("|")
-        ndev = batch = 0
+        ndev = batch = nhost = 0
         for tok in rest:   # legacy strings carry neither token; order-free
             if tok.startswith("x"):
                 ndev = int(tok[1:])
             elif tok.startswith("b"):
                 batch = int(tok[1:])
+            elif tok.startswith("h"):
+                nhost = int(tok[1:])
         return cls(shape=shape, store=(mode == "store"),
                    formulation=formulation, backend=backend, engine=engine,
-                   device_kind=device, ndev=ndev, batch=batch)
+                   device_kind=device, ndev=ndev, batch=batch, nhost=nhost)
 
 
 class TuneStore:

@@ -86,9 +86,19 @@ class TraceEvent:
     per_device: tuple[int, ...] = ()  # per-device PEAK live rows inside the
     #                            dispatch — the placement fact the sharded
     #                            replay twin's feasibility guard consumes
-    moved: int = 0             # rows shipped by diffusion balancing
+    moved: int = 0             # rows shipped by diffusion balancing (both
+    #                            tiers; ``moved - moved_cross`` is intra)
     lost: int = 0              # receiver-side balance overflow (must be 0
     #                            under backpressure; defensive counter)
+    # --- 2-level mesh dispatches (DESIGN.md §7) --------------------------
+    moved_cross: int = 0       # rows shipped over the cross-host tier
+    comm_bytes_intra: int = 0  # modeled wire bytes of intra-host balance
+    #                            hops inside this dispatch (block-sized
+    #                            sends × ``cost_model.dist_wire_bytes``)
+    comm_bytes_cross: int = 0  # modeled wire bytes of the cross-host hops
+    #                            (compressed when the run compresses them —
+    #                            the quantity the tier-aware cost model and
+    #                            the BENCH_multihost_smoke 4× gate consume)
     # --- lane-recycling dispatches ('recycle' + scheduler 'batch'/'seed'
     # events) only — DESIGN.md §6.9 ------------------------------------
     lanes: int = 0             # pool size B of the recyclable batch
@@ -198,6 +208,8 @@ class WaveTrace:
                  fresh: bool = False, plan_key: str = "",
                  launches: int = 1, ndev: int = 0,
                  per_device=(), moved: int = 0, lost: int = 0,
+                 moved_cross: int = 0, comm_bytes_intra: int = 0,
+                 comm_bytes_cross: int = 0,
                  lanes: int = 0, live_lanes: int = 0, retired: int = 0,
                  admitted: int = 0, wall_ms: float = 0.0, lane_rids=(),
                  lane_rounds=(), t_start_ms: float | None = None) -> None:
@@ -222,7 +234,10 @@ class WaveTrace:
             t_start_ms=float(t_start_ms), wall_ms=float(wall_ms),
             fresh=bool(fresh), plan_key=str(plan_key),
             ndev=int(ndev), per_device=tuple(int(x) for x in per_device),
-            moved=int(moved), lost=int(lost), lanes=int(lanes),
+            moved=int(moved), lost=int(lost),
+            moved_cross=int(moved_cross),
+            comm_bytes_intra=int(comm_bytes_intra),
+            comm_bytes_cross=int(comm_bytes_cross), lanes=int(lanes),
             live_lanes=int(live_lanes), retired=int(retired),
             admitted=int(admitted),
             lane_rids=tuple(str(r) for r in lane_rids),
