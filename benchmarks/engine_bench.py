@@ -384,6 +384,179 @@ def fused_smoke(out_path: str | None = None):
     return doc
 
 
+def persistent_smoke(out_path: str | None = None):
+    """Persistent multi-round kernel smoke (DESIGN.md §6.11): the
+    ⌈K/R⌉-dispatch property plus the launch-amortization A/B.
+
+    Asserts on the TRACED PROGRAM that an unrolled K-round superstep at
+    ``rounds_per_launch`` R contains exactly ⌈K/R⌉ pallas_calls (R=1
+    reproduces the §6.8 one-dispatch-per-round contract), then times the
+    thing the persistent kernel actually changes: R warm kernel launches
+    (a host loop of jitted single fused rounds) vs ONE warm persistent
+    launch advancing the same R rounds with the frontier resident in
+    scratch. Classes are sized so every round runs live (no guard trip, no
+    frontier death — both arms do identical per-round work) and the
+    ≥1.5× warm us/round win is asserted on the best class. End-to-end
+    service rows (R=1 vs tuned R through ``CycleService``) are reported
+    informationally: on this interpret-mode CPU container the host driver
+    dominates end-to-end, so the launch win only shows at kernel scope.
+    Writes ``results/BENCH_persistent_smoke.json`` for ``run.py --check``.
+    """
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.dispatch import assert_superstep_dispatches
+    from repro.core import CycleService, EngineConfig
+    from repro.core import expand as E
+    from repro.core.frontier import empty_cycle_buffer
+    from repro.core.triplets import initial_frontier
+    from repro.kernels.fused_round import (fused_round_pallas,
+                                           persistent_round_pallas)
+    from repro.kernels.ops import _fused_tables
+
+    # -- dispatch contract: ⌈K/R⌉ pallas_calls on the unrolled superstep --
+    n, edges = grid_graph(4, 4)
+    g = build_graph(n, edges)
+    f, _, _ = initial_frontier(g, bucket=lambda c: 64)
+    buf = empty_cycle_buffer(256, g.adj_bits.shape[1])
+    d = max(g.max_degree, 1)
+    pal = E.expand_op("bitword", "pallas")
+    budget = 4
+    contract = {}
+    for rpl in (1, 2, 4):
+        def superstep(g, f, buf, rpl=rpl):
+            for _ in range(-(-budget // rpl)):
+                f, buf, *_ = E.expand_count_compact_multi(
+                    g, f, buf, delta=d, store=True, rounds=rpl,
+                    formulation="bitword", backend="pallas", op=pal,
+                    fused=True)
+            return f, buf
+
+        prims = assert_superstep_dispatches(superstep, g, f, buf,
+                                            budget=budget,
+                                            rounds_per_launch=rpl)
+        contract[f"R={rpl}"] = prims.get("pallas_call", 0)
+
+    # -- kernel-scope A/B: R separate launches vs one persistent launch ---
+    # (graph, bucket, R) sized so rounds_done == R with no guard trip:
+    # both arms then execute identical per-round work and the delta is
+    # pure launch + frontier-HBM-round-trip overhead.
+    classes = [("Grid_3x3", (3, 3), 16, 4), ("Grid_4x4", (4, 4), 64, 8)]
+    rows = []
+    for name, (gr, gc), bucket, R in classes:
+        n, edges = grid_graph(gr, gc)
+        g = build_graph(n, edges)
+        delta = int(g.max_degree)
+        f, _, _ = initial_frontier(g, bucket=lambda c: bucket)
+        buf = empty_cycle_buffer(256, g.adj_bits.shape[1])
+        tabs = _fused_tables(g, "bitword")
+
+        def one(p, b, v1, l2, vl, cnt, bm, bc, *, tabs=tabs, delta=delta):
+            return fused_round_pallas(p, b, v1, l2, vl, cnt, bm, bc, tabs,
+                                      formulation="bitword", delta=delta,
+                                      store=False)
+
+        def pers(p, b, v1, l2, vl, cnt, bm, bc, *, tabs=tabs, delta=delta,
+                 R=R):
+            return persistent_round_pallas(p, b, v1, l2, vl, cnt, bm, bc,
+                                           jnp.int32(R), tabs,
+                                           formulation="bitword",
+                                           delta=delta, store=False,
+                                           rounds=R)
+
+        jone, jpers = jax.jit(one), jax.jit(pers)
+        args = (f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+                buf.masks, buf.count)
+        out = jpers(*args)
+        rounds_done = int(out[8])
+        assert rounds_done == R, (
+            f"{name}: persistent launch retired {rounds_done}/{R} rounds — "
+            f"resize the class so the A/B compares live rounds only")
+        jax.block_until_ready(jone(*args))
+
+        def loop_arm():
+            p, b, v1, l2, vl, cnt, bm, bc = args
+            for _ in range(R):
+                p, b, v1, l2, vl, _m, _nc, n_new = jone(p, b, v1, l2, vl,
+                                                        cnt, bm, bc)
+                cnt = n_new
+            jax.block_until_ready(cnt)
+
+        def pers_arm():
+            jax.block_until_ready(jpers(*args))
+
+        def best_of(fn, reps=5):
+            t = float("inf")
+            for _ in range(reps):
+                t0 = _time.perf_counter()
+                fn()
+                t = min(t, _time.perf_counter() - t0)
+            return t
+
+        t_loop, t_pers = best_of(loop_arm), best_of(pers_arm)
+        rows.append(dict(
+            graph=name, n=n, m=len(edges), bucket=bucket,
+            rounds_per_launch=R, rounds_done=rounds_done,
+            loop_ms=round(t_loop * 1e3, 3),
+            persistent_ms=round(t_pers * 1e3, 3),
+            loop_us_per_round=round(t_loop * 1e6 / R, 2),
+            persistent_us_per_round=round(t_pers * 1e6 / R, 2),
+            speedup=round(t_loop / max(t_pers, 1e-9), 2)))
+        print(f"persistent smoke {name}: {R} launches "
+              f"{rows[-1]['loop_us_per_round']:.0f} us/round vs one "
+              f"persistent launch {rows[-1]['persistent_us_per_round']:.0f} "
+              f"us/round ({rows[-1]['speedup']}x)")
+
+    best = max(r["speedup"] for r in rows)
+    assert best >= 1.5, (
+        f"persistent kernel won only {best}x warm us/round (need >=1.5x on "
+        f"at least one smoke class): {rows}")
+
+    # -- end-to-end service rows (informational, not gated) ---------------
+    service_rows = []
+    n, edges = grid_graph(4, 4)
+    g = build_graph(n, edges)
+    counts = {}
+    for R in (1, 8):
+        svc = CycleService(EngineConfig(store=False, formulation="bitword",
+                                        backend="pallas", fused_round=True,
+                                        rounds_per_launch=R))
+        res = svc.enumerate(g)
+        counts[R] = res.n_cycles
+        warm = float("inf")
+        for _ in range(3):
+            t0 = _time.perf_counter()
+            res = svc.enumerate(g)
+            warm = min(warm, _time.perf_counter() - t0)
+        s = res.stats
+        service_rows.append(dict(
+            graph="Grid_4x4", rounds_per_launch=R, n_cycles=res.n_cycles,
+            t_warm_ms=round(warm * 1e3, 2),
+            us_per_round=round(warm * 1e6 / max(s["rounds"], 1), 2),
+            n_kernel_launches=s["n_kernel_launches"]))
+    assert counts[1] == counts[8], ("persistent service diverged", counts)
+    assert (service_rows[1]["n_kernel_launches"]
+            < service_rows[0]["n_kernel_launches"]), service_rows
+
+    doc = dict(benchmark="persistent_smoke",
+               dispatch_contract=contract,
+               best_kernel_speedup=best,
+               rows=rows,
+               service_rows=service_rows)
+    path = out_path or os.path.join(RESULTS_DIR,
+                                    "BENCH_persistent_smoke.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f_:
+        json.dump(doc, f_, indent=2)
+    print(f"persistent smoke: ceil(K/R) dispatches confirmed on the jaxpr "
+          f"{contract}, best kernel-scope win {best}x, service launches "
+          f"{service_rows[0]['n_kernel_launches']} -> "
+          f"{service_rows[1]['n_kernel_launches']} -> {path}")
+    return doc
+
+
 def batch_smoke(n_graphs: int = 8, out_path: str | None = None):
     """Batched-pallas A/B (DESIGN.md §6.7): ``enumerate_batch`` — one
     lane-gridded device program advancing all lanes — vs the per-graph loop

@@ -46,6 +46,7 @@ def run():
                      _time(ops.expand_words_bitword, g, f), "interpret=True"))
     rows += run_lanes()
     rows += run_fused()
+    rows += run_persistent()
     return rows
 
 
@@ -90,6 +91,59 @@ def run_fused():
              f"bytes={model['bytes_kernel']} "
              f"bound_us={model['bound_us_kernel']:.2f} "
              f"traffic={model['traffic_ratio']:.1f}x_less"),
+        ]
+    return rows
+
+
+def run_persistent():
+    """Launch-overhead rows (DESIGN.md §6.11): per-round µs of R separate
+    fused-round launches vs ONE persistent launch advancing R rounds with
+    the frontier resident in scratch, at R ∈ {2, 4, 8} — next to the
+    modeled per-round HBM traffic each pays (the persistent column divides
+    the kernel's per-launch frontier round-trip by R)."""
+    import jax.numpy as jnp
+    from repro.analysis.roofline import wave_round_row
+    from repro.core.frontier import empty_cycle_buffer
+    from repro.kernels.fused_round import (fused_round_pallas,
+                                           persistent_round_pallas)
+    from repro.kernels.ops import _fused_tables
+
+    n, edges = grid_graph(4, 4)
+    g = build_graph(n, edges)
+    d = max(g.max_degree, 1)
+    f, _, _ = initial_frontier(g, bucket=lambda c: 64)
+    buf = empty_cycle_buffer(256, g.adj_bits.shape[1])
+    tabs = _fused_tables(g, "bitword")
+    args = (f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+            buf.masks, buf.count)
+
+    jone = jax.jit(lambda *a: fused_round_pallas(
+        *a, tabs, formulation="bitword", delta=d, store=False))
+
+    rows = []
+    for R in (2, 4, 8):
+        jpers = jax.jit(lambda *a, R=R: persistent_round_pallas(
+            *a, jnp.int32(R), tabs, formulation="bitword", delta=d,
+            store=False, rounds=R))
+
+        def loop_arm():
+            p, b, v1, l2, vl, cnt, bm, bc = args
+            for _ in range(R):
+                p, b, v1, l2, vl, _m, _nc, n_new = jone(p, b, v1, l2, vl,
+                                                        cnt, bm, bc)
+                cnt = n_new
+            return cnt
+
+        us_loop = _time(loop_arm, reps=20) / R
+        us_pers = _time(lambda: jpers(*args), reps=20) / R
+        model = wave_round_row("grid4x4", f.capacity, g.n_words, d,
+                               rounds_per_launch=R)
+        rows += [
+            (f"round_launch_loop_R{R}_grid4x4", us_loop,
+             f"{R} launches; bytes/round={model['bytes_kernel']}"),
+            (f"round_persistent_R{R}_grid4x4", us_pers,
+             f"1 launch; bytes/round={model['bytes_persistent']} "
+             f"amortized={us_loop / max(us_pers, 1e-9):.2f}x"),
         ]
     return rows
 

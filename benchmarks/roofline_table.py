@@ -42,26 +42,45 @@ def main(mesh="16x16"):
             f"{r['peak_memory_gb_per_dev']:.1f}"))
 
 
-def wave(caps=(1 << 10, 1 << 14, 1 << 18), nw=32, delta=64):
-    """Wave-round HBM-traffic table (DESIGN.md §6.8): modeled bytes moved
-    per guarded round by each round implementation, and the memory-roofline
-    bound each traffic level implies. The fused pallas round ('kernel')
-    touches the frontier once; 'split' additionally materializes cap·Δ
-    candidate rows."""
+def wave(caps=(1 << 10, 1 << 14, 1 << 18), nw=32, delta=64,
+         rounds_per_launch=8, budget=24):
+    """Wave-round HBM-traffic table (DESIGN.md §6.8 + §6.11): modeled bytes
+    moved per guarded round by each round implementation and the
+    memory-roofline bound each traffic level implies — plus the per-launch
+    accounting a ``budget``-round wave pays at each level. The fused pallas
+    round ('kernel') touches the frontier once per round; 'split'
+    additionally materializes cap·Δ candidate rows; 'persist' keeps the
+    frontier in scratch for ``rounds_per_launch`` rounds, so both the
+    launches/wave and the frontier HBM round-trips/wave divide by R."""
     import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from repro.analysis.roofline import wave_round_row
-    hdr = ("round@bucket", "B_split", "B_gather", "B_kernel",
-           "us_split", "us_gather", "us_kernel", "traffic")
-    print(("{:<24}" + "{:>12}" * 7).format(*hdr))
+    from repro.analysis.roofline import wave_launch_counts, wave_round_row
+    hdr = ("round@bucket", "B_split", "B_gather", "B_kernel", "B_persist",
+           "us_split", "us_kernel", "us_persist", "traffic", "amortize")
+    print(("{:<24}" + "{:>11}" * 9).format(*hdr))
     for cap in caps:
-        r = wave_round_row(f"cap={cap}", cap, nw, delta)
-        print(("{:<24}" + "{:>12}" * 7).format(
+        r = wave_round_row(f"cap={cap}", cap, nw, delta,
+                           rounds_per_launch=rounds_per_launch)
+        print(("{:<24}" + "{:>11}" * 9).format(
             r["name"], f"{r['bytes_split']:.2e}",
             f"{r['bytes_gather']:.2e}", f"{r['bytes_kernel']:.2e}",
-            f"{r['bound_us_split']:.1f}", f"{r['bound_us_gather']:.1f}",
-            f"{r['bound_us_kernel']:.1f}",
-            f"{r['traffic_ratio']:.0f}x"))
+            f"{r['bytes_persistent']:.2e}",
+            f"{r['bound_us_split']:.1f}", f"{r['bound_us_kernel']:.1f}",
+            f"{r['bound_us_persistent']:.1f}",
+            f"{r['traffic_ratio']:.0f}x",
+            f"{r['persistent_ratio']:.0f}x"))
+    print(f"\nper-wave launch accounting ({budget}-round wave):")
+    hdr = ("impl", "R", "launches/wave", "frontier_HBM_roundtrips/wave")
+    print(("{:<12}" + "{:>6}" + "{:>16}" + "{:>30}").format(*hdr))
+    for impl, rpl in (("split", 1), ("fused", 1),
+                      ("persistent", rounds_per_launch)):
+        c = wave_launch_counts(budget, rpl)
+        # the split round pays its launch count once per PASS (flag +
+        # extract + compact), not once per round — three dispatches/round
+        mult = 3 if impl == "split" else 1
+        print(("{:<12}" + "{:>6}" + "{:>16}" + "{:>30}").format(
+            impl, c["rounds_per_launch"], c["launches_per_wave"] * mult,
+            c["frontier_roundtrips_per_wave"]))
 
 
 if __name__ == "__main__":

@@ -16,7 +16,11 @@ Sections:
 → results/BENCH_service_smoke.json), the tuned-vs-default autotuner A/B
 (→ results/BENCH_tune_smoke.json), the fused-round contract — one pallas
 dispatch per round on the traced jaxpr plus the fused-vs-split A/B
-(→ results/BENCH_fused_smoke.json) — the sustained-traffic serving A/B
+(→ results/BENCH_fused_smoke.json) — the persistent multi-round kernel
+contract (⌈K/R⌉ dispatches per superstep on the traced jaxpr) plus the
+R-launches-vs-one-persistent-launch A/B (>=1.5x warm us/round asserted on
+at least one smoke class, → results/BENCH_persistent_smoke.json) — the
+sustained-traffic serving A/B
 (lane recycling vs wave-at-a-time, >=1.5x ms/graph asserted,
 → results/BENCH_serve_smoke.json) — the 2-level hierarchical-mesh A/B
 (flat 8-dev vs 2×4 host×device vs EF-compressed cross-host wire, equal
@@ -160,6 +164,17 @@ def check() -> int:
                 if b:
                     cmp(f"fused[{fresh['graph']}]", fresh["fused_ms"],
                         b["fused_ms"])
+        base = _load_baseline("BENCH_persistent_smoke.json")
+        if base:
+            print("== check: persistent multi-round kernel (warm ms) ==")
+            doc = engine_bench.persistent_smoke(
+                out_path=os.path.join(tmp, "persistent.json"))
+            by_graph = {r["graph"]: r for r in base["rows"]}
+            for fresh in doc["rows"]:
+                b = by_graph.get(fresh["graph"])
+                if b:
+                    cmp(f"persistent[{fresh['graph']}]",
+                        fresh["persistent_ms"], b["persistent_ms"])
         base = _load_baseline("BENCH_serve_smoke.json")
         if base:
             print("== check: sustained serving (ms/graph) ==")
@@ -209,6 +224,9 @@ def main() -> None:
         engine_bench.tune_smoke()
         print("\n== fused round (one-dispatch contract + A/B) ==")
         engine_bench.fused_smoke()
+        print("\n== persistent multi-round kernel (ceil(K/R) contract "
+              "+ launch A/B) ==")
+        engine_bench.persistent_smoke()
         print("\n== sustained serving (lane recycling vs wave-at-a-time) ==")
         from . import serve_bench
         serve_bench.serve_smoke()

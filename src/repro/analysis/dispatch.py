@@ -60,12 +60,34 @@ def assert_fused_round_program(fn, *args):
     """Trace ``fn(*args)`` and assert the fused-round dispatch contract:
     exactly ONE pallas_call, zero scatter/cumsum/sort outside it. Returns
     the primitive histogram for reporting."""
+    return assert_superstep_dispatches(fn, *args, budget=1,
+                                       rounds_per_launch=1)
+
+
+def assert_superstep_dispatches(fn, *args, budget: int,
+                                rounds_per_launch: int = 1):
+    """Trace ``fn(*args)`` and assert the persistent-superstep dispatch
+    contract (DESIGN.md §6.11): a ``budget``-round superstep traced with
+    ``rounds_per_launch`` R must contain exactly ⌈budget/R⌉ pallas_calls —
+    one persistent launch per R rounds — and zero scatter/cumsum/sort
+    frontier passes outside the kernels. R=1 reproduces the PR-6 fused
+    contract (one dispatch per round).
+
+    ``fn`` must be an UNROLLED superstep (each launch traced inline): a
+    ``lax.while_loop`` body traces its pallas_call once regardless of trip
+    count, so the runtime contract is asserted on the unrolled composition
+    instead. Returns the primitive histogram for reporting.
+    """
+    rpl = max(int(rounds_per_launch), 1)
+    expect = -(-max(int(budget), 1) // rpl)
     counts = primitive_counts(jax.make_jaxpr(fn)(*args))
     n_kernels = counts.get("pallas_call", 0)
-    assert n_kernels == 1, (
-        f"fused round must be ONE pallas dispatch, traced {n_kernels}; "
-        f"primitives: {counts}")
+    assert n_kernels == expect, (
+        f"a {budget}-round superstep at rounds_per_launch={rpl} must be "
+        f"⌈{budget}/{rpl}⌉ = {expect} pallas dispatches, traced "
+        f"{n_kernels}; primitives: {counts}")
     leaked = compaction_prims_outside_kernel(counts)
     assert not leaked, (
-        f"fused round leaked compaction passes outside the kernel: {leaked}")
+        f"superstep leaked compaction passes outside the kernel "
+        f"(offending primitives): {leaked}")
     return counts

@@ -134,7 +134,8 @@ def frontier_row_bytes(nw: int) -> int:
 
 
 def wave_round_bytes(cap: int, nw: int, delta: int, *, mode: str,
-                     store: bool = False, cyc_rows: int = 0) -> int:
+                     store: bool = False, cyc_rows: int = 0,
+                     rounds_per_launch: int = 1) -> int:
     """Analytic HBM bytes moved by ONE guarded expansion round at bucket
     ``cap`` (bitword formulation; slot differs only in the flag encoding).
 
@@ -150,6 +151,12 @@ def wave_round_bytes(cap: int, nw: int, delta: int, *, mode: str,
     * ``'kernel'`` — the fused pallas round (two-phase scatter): the whole
       round is one kernel, flags never round-trip through HBM — one frontier
       read + one frontier write (plus the ring carry-through in store mode).
+    * ``'persistent'`` — the multi-round persistent kernel (DESIGN.md
+      §6.11): the frontier lives in kernel scratch between rounds, so HBM
+      sees one frontier read + one write per LAUNCH of
+      ``rounds_per_launch`` rounds — the amortized per-round traffic is
+      the kernel number divided by R (the ring carry-through still pays
+      per launch in store mode).
 
     The model counts array traffic only (graph tables are shared across
     rounds and assumed cached); it is a lower bound the roofline divides by
@@ -157,6 +164,10 @@ def wave_round_bytes(cap: int, nw: int, delta: int, *, mode: str,
     """
     row = frontier_row_bytes(nw)
     flag = 4 * nw
+    if mode == "persistent":
+        per_launch = wave_round_bytes(cap, nw, delta, mode="kernel",
+                                      store=store, cyc_rows=cyc_rows)
+        return int(-(-per_launch // max(int(rounds_per_launch), 1)))
     if mode == "split":
         b = cap * row + 2 * cap * flag           # flag pass
         b += cap * flag + 4 * cap * delta        # slot extraction
@@ -173,9 +184,20 @@ def wave_round_bytes(cap: int, nw: int, delta: int, *, mode: str,
         if store:
             b += 2 * cyc_rows * flag             # ring carry-through copy
     else:
-        raise ValueError(f"unknown wave-round mode {mode!r}; "
-                         "expected 'split' | 'gather' | 'kernel'")
+        raise ValueError(f"unknown wave-round mode {mode!r}; expected "
+                         "'split' | 'gather' | 'kernel' | 'persistent'")
     return int(b)
+
+
+def wave_launch_counts(budget: int, rounds_per_launch: int = 1) -> dict:
+    """Per-wave launch accounting (DESIGN.md §6.11): kernel launches and
+    frontier HBM round-trips a ``budget``-round wave pays at a given R —
+    the per-launch columns ``roofline_table.py wave`` reports."""
+    rpl = max(int(rounds_per_launch), 1)
+    launches = -(-max(int(budget), 0) // rpl)
+    return dict(rounds=int(budget), rounds_per_launch=rpl,
+                launches_per_wave=launches,
+                frontier_roundtrips_per_wave=launches)
 
 
 def wave_round_bound_us(nbytes: int, chips: int = 1) -> float:
@@ -184,20 +206,28 @@ def wave_round_bound_us(nbytes: int, chips: int = 1) -> float:
 
 
 def wave_round_row(name: str, cap: int, nw: int, delta: int, *,
-                   store: bool = False, cyc_rows: int = 0) -> dict:
-    """One roofline table row comparing the three round implementations'
-    modeled traffic (benchmarks/kernel_bench.py attaches measured µs)."""
+                   store: bool = False, cyc_rows: int = 0,
+                   rounds_per_launch: int = 1) -> dict:
+    """One roofline table row comparing the round implementations' modeled
+    traffic (benchmarks/kernel_bench.py attaches measured µs). The
+    persistent column amortizes the kernel's per-launch traffic over
+    ``rounds_per_launch`` rounds."""
     modes = {m: wave_round_bytes(cap, nw, delta, mode=m, store=store,
-                                 cyc_rows=cyc_rows)
-             for m in ("split", "gather", "kernel")}
+                                 cyc_rows=cyc_rows,
+                                 rounds_per_launch=rounds_per_launch)
+             for m in ("split", "gather", "kernel", "persistent")}
     return dict(
         name=name, cap=cap, nw=nw, delta=delta, store=store,
+        rounds_per_launch=max(int(rounds_per_launch), 1),
         bytes_split=modes["split"], bytes_gather=modes["gather"],
         bytes_kernel=modes["kernel"],
+        bytes_persistent=modes["persistent"],
         bound_us_split=wave_round_bound_us(modes["split"]),
         bound_us_gather=wave_round_bound_us(modes["gather"]),
         bound_us_kernel=wave_round_bound_us(modes["kernel"]),
-        traffic_ratio=modes["split"] / max(modes["kernel"], 1))
+        bound_us_persistent=wave_round_bound_us(modes["persistent"]),
+        traffic_ratio=modes["split"] / max(modes["kernel"], 1),
+        persistent_ratio=modes["kernel"] / max(modes["persistent"], 1))
 
 
 def write_rows(path: str, rows: list[dict]):

@@ -502,6 +502,7 @@ def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
     host_size = int(mesh.shape[host_axis]) if host_axis else 1
     cross_period = every * max(int(cfg.cross_balance_every), 1)
     compress = bool(cfg.compress_cross_host)
+    rpl = max(int(getattr(cfg, "rounds_per_launch", 1)), 1)
     row_axes = (host_axis, axis) if host_axis else (axis,)
     fspec = _fspec(mesh, row_axes)
     rspec = fspec.count  # P over the row tiers (per-device outputs)
@@ -547,12 +548,59 @@ def make_dist_superstep(mesh: Mesh, axis: str, g_spec, cfg: EngineConfig,
                                      lost])
             return f2, cnts, r + 1, total, th, ch, lh, ef
 
+        def body_multi(c):
+            # persistent multi-round twin (DESIGN.md §6.11): one while-loop
+            # iteration advances up to ``rpl`` masked rounds — past-budget
+            # or dead inner rounds select the old state, so the applied
+            # rounds are bit-identical to the R=1 body (balance cadence
+            # still keyed to the GLOBAL round index round_base + r + i).
+            f, cnts, r, total, th, ch, lh, ef = c
+            rem = rounds_limit - r
+
+            def inner(i, ic):
+                f, cnts, total, th, ch, lh, ef, applied = ic
+                active = (i < rem) & (total > 0)
+                f2, n_cyc, drop = _local_step(g, f, delta, cap,
+                                              fused=bool(cfg.fused_round))
+                moved_i = moved_x = lost = jnp.int32(0)
+                gidx = round_base + r + i
+                ef2 = ef
+                if dev_size > 1:
+                    do_bal = active & ((gidx % every) == (every - 1))
+                    f2, moved_i, lost_i = _balance(f2, block, axis,
+                                                   dev_size, cap, do_bal)
+                    lost = lost + lost_i
+                if host_size > 1:
+                    do_x = active & ((gidx % cross_period)
+                                     == (cross_period - 1))
+                    f2, moved_x, lost_x, ef2 = _cross_balance(
+                        g, f2, block, host_axis, host_size, cap, do_x,
+                        compress, ef)
+                    lost = lost + lost_x
+                tot2 = _psum_tiers(f2.count, axis, host_axis)
+                idx = jnp.minimum(r + i, jnp.int32(k_max - 1))
+                sel = lambda a, b: jax.tree_util.tree_map(
+                    lambda x, y: jnp.where(active, x, y), a, b)
+                th = th.at[idx].set(jnp.where(active, tot2, th[idx]))
+                ch = ch.at[idx].set(jnp.where(active, n_cyc, ch[idx]))
+                lh = lh.at[idx].set(jnp.where(active, f2.count, lh[idx]))
+                cnts2 = cnts + jnp.stack([n_cyc, drop + lost, moved_i,
+                                          moved_x, lost])
+                return (sel(f2, f), jnp.where(active, cnts2, cnts),
+                        jnp.where(active, tot2, total), th, ch, lh,
+                        sel(ef2, ef), applied + active.astype(jnp.int32))
+
+            f, cnts, total, th, ch, lh, ef, applied = jax.lax.fori_loop(
+                0, rpl, inner,
+                (f, cnts, total, th, ch, lh, ef, jnp.int32(0)))
+            return f, cnts, r + applied, total, th, ch, lh, ef
+
         zeros = jnp.zeros((k_max,), jnp.int32)
         total0 = _psum_tiers(f.count, axis, host_axis)
         ef0 = dict(psum_err=jnp.float32(0.0),
                    id_err=jnp.zeros((2, block), jnp.float32))
         f, cnts, r, total, th, ch, lh, ef = jax.lax.while_loop(
-            cond, body,
+            cond, body if rpl <= 1 else body_multi,
             (f, cnts, jnp.int32(0), total0, zeros, zeros, zeros, ef0))
         status = jnp.where(total == 0, jnp.int32(_DONE), jnp.int32(_RUN))
         f = dataclasses.replace(f, count=f.count[None])
@@ -734,7 +782,7 @@ def enumerate_sharded(g: BitsetGraph, cfg: EngineConfig, *, cache=None,
             t_sizes=np.asarray(th_h)[:r_h], c_counts=ch_round,
             enter_count=live, exit_count=int(th_h[r_h - 1]),
             t_ms=trace.toc_ms(), fresh=fresh, plan_key=str(step.key),
-            ndev=ndev,
+            ndev=ndev, rounds_per_launch=max(int(cfg.rounds_per_launch), 1),
             per_device=tuple(int(x) for x in peak_dev),
             moved=moved_i_d + moved_x_d, lost=lost_d,
             moved_cross=moved_x_d,

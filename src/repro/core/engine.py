@@ -96,6 +96,14 @@ class EngineConfig:
     # swaps the cap·Δ scatter compaction for the gather formulation, pallas
     # collapses the whole guarded round into ONE kernel dispatch
     # (two-phase scatter). Bit-identical output; tunable (TUNED_KNOBS).
+    rounds_per_launch: int = 1     # R — rounds per kernel launch
+    # (DESIGN.md §6.11): the superstep body advances up to R complete
+    # guarded rounds per while-iteration through the persistent wave
+    # kernel (fused pallas) or its fori_loop jnp twin, so a K-round wave
+    # costs ⌈K/R⌉ launches and frontier HBM round-trips instead of K.
+    # The trade: a launch always runs R rounds' grid steps, so rounds
+    # after a guard trip / wave death are wasted identity copy-throughs.
+    # Bit-identical output for any R; tunable (TUNED_KNOBS).
     max_iters: int | None = None
     donate: bool = True            # donate superstep frontier/CycleBuffer
     # buffers to the jitted program (no-copy in-place aliasing; halves peak
@@ -136,8 +144,8 @@ class EngineConfig:
             raise ValueError(
                 f"unknown engine {self.engine!r}; allowed: {ENGINES}")
         for field in ("growth_bits", "superstep_rounds", "cycle_buffer_rows",
-                      "local_capacity", "balance_block", "balance_every",
-                      "cross_balance_every"):
+                      "rounds_per_launch", "local_capacity", "balance_block",
+                      "balance_every", "cross_balance_every"):
             if getattr(self, field) < 1:
                 raise ValueError(f"{field} must be >= 1, got "
                                  f"{getattr(self, field)}")
@@ -217,7 +225,7 @@ STATUS_NAMES = dict(enumerate(STATUSES))
 def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
                    rounds_limit: jnp.ndarray, *, delta: int, store: bool,
                    formulation: str, backend: str, k_max: int,
-                   fused: bool = False):
+                   fused: bool = False, rounds_per_launch: int = 1):
     """Run up to min(k_max, rounds_limit) fused rounds fully on device.
 
     UNJITTED device algorithm — compilation (jit + buffer donation + the
@@ -226,6 +234,14 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
     The round body programs against the ``ExpandOp`` registry
     (DESIGN.md §6.7), whose ops are batch-transparent on every backend —
     ``jax.vmap`` of this function is the batched superstep.
+
+    ``rounds_per_launch`` (R, DESIGN.md §6.11) sets how many complete
+    guarded rounds each while-iteration advances as ONE traced unit — the
+    persistent wave kernel on fused pallas ops, the ``fori_loop`` jnp twin
+    elsewhere — so a K-round wave costs ⌈K/R⌉ kernel launches and frontier
+    HBM round-trips instead of K. Results are bit-identical for any R;
+    with R>1 the decay (SHRINK) exit is only evaluated at launch
+    boundaries, which changes dispatch accounting but no history entry.
 
     Returns (f', buf', rounds_done, status, t_hist, c_hist, pending_new,
     pending_cyc). ``pending_*`` carry the aborted round's exact sizes so the
@@ -236,6 +252,7 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
     # dominates — hand back to the host to re-bucket DOWN (shapes are static
     # inside the loop, so shrinking cannot happen here).
     shrink_below = cap // 4 if cap > 16 else 0
+    R = int(rounds_per_launch)
 
     def cond(c):
         f, buf, r, status, th, ch, pn, pc = c
@@ -259,10 +276,40 @@ def wave_superstep(g: BitsetGraph, f: Frontier, buf: CycleBuffer,
         pc2 = jnp.where(ok, jnp.int32(0), n_cyc).astype(jnp.int32)
         return f2, buf2, r2, status2, th, ch, pn2, pc2
 
+    def body_multi(c):
+        f, buf, r, status, th, ch, pn, pc = c
+        rem = (rounds_limit - r).astype(jnp.int32)
+        f2, buf2, ch_r, nh_r, done, ok_f, ok_c = E.expand_count_compact_multi(
+            g, f, buf, delta=delta, store=store, rounds=R, op=op,
+            fused=fused, rlimit=rem)
+        tripped = ~(ok_f & ok_c)
+        # histories hold APPLIED rounds only; the (k_max + R - 1) padding
+        # keeps the R-wide window in bounds so the update never clamps.
+        mask = jnp.arange(R, dtype=jnp.int32) < done
+        th = jax.lax.dynamic_update_slice(th, jnp.where(mask, nh_r, 0), (r,))
+        ch = jax.lax.dynamic_update_slice(ch, jnp.where(mask, ch_r, 0), (r,))
+        r2 = (r + done).astype(jnp.int32)
+        cnt = f2.count
+        shrink = ~tripped & (cnt > 0) & (cnt <= shrink_below)
+        status2 = jnp.where(tripped,
+                            jnp.where(ok_f, jnp.int32(_DRAIN),
+                                      jnp.int32(_GROW)),
+                            jnp.where(shrink, jnp.int32(_SHRINK),
+                                      jnp.int32(_RUN)))
+        # on a trip the pending overflow sits at history index ``done``
+        pidx = jnp.clip(done, 0, R - 1)
+        pn2 = jnp.where(tripped, nh_r[pidx], 0).astype(jnp.int32)
+        pc2 = jnp.where(tripped, ch_r[pidx], 0).astype(jnp.int32)
+        return f2, buf2, r2, status2, th, ch, pn2, pc2
+
+    hist_len = k_max if R <= 1 else k_max + R - 1
     init = (f, buf, jnp.int32(0), jnp.int32(_RUN),
-            jnp.zeros((k_max,), jnp.int32), jnp.zeros((k_max,), jnp.int32),
+            jnp.zeros((hist_len,), jnp.int32),
+            jnp.zeros((hist_len,), jnp.int32),
             jnp.int32(0), jnp.int32(0))
-    f, buf, r, status, th, ch, pn, pc = jax.lax.while_loop(cond, body, init)
+    f, buf, r, status, th, ch, pn, pc = jax.lax.while_loop(
+        cond, body if R <= 1 else body_multi, init)
+    th, ch = th[:k_max], ch[:k_max]
     status = jnp.where(((status == _RUN) | (status == _SHRINK))
                        & (f.count == 0), jnp.int32(_DONE), status)
     return f, buf, r, status, th, ch, pn, pc

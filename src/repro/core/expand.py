@@ -373,6 +373,16 @@ class ExpandOp:
         Returns (f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles)."""
         raise NotImplementedError
 
+    def persistent_round(self, g: BitsetGraph, f: Frontier,
+                         buf: CycleBuffer, delta: int, store: bool,
+                         rounds: int, rlimit):
+        """Up to ``rounds`` guarded rounds as ONE device dispatch, frontier
+        resident in kernel scratch between rounds (pallas ops only,
+        DESIGN.md §6.11). Returns the ``expand_count_compact_multi``
+        contract: (f2, buf2, cyc_hist, new_hist, rounds_done, ok_frontier,
+        ok_cycles)."""
+        raise NotImplementedError
+
 
 class _SlotApply:
     """Shared slot-formulation T → T' update."""
@@ -443,6 +453,12 @@ class SlotPallasExpand(_SlotApply, ExpandOp):
         return kops.fused_round(g, f, buf, formulation="slot",
                                 delta=delta, store=store)
 
+    def persistent_round(self, g, f, buf, delta, store, rounds, rlimit):
+        from ..kernels import ops as kops
+        return kops.persistent_round(g, f, buf, formulation="slot",
+                                     delta=delta, store=store,
+                                     rounds=rounds, rlimit=rlimit)
+
 
 class BitwordXlaExpand(_BitwordApply, ExpandOp):
     formulation, backend = "bitword", "jnp"
@@ -466,6 +482,12 @@ class BitwordPallasExpand(_BitwordApply, ExpandOp):
         from ..kernels import ops as kops
         return kops.fused_round(g, f, buf, formulation="bitword",
                                 delta=delta, store=store)
+
+    def persistent_round(self, g, f, buf, delta, store, rounds, rlimit):
+        from ..kernels import ops as kops
+        return kops.persistent_round(g, f, buf, formulation="bitword",
+                                     delta=delta, store=store,
+                                     rounds=rounds, rlimit=rlimit)
 
 
 _EXPAND_OPS: dict[tuple[str, str], ExpandOp] = {
@@ -531,3 +553,70 @@ def expand_count_compact(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
         lambda _: (f, buf),
         None)
     return f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles
+
+
+def expand_count_compact_multi(g: BitsetGraph, f: Frontier,
+                               buf: CycleBuffer, *, delta: int, store: bool,
+                               rounds: int, formulation: str = "slot",
+                               backend: str = "jnp",
+                               op: ExpandOp | None = None,
+                               fused: bool = False, rlimit=None):
+    """Up to ``rounds`` complete guarded expansion rounds as ONE traced
+    unit — the persistent superstep's loop body (DESIGN.md §6.11).
+
+    On pallas ops with a fused kernel (``fused=True``) this is the
+    persistent wave kernel: one ``pallas_call`` with a leading round axis
+    whose scratch carries the frontier between rounds, so HBM sees one
+    frontier read + one write per LAUNCH instead of per round. Every other
+    path runs the bit-identical jnp twin: a ``lax.fori_loop`` over
+    ``expand_count_compact`` (which itself resolves gather compaction /
+    the single-round kernel per op), with the round-application rules the
+    kernel applies in SMEM mirrored in carried scalars.
+
+    ``rlimit`` (dynamic, defaults to ``rounds``) bounds how many rounds may
+    be APPLIED — the superstep passes its remaining budget so a static-R
+    launch never oversteps ``rounds_limit``; rounds past it are identity
+    no-ops that record nothing.
+
+    Returns (f2, buf2, cyc_hist, new_hist, rounds_done, ok_frontier,
+    ok_cycles): (rounds,) histories of each ATTEMPTED round's totals
+    (entry ``rounds_done`` is the pending overflow after a guard trip;
+    entries past the last attempt are 0), ``rounds_done`` counts APPLIED
+    rounds, and the ok flags report the first failing round (True/True
+    when no round failed).
+    """
+    if op is None:
+        op = expand_op(formulation, backend)
+    rounds = int(rounds)
+    if rlimit is None:
+        rlimit = jnp.int32(rounds)
+    if fused and op.fused_kernel:
+        return op.persistent_round(g, f, buf, delta, store, rounds, rlimit)
+
+    zeros = jnp.zeros((rounds,), jnp.int32)
+
+    def body(r, carry):
+        f, buf, ch, nh, done, alive, okf, okc = carry
+        f2, buf2, n_cyc, n_new, okf_r, okc_r = expand_count_compact(
+            g, f, buf, delta=delta, store=store, op=op, fused=fused)
+        alive = alive & (done < rlimit)
+        okr = okf_r & okc_r
+        applied = alive & okr
+        trip = alive & ~okr
+        nh = nh.at[r].set(jnp.where(alive, n_new, 0))
+        ch = ch.at[r].set(jnp.where(alive, n_cyc, 0))
+        # guard-tripped / dead / past-budget rounds must leave the state
+        # untouched BIT-FOR-BIT (expand_count_compact's lax.cond already
+        # keeps f/buf on a trip, but a not-alive round still recomputes)
+        sel = lambda new, old: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(applied, a, b), new, old)
+        return (sel(f2, f), sel(buf2, buf), ch, nh,
+                done + applied.astype(jnp.int32),
+                applied & (n_new > 0),
+                jnp.where(trip, okf_r, okf), jnp.where(trip, okc_r, okc))
+
+    f2, buf2, ch, nh, done, _, okf, okc = jax.lax.fori_loop(
+        0, rounds, body,
+        (f, buf, zeros, zeros, jnp.int32(0), jnp.bool_(True),
+         jnp.bool_(True), jnp.bool_(True)))
+    return f2, buf2, ch, nh, done, okf, okc

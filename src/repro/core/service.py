@@ -228,7 +228,9 @@ class CycleService:
             self.spans.add(ev.kind, rid, ev.t_start_ms,
                            max(ev.wall_ms, ev.t_ms), wave=wave,
                            status=ev.status, rounds=ev.rounds,
-                           bucket=ev.bucket)
+                           bucket=ev.bucket,
+                           rounds_per_launch=ev.rounds_per_launch,
+                           kernel_launches=ev.kernel_launches)
         self.spans.add("request", rid, t_req,
                        self.spans.now_ms() - t_req)
 
@@ -241,7 +243,7 @@ class CycleService:
                       formulation=cfg.formulation, backend=cfg.backend,
                       k_max=cfg.superstep_rounds, batch=batch,
                       donate=cfg.donate, fused=cfg.fused_round,
-                      extra=(g_n, g_m))
+                      rpl=cfg.rounds_per_launch, extra=(g_n, g_m))
         return self._cache.get_or_build(key, lambda: WavePlan(key))
 
     def _recycle_plan(self, g_n: int, g_m: int, cap: int, cyc_cap: int,
@@ -429,6 +431,7 @@ class CycleService:
                 pending_new=int(pn_h), pending_cyc=int(pc_h),
                 cyc_fill=int(bc_h), t_ms=trace.toc_ms(), fresh=fresh,
                 plan_key=str(plan.key),
+                rounds_per_launch=cfg.rounds_per_launch,
                 lane_rids=(rid,) if rid else (),
                 lane_rounds=(it + int(r_h),) if rid else ())
 
@@ -601,6 +604,7 @@ class CycleService:
                 cyc_fill=int(np.asarray(bc_h).sum()),
                 t_ms=trace.toc_ms(), fresh=fresh,
                 plan_key=str(plan.key),
+                rounds_per_launch=cfg.rounds_per_launch,
                 lane_rids=(rid,) * B if rid else (),
                 lane_rounds=tuple(
                     int(v) for v in its + np.asarray(r_h, np.int64))

@@ -386,3 +386,379 @@ def fused_round_pallas(path, blocked, v1, l2, vlast, fcount, bmasks, bcount,
         formulation=formulation, delta=delta, store=store, tile=tile,
         interpret=interpret)
     return tuple(x[0] for x in out)
+
+
+# ---------------------------------------------------------------------------
+# Persistent multi-round wave kernel (DESIGN.md §6.11)
+#
+# One ``pallas_call`` with a leading ROUND axis — grid=(B, R, 2, nt) —
+# executes up to R complete guarded rounds back to back. The frontier state
+# between rounds never touches HBM: round r reads the launch inputs (r == 0)
+# or the ping-pong scratch buffer r % 2, and scatters into buffer
+# (r + 1) % 2; the final grid step copies the last buffer to the output refs
+# ONCE. The live/guard counters ride SMEM across grid steps (TPU grids
+# execute sequentially — the same property the phase-axis scatter exploits):
+#
+#   meta[0] ok        — current round applies (phase-B scatter gate)
+#   meta[1] alive     — cleared on a guard trip or when the wave dies
+#   meta[2] fcount    — live frontier rows after the last applied round
+#   meta[3] bcount    — cycle-ring fill after the last applied round
+#   meta[4] rounds    — rounds applied so far (the ``rounds_done`` output)
+#   meta[5] ring base — bcount snapshot the current round scatters against
+#   meta[6] round fc  — fcount snapshot the current round expands from
+#   meta[7] okf       — ok_frontier of the first failing round (1 if none)
+#   meta[8] okc       — ok_cycles of the first failing round (1 if none)
+#
+# A round whose guard trips, whose frontier is empty, or that lies past the
+# dynamic budget (``rlimit``) degrades to the identity copy-through: phase B
+# copies the read buffer into the write buffer unchanged, so the final
+# copy-out always publishes the state after the last APPLIED round. The ring
+# is append-only, so it needs no ping-pong: round 0's phase A copies the
+# input ring through to the output ref and every applied round appends at
+# its SMEM-carried base.
+# ---------------------------------------------------------------------------
+
+
+def _persistent_kernel(*refs, formulation: str, cap: int, tp: int, nt: int,
+                       delta: int, nw: int, store: bool, cyc_cap: int,
+                       rps: int, rounds: int):
+    """Ref layout (leading lane-block of 1):
+
+    inputs:  path, blocked, v1, l2, vlast (frontier tiles), fcount, bcount,
+             rlimit (per-lane scalars), <graph tables>, [masks_in]
+    outputs: opath, oblocked, ov1, ol2, ovlast (lane-whole),
+             nnew_h, ncyc_h ((1, R) per-round histories),
+             meta_out ((1, 8): rounds_done, okf, okc, fcount', bcount'),
+             [omasks (lane-whole)]
+    scratch: cnt/base (SMEM (nt, 2)), meta (SMEM (16,)),
+             spath/sblocked ((2, capp, nw) ping-pong frontier words),
+             sv1/sl2/svlast ((2, capp, 1) ping-pong frontier ids)
+    """
+    it = iter(refs)
+    path_ref, blocked_ref, v1_ref, l2_ref, vlast_ref = (next(it)
+                                                        for _ in range(5))
+    fcount_ref, bcount_ref, rlimit_ref = next(it), next(it), next(it)
+    if formulation == "bitword":
+        adj_ref, labelgt_ref = next(it), next(it)
+    else:
+        offsets_ref, neighbors_ref, labels_ref, adj_ref = (next(it)
+                                                           for _ in range(4))
+    masks_in_ref = next(it) if store else None
+    opath_ref, oblocked_ref, ov1_ref, ol2_ref, ovlast_ref = (
+        next(it) for _ in range(5))
+    nnew_h_ref, ncyc_h_ref, meta_out_ref = next(it), next(it), next(it)
+    omasks_ref = next(it) if store else None
+    (cnt_ref, base_ref, meta_ref, spath_ref, sblocked_ref, sv1_ref,
+     sl2_ref, svlast_ref) = (next(it) for _ in range(8))
+
+    r = pl.program_id(1)
+    p = pl.program_id(2)
+    i = pl.program_id(3)
+    rb = jax.lax.rem(r, 2)              # read buffer (rounds r >= 1)
+    wb = jax.lax.rem(r + 1, 2)          # write buffer of this round
+
+    # ---- launch init + round-start snapshots (SMEM) ----------------------
+    @pl.when((r == 0) & (p == 0) & (i == 0))
+    def _init():
+        meta_ref[1] = 1
+        meta_ref[2] = fcount_ref[0, 0]
+        meta_ref[3] = bcount_ref[0, 0]
+        meta_ref[4] = 0
+        meta_ref[7] = 1
+        meta_ref[8] = 1
+
+    @pl.when((p == 0) & (i == 0))
+    def _round_start():
+        meta_ref[5] = meta_ref[3]
+        meta_ref[6] = meta_ref[2]
+
+    fcount = meta_ref[6]
+    bbase = meta_ref[5]
+    row0 = i * tp
+    tile = pl.ds(row0, tp)
+    r0 = r == 0
+
+    # current state S_r: launch inputs at round 0, else the read buffer
+    path = jnp.where(r0, path_ref[0],
+                     spath_ref[pl.ds(rb, 1), tile, :][0])
+    blocked = jnp.where(r0, blocked_ref[0],
+                        sblocked_ref[pl.ds(rb, 1), tile, :][0])
+    v1c = jnp.where(r0, v1_ref[0], sv1_ref[pl.ds(rb, 1), tile, :][0])
+    l2c = jnp.where(r0, l2_ref[0], sl2_ref[pl.ds(rb, 1), tile, :][0])
+    vlastc = jnp.where(r0, vlast_ref[0],
+                       svlast_ref[pl.ds(rb, 1), tile, :][0])
+    v1 = v1c[:, 0]
+    l2 = l2c[:, 0]
+    vlast = vlastc[:, 0]
+    live = (row0 + jax.lax.broadcasted_iota(jnp.int32, (tp, 1), 0)) < fcount
+
+    if formulation == "bitword":
+        ext_v, close_v, nb = _bitword_tile_slots(
+            path, blocked, v1, l2, vlast, live, adj_ref[0], labelgt_ref[0],
+            delta)
+    else:
+        ext_v, close_v, nb = _slot_tile_slots(
+            path, blocked, v1, l2, vlast, live, offsets_ref[0][:, 0],
+            neighbors_ref[0][:, 0], labels_ref[0][:, 0], adj_ref[0], delta)
+
+    eflag = (ext_v >= 0).astype(jnp.int32)
+    cflag = (close_v >= 0).astype(jnp.int32)
+    ecnt = eflag.sum(axis=1)
+    ccnt = cflag.sum(axis=1)
+
+    # ---- phase A: per-tile counts + write-buffer init + ring carry -------
+    @pl.when(p == 0)
+    def _phase_a():
+        cnt_ref[i, 0] = ecnt.sum()
+        cnt_ref[i, 1] = ccnt.sum()
+        wsl = pl.ds(wb, 1)
+        spath_ref[wsl, tile, :] = jnp.zeros((1, tp, nw), jnp.uint32)
+        sblocked_ref[wsl, tile, :] = jnp.zeros((1, tp, nw), jnp.uint32)
+        sv1_ref[wsl, tile, :] = jnp.full((1, tp, 1), -1, jnp.int32)
+        sl2_ref[wsl, tile, :] = jnp.zeros((1, tp, 1), jnp.int32)
+        svlast_ref[wsl, tile, :] = jnp.zeros((1, tp, 1), jnp.int32)
+        if store:
+            @pl.when(r0)
+            def _ring():
+                start = jnp.minimum(i * rps, cyc_cap - rps)
+                omasks_ref[0, pl.ds(start, rps), :] = \
+                    masks_in_ref[0, pl.ds(start, rps), :]
+
+    # ---- phase B entry: cross-tile bases, the guard, SMEM state advance --
+    @pl.when((p == 1) & (i == 0))
+    def _phase_b_entry():
+        def acc(t, carry):
+            eb, cb = carry
+            base_ref[t, 0] = eb
+            base_ref[t, 1] = cb
+            return eb + cnt_ref[t, 0], cb + cnt_ref[t, 1]
+        tot_e, tot_c = jax.lax.fori_loop(
+            0, nt, acc, (jnp.int32(0), jnp.int32(0)))
+        alive = (meta_ref[1] == 1) & (meta_ref[4] < rlimit_ref[0, 0])
+        okf_r = tot_e <= cap
+        okc_r = (meta_ref[3] + tot_c <= cyc_cap) if store \
+            else (tot_e >= jnp.int32(-1))
+        okr = okf_r & okc_r
+        ok = alive & okr
+        meta_ref[0] = ok.astype(jnp.int32)
+        nnew_h_ref[0, r] = jnp.where(alive, tot_e, 0)
+        ncyc_h_ref[0, r] = jnp.where(alive, tot_c, 0)
+
+        @pl.when(ok)
+        def _applied():
+            meta_ref[4] = meta_ref[4] + 1
+            meta_ref[2] = tot_e
+            if store:
+                meta_ref[3] = meta_ref[3] + tot_c
+            meta_ref[1] = (tot_e > 0).astype(jnp.int32)
+
+        @pl.when(alive & ~okr)
+        def _tripped():
+            meta_ref[1] = 0
+            meta_ref[7] = okf_r.astype(jnp.int32)
+            meta_ref[8] = okc_r.astype(jnp.int32)
+
+    # ---- phase B: scatter survivors/cycles, or identity copy-through -----
+    @pl.when(p == 1)
+    def _phase_b():
+        okv = meta_ref[0] == 1
+        wsl = pl.ds(wb, 1)
+        erow = _excl_over_rows(ecnt)
+        crow = _excl_over_rows(ccnt)
+        erank = jnp.cumsum(eflag, axis=1) - eflag
+        crank = jnp.cumsum(cflag, axis=1) - cflag
+        edest = base_ref[i, 0] + erow[:, None] + erank
+        cdest = bbase + base_ref[i, 1] + crow[:, None] + crank
+
+        new_path = path[:, None, :] | _onehot_words(ext_v, nw)
+        flat = tp * delta
+        epath = new_path.reshape(flat, nw)
+        eflag_f = eflag.reshape(flat)
+        edest_f = edest.reshape(flat)
+        ev_f = jnp.clip(ext_v, 0, None).reshape(flat)
+        nb_r = nb
+        v1_r, l2_r = v1, l2
+
+        def put_ext(s, carry):
+            @pl.when(okv & (eflag_f[s] != 0))
+            def _():
+                d = edest_f[s]
+                rr = s // delta
+                spath_ref[wsl, pl.ds(d, 1), :] = \
+                    jax.lax.dynamic_slice_in_dim(epath, s, 1, axis=0)[None]
+                sblocked_ref[wsl, pl.ds(d, 1), :] = \
+                    jax.lax.dynamic_slice_in_dim(nb_r, rr, 1, axis=0)[None]
+                sv1_ref[wsl, pl.ds(d, 1), :] = v1_r[rr].reshape(1, 1, 1)
+                sl2_ref[wsl, pl.ds(d, 1), :] = l2_r[rr].reshape(1, 1, 1)
+                svlast_ref[wsl, pl.ds(d, 1), :] = ev_f[s].reshape(1, 1, 1)
+            return carry
+        jax.lax.fori_loop(0, flat, put_ext, 0)
+
+        if store:
+            cyc_rows = path[:, None, :] | _onehot_words(close_v, nw)
+            cpath = cyc_rows.reshape(flat, nw)
+            cflag_f = cflag.reshape(flat)
+            cdest_f = cdest.reshape(flat)
+
+            def put_cyc(s, carry):
+                @pl.when(okv & (cflag_f[s] != 0))
+                def _():
+                    omasks_ref[0, pl.ds(cdest_f[s], 1), :] = \
+                        jax.lax.dynamic_slice_in_dim(cpath, s, 1, axis=0)
+                return carry
+            jax.lax.fori_loop(0, flat, put_cyc, 0)
+
+        # round not applied (guard trip / dead / past budget): identity
+        @pl.when(~okv)
+        def _keep():
+            spath_ref[wsl, tile, :] = path[None]
+            sblocked_ref[wsl, tile, :] = blocked[None]
+            sv1_ref[wsl, tile, :] = v1c[None]
+            sl2_ref[wsl, tile, :] = l2c[None]
+            svlast_ref[wsl, tile, :] = vlastc[None]
+
+    # ---- final grid step: publish state + counters ONCE ------------------
+    @pl.when((r == rounds - 1) & (p == 1) & (i == nt - 1))
+    def _finish():
+        fb = rounds % 2                  # static: last round's write buffer
+        opath_ref[0] = spath_ref[fb]
+        oblocked_ref[0] = sblocked_ref[fb]
+        ov1_ref[0] = sv1_ref[fb]
+        ol2_ref[0] = sl2_ref[fb]
+        ovlast_ref[0] = svlast_ref[fb]
+        meta_out_ref[0, 0] = meta_ref[4]
+        meta_out_ref[0, 1] = meta_ref[7]
+        meta_out_ref[0, 2] = meta_ref[8]
+        meta_out_ref[0, 3] = meta_ref[2]
+        meta_out_ref[0, 4] = meta_ref[3]
+        meta_out_ref[0, 5] = 0
+        meta_out_ref[0, 6] = 0
+        meta_out_ref[0, 7] = 0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("formulation", "delta", "store", "rounds", "tile",
+                     "interpret"))
+def persistent_round_lanes(path, blocked, v1, l2, vlast, fcount, bmasks,
+                           bcount, rlimit, graph_tables, *,
+                           formulation: str, delta: int, store: bool,
+                           rounds: int, tile: int = 128,
+                           interpret: bool = True):
+    """Lane-gridded persistent wave kernel: ONE ``pallas_call`` advances
+    every lane of a batch through up to ``rounds`` guarded expansion rounds,
+    the frontier resident in scratch between rounds.
+
+    ``rlimit`` (B,) bounds the rounds actually applied (the superstep's
+    dynamic budget); rounds past it run as identity copy-throughs. Returns
+    (path', blocked', v1', l2', vlast', masks', ncyc_hist (B, R),
+    nnew_hist (B, R), rounds_done (B,), ok_frontier (B,), ok_cycles (B,),
+    fcount' (B,), bcount' (B,)) where the histories hold each ATTEMPTED
+    round's totals (index ``rounds_done`` is the pending overflow on a
+    guard trip) and the ok flags report the first failing round (1/1 when
+    no round failed).
+    """
+    B, cap, nw = path.shape
+    R = int(rounds)
+    tp = min(tile, max(8, cap))
+    pad = (-cap) % tp
+    padded = lambda a: jnp.pad(
+        a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    col = lambda a: padded(a[..., None])
+    capp = cap + pad
+    nt = capp // tp
+    cyc_cap = bmasks.shape[1]
+    rps = -(-cyc_cap // nt)
+    lane_whole3 = lambda a: pl.BlockSpec(
+        (1,) + a.shape[1:], lambda b, r, p, i: (b,) + (0,) * (a.ndim - 1))
+    tile_spec = lambda w: pl.BlockSpec((1, tp, w),
+                                       lambda b, r, p, i: (b, i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda b, r, p, i: (b, 0))
+    hist_spec = pl.BlockSpec((1, R), lambda b, r, p, i: (b, 0))
+    meta_spec = pl.BlockSpec((1, 8), lambda b, r, p, i: (b, 0))
+
+    if formulation == "bitword":
+        adj_bits, labelgt_bits = graph_tables
+        gtabs = (adj_bits, labelgt_bits)
+    else:
+        offsets, neighbors, labels, adj_bits = graph_tables
+        nbr = neighbors[..., None]
+        if nbr.shape[1] % 8:
+            nbr = jnp.pad(nbr, ((0, 0), (0, (-nbr.shape[1]) % 8), (0, 0)))
+        gtabs = (offsets[..., None], nbr, labels[..., None], adj_bits)
+
+    in_specs = ([tile_spec(nw), tile_spec(nw), tile_spec(1), tile_spec(1),
+                 tile_spec(1), scalar_spec, scalar_spec, scalar_spec]
+                + [lane_whole3(t) for t in gtabs])
+    operands = [padded(path), padded(blocked), col(v1), col(l2), col(vlast),
+                fcount[:, None].astype(jnp.int32),
+                bcount[:, None].astype(jnp.int32),
+                rlimit[:, None].astype(jnp.int32)] + list(gtabs)
+    if store:
+        in_specs.append(lane_whole3(bmasks))
+        operands.append(bmasks)
+
+    out_shape = [jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32),
+                 jax.ShapeDtypeStruct((B, capp, nw), jnp.uint32),
+                 jax.ShapeDtypeStruct((B, capp, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, capp, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, capp, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((B, R), jnp.int32),
+                 jax.ShapeDtypeStruct((B, R), jnp.int32),
+                 jax.ShapeDtypeStruct((B, 8), jnp.int32)]
+    out_specs = [lane_whole3(jax.ShapeDtypeStruct((B, capp, nw),
+                                                  jnp.uint32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, nw),
+                                                  jnp.uint32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, 1), jnp.int32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, 1), jnp.int32)),
+                 lane_whole3(jax.ShapeDtypeStruct((B, capp, 1), jnp.int32)),
+                 hist_spec, hist_spec, meta_spec]
+    if store:
+        out_shape.append(
+            jax.ShapeDtypeStruct((B, cyc_cap, nw), jnp.uint32))
+        out_specs.append(
+            lane_whole3(jax.ShapeDtypeStruct((B, cyc_cap, nw), jnp.uint32)))
+
+    kernel = functools.partial(
+        _persistent_kernel, formulation=formulation, cap=cap, tp=tp, nt=nt,
+        delta=delta, nw=nw, store=store, cyc_cap=cyc_cap, rps=rps, rounds=R)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, R, 2, nt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.SMEM((nt, 2), jnp.int32),
+                        pltpu.SMEM((nt, 2), jnp.int32),
+                        pltpu.SMEM((16,), jnp.int32),
+                        pltpu.VMEM((2, capp, nw), jnp.uint32),
+                        pltpu.VMEM((2, capp, nw), jnp.uint32),
+                        pltpu.VMEM((2, capp, 1), jnp.int32),
+                        pltpu.VMEM((2, capp, 1), jnp.int32),
+                        pltpu.VMEM((2, capp, 1), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+
+    opath, oblocked, ov1, ol2, ovlast, nnew_h, ncyc_h, meta = out[:8]
+    omasks = out[8] if store else bmasks
+    return (opath[:, :cap], oblocked[:, :cap], ov1[:, :cap, 0],
+            ol2[:, :cap, 0], ovlast[:, :cap, 0], omasks,
+            ncyc_h, nnew_h, meta[:, 0], meta[:, 1], meta[:, 2],
+            meta[:, 3], meta[:, 4])
+
+
+def persistent_round_pallas(path, blocked, v1, l2, vlast, fcount, bmasks,
+                            bcount, rlimit, graph_tables, *,
+                            formulation: str, delta: int, store: bool,
+                            rounds: int, tile: int = 128,
+                            interpret: bool = True):
+    """Single-graph entry — the B=1 lane of ``persistent_round_lanes``."""
+    out = persistent_round_lanes(
+        path[None], blocked[None], v1[None], l2[None], vlast[None],
+        fcount[None], bmasks[None], bcount[None], rlimit[None],
+        tuple(t[None] for t in graph_tables),
+        formulation=formulation, delta=delta, store=store, rounds=rounds,
+        tile=tile, interpret=interpret)
+    return tuple(x[0] for x in out)

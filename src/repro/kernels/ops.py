@@ -24,7 +24,8 @@ from ..core.frontier import CycleBuffer, Frontier
 from .frontier_expand import frontier_expand_lanes, frontier_expand_pallas
 from .triplet_init import triplet_init_lanes, triplet_init_pallas
 from .bitword_expand import bitword_expand_lanes, bitword_expand_pallas
-from .fused_round import fused_round_lanes, fused_round_pallas
+from .fused_round import (fused_round_lanes, fused_round_pallas,
+                          persistent_round_lanes, persistent_round_pallas)
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or \
     jax.default_backend() != "tpu"
@@ -34,7 +35,8 @@ INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" or \
 # (kernel builds, not executions — execution count is rounds × 1 by
 # construction since the round body contains exactly one pallas_call; tests
 # assert that on the jaxpr). Keyed 'single' / 'lanes'.
-FUSED_KERNEL_BUILDS = {"single": 0, "lanes": 0}
+FUSED_KERNEL_BUILDS = {"single": 0, "lanes": 0,
+                       "persistent_single": 0, "persistent_lanes": 0}
 
 
 def _broadcast_unbatched(tree, tree_batched, axis_size):
@@ -224,3 +226,70 @@ def fused_round(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
     else:
         buf2 = buf
     return f2, buf2, n_cyc, n_new, ok_frontier, ok_cycles
+
+
+# ---------------------------------------------------------------------------
+# Persistent multi-round wave kernel (DESIGN.md §6.11)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _persistent_round_op(formulation: str, delta: int, store: bool,
+                         rounds: int):
+    @jax.custom_batching.custom_vmap
+    def persistent(g: BitsetGraph, f: Frontier, buf: CycleBuffer, rlimit):
+        FUSED_KERNEL_BUILDS["persistent_single"] += 1
+        return persistent_round_pallas(
+            f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+            buf.masks, buf.count, rlimit, _fused_tables(g, formulation),
+            formulation=formulation, delta=delta, store=store,
+            rounds=rounds, interpret=INTERPRET)
+
+    @persistent.def_vmap
+    def _rule(axis_size, in_batched, g, f, buf, rlimit):
+        FUSED_KERNEL_BUILDS["persistent_lanes"] += 1
+        g = _broadcast_unbatched(g, in_batched[0], axis_size)
+        f = _broadcast_unbatched(f, in_batched[1], axis_size)
+        buf = _broadcast_unbatched(buf, in_batched[2], axis_size)
+        rlimit = _broadcast_unbatched(rlimit, in_batched[3], axis_size)
+        out = persistent_round_lanes(
+            f.path, f.blocked, f.v1, f.l2, f.vlast, f.count,
+            buf.masks, buf.count, rlimit, _fused_tables(g, formulation),
+            formulation=formulation, delta=delta, store=store,
+            rounds=rounds, interpret=INTERPRET)
+        return out, (True,) * len(out)
+
+    return persistent
+
+
+def persistent_round(g: BitsetGraph, f: Frontier, buf: CycleBuffer, *,
+                     formulation: str, delta: int, store: bool,
+                     rounds: int, rlimit=None):
+    """Up to ``rounds`` complete guarded rounds as ONE kernel dispatch —
+    the frontier ping-pongs through scratch between rounds and HBM sees
+    exactly one read at launch entry and one write at exit (the ring is
+    append-only on top). ``rlimit`` (dynamic, defaults to ``rounds``)
+    bounds the rounds actually applied so a superstep can spend a partial
+    budget; rounds past it degrade to identity copy-throughs inside the
+    kernel. Batch-transparent via ``custom_vmap``.
+
+    Returns (f2, buf2, cyc_hist, new_hist, rounds_done, ok_frontier,
+    ok_cycles): histories are the per-round ATTEMPTED totals (entry
+    ``rounds_done`` holds the pending overflow after a guard trip), the ok
+    flags report the first failing round (True/True when none failed), and
+    f2/buf2 carry the state + counts after the last APPLIED round.
+    """
+    if rlimit is None:
+        rlimit = jnp.int32(rounds)
+    out = _persistent_round_op(
+        formulation, int(delta), bool(store), int(rounds))(g, f, buf,
+                                                           rlimit)
+    (path, blocked, v1, l2, vlast, masks, ncyc_h, nnew_h, rounds_done,
+     okf, okc, fcnt, bcnt) = out
+    f2 = Frontier(path=path, blocked=blocked, v1=v1, l2=l2, vlast=vlast,
+                  count=fcnt.astype(jnp.int32))
+    if store:
+        buf2 = CycleBuffer(masks=masks, count=bcnt.astype(jnp.int32))
+    else:
+        buf2 = buf
+    return (f2, buf2, ncyc_h, nnew_h, rounds_done,
+            okf.astype(jnp.bool_), okc.astype(jnp.bool_))

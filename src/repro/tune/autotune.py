@@ -38,7 +38,7 @@ from .store import TuneKey, TuneStore, _p2, shape_class
 # but not always faster: tiny buckets can favor the split path's simpler
 # programs, so it is a searched axis, not a constant.
 TUNED_KNOBS = ("superstep_rounds", "growth_bits", "grow_headroom",
-               "cycle_buffer_rows", "fused_round")
+               "cycle_buffer_rows", "fused_round", "rounds_per_launch")
 # the mesh-routed (sharded) knob set: round budget per superstep, frontier
 # rows per device, and the diffusion-balance cadence. local_capacity is
 # equivalence-preserving only while nothing overflows — the replay twin's
@@ -72,6 +72,12 @@ class TuneSpace:
     fine vs coarse buckets; headroom 0-2). Mesh-routed configs search the
     sharded axes (``DIST_TUNED_KNOBS``) instead."""
     superstep_rounds: tuple = (4, 8, 16, 32)
+    # persistent multi-round launches (DESIGN.md §6.11): R rounds of one
+    # superstep fuse into ONE kernel dispatch with the frontier resident
+    # in scratch (pallas); on the jnp backend the same R rounds fold into
+    # one traced fori_loop. Equivalence-preserving for any R — guarded
+    # rounds inside a launch degrade to identity copy-through.
+    rounds_per_launch: tuple = (1, 2, 4, 8)
     growth_bits: tuple = (1, 2)
     grow_headroom: tuple = (0, 1, 2)
     cycle_buffer_rows: tuple = (1024, 4096, 16384)
@@ -100,7 +106,8 @@ class TuneSpace:
             axes = dict(superstep_rounds=self.superstep_rounds,
                         growth_bits=self.growth_bits,
                         grow_headroom=self.grow_headroom,
-                        fused_round=self.fused_round)
+                        fused_round=self.fused_round,
+                        rounds_per_launch=self.rounds_per_launch)
             if base_cfg.store:
                 axes["cycle_buffer_rows"] = self.cycle_buffer_rows
         base = {k: getattr(base_cfg, k) for k in axes}

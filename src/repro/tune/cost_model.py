@@ -185,6 +185,12 @@ class ReplaySummary:
     # bytes of the balance hops, per tier, charged at per-tier bandwidth
     bytes_intra: int = 0      # intra-host (device-ring) balance bytes
     bytes_cross: int = 0      # cross-host (host-ring) balance bytes
+    # persistent multi-round launches (DESIGN.md §6.11): kernel launches
+    # (= frontier HBM round-trips) across the run — ⌈attempted/R⌉ per
+    # dispatch. R=1 makes this the attempted-round total and leaves every
+    # other column (row_work, waste, dispatches, syncs) bit-identical to
+    # the pre-persistent twin.
+    n_kernel_launches: int = 0
 
 
 def replay(profile: WaveProfile, cfg, *, recycle: bool = False
@@ -214,13 +220,14 @@ def replay(profile: WaveProfile, cfg, *, recycle: bool = False
     # (DESIGN.md §6.8: flags + compaction share a single sweep); the split
     # round reads the frontier once to flag and once more to scatter
     passes = 1 if getattr(cfg, "fused_round", True) else 2
+    rpl = max(int(getattr(cfg, "rounds_per_launch", 1)), 1)
     cnt = profile.n0
     cap = cfg.bucket(max(cnt, 1))
     cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
     K = cfg.superstep_rounds
 
     dispatches = syncs = transitions = drains = 0
-    row_work = waste = 0
+    row_work = waste = launches = 0
     by_cause: dict[str, int] = {}
     programs = set()
     peak = cap
@@ -252,10 +259,24 @@ def replay(profile: WaveProfile, cfg, *, recycle: bool = False
             r += 1
             fill += n_cyc if cfg.store else 0
             cnt = n_new
-            if 0 < n_new <= shrink_below:
+            # the persistent driver evaluates the decay exit only at
+            # LAUNCH boundaries (every rpl-th round); rpl=1 keeps the
+            # per-round check
+            if 0 < n_new <= shrink_below and r % rpl == 0:
                 status = _SHRINK
+        if status == _RUN and 0 < cnt <= shrink_below:
+            status = _SHRINK          # final (partial-launch) boundary
         if status in (_RUN, _SHRINK) and cnt == 0:
             status = _DONE
+        # one persistent launch per R attempted rounds; the launch's
+        # rounds past the trip/death point degrade to identity
+        # copy-through — one frontier pass each, all of it waste
+        att = r + (1 if status in (_GROW, _DRAIN) else 0)
+        n_launches = -(-att // rpl)
+        launches += n_launches
+        idle = n_launches * rpl - att
+        row_work += idle * passes * cap * nw
+        waste += idle * passes * cap * nw
         dispatches += 1
         syncs += 1
         by_cause[status] = by_cause.get(status, 0) + 1
@@ -285,7 +306,7 @@ def replay(profile: WaveProfile, cfg, *, recycle: bool = False
         n_dispatches=dispatches, n_host_syncs=syncs,
         n_bucket_transitions=transitions, n_drains=drains, rounds=it,
         row_work=row_work, padded_waste=waste, n_programs=len(programs),
-        peak_bucket=peak, by_cause=by_cause)
+        peak_bucket=peak, by_cause=by_cause, n_kernel_launches=launches)
 
 
 # ---------------------------------------------------------------------------
@@ -293,7 +314,7 @@ def replay(profile: WaveProfile, cfg, *, recycle: bool = False
 # ---------------------------------------------------------------------------
 
 def _lane_superstep(t, c, it, cnt, fill, k, cap, cyc_cap, store,
-                    shrink_below):
+                    shrink_below, rpl=1):
     """One lane's guarded superstep — the per-lane half of the vmapped
     ``wave_superstep``. Returns (r, status, cnt, fill, pn, pc)."""
     r = 0
@@ -310,8 +331,11 @@ def _lane_superstep(t, c, it, cnt, fill, k, cap, cyc_cap, store,
         r += 1
         fill += n_cyc if store else 0
         cnt = n_new
-        if 0 < n_new <= shrink_below:
+        # decay exit only at launch boundaries (cf. ``replay``)
+        if 0 < n_new <= shrink_below and r % rpl == 0:
             status = _SHRINK
+    if status == _RUN and 0 < cnt <= shrink_below:
+        status = _SHRINK
     if status in (_RUN, _SHRINK) and cnt == 0:
         status = _DONE
     return r, status, cnt, fill, pn, pc
@@ -339,6 +363,7 @@ def _replay_batch(profile: WaveProfile, cfg, *,
     t, c = profile.lane_t, profile.lane_c
     nw = max(profile.nw, 1)
     passes = 1 if getattr(cfg, "fused_round", True) else 2
+    rpl = max(int(getattr(cfg, "rounds_per_launch", 1)), 1)
     limits = []
     for ln in profile.lane_n:
         lim = max(int(ln) - 3, 0)
@@ -351,7 +376,7 @@ def _replay_batch(profile: WaveProfile, cfg, *,
     K = cfg.superstep_rounds
 
     dispatches = syncs = transitions = drains = 0
-    row_work = waste = 0
+    row_work = waste = launches = 0
     by_cause: dict[str, int] = {}
     programs = set()
     peak = cap
@@ -384,7 +409,7 @@ def _replay_batch(profile: WaveProfile, cfg, *,
             k = min(K, limits[i] - its[i]) if active[i] else 0
             r, status, cnt, fill, pn, pc = _lane_superstep(
                 t[i], c[i], its[i], cnts[i], fills[i], k, cap, cyc_cap,
-                cfg.store, shrink_below)
+                cfg.store, shrink_below, rpl)
             rs.append(r)
             statuses.append(status)
             pns.append(pn)
@@ -403,6 +428,13 @@ def _replay_batch(profile: WaveProfile, cfg, *,
         attempts = [rs[i] + (1 if statuses[i] in (_GROW, _DRAIN) else 0)
                     for i in range(B)]
         max_att = max(attempts, default=0)
+        # the vmapped persistent launch advances R rounds for ALL lanes;
+        # grid rounds past the slowest lane's exit are identity passes
+        n_launches = -(-max_att // rpl)
+        launches += n_launches
+        idle = n_launches * rpl - max_att
+        row_work += idle * passes * B * cap * nw
+        waste += idle * passes * B * cap * nw
         for j in range(max_att):
             lanes_j = ([i for i in range(B) if j < attempts[i]]
                        if recycle else list(range(B)))
@@ -449,7 +481,8 @@ def _replay_batch(profile: WaveProfile, cfg, *,
         n_dispatches=dispatches, n_host_syncs=syncs,
         n_bucket_transitions=transitions, n_drains=drains,
         rounds=max(its, default=0), row_work=row_work, padded_waste=waste,
-        n_programs=len(programs), peak_bucket=peak, by_cause=by_cause)
+        n_programs=len(programs), peak_bucket=peak, by_cause=by_cause,
+        n_kernel_launches=launches)
 
 
 # ---------------------------------------------------------------------------
@@ -478,6 +511,7 @@ def replay_sched(profile: WaveProfile, cfg, *, slots: int) -> ReplaySummary:
     B = max(int(slots), 1)
     nw = max(profile.nw, 1)
     passes = 1 if getattr(cfg, "fused_round", True) else 2
+    rpl = max(int(getattr(cfg, "rounds_per_launch", 1)), 1)
     t_all, c_all, n0_all = profile.lane_t, profile.lane_c, profile.lane_n0
     limits_all = []
     for ln in profile.lane_n:
@@ -490,7 +524,7 @@ def replay_sched(profile: WaveProfile, cfg, *, slots: int) -> ReplaySummary:
     cyc_cap = cfg.bucket(max(cfg.cycle_buffer_rows, 16)) if cfg.store else 1
 
     dispatches = syncs = transitions = drains = 0
-    row_work = waste = total_rounds = 0
+    row_work = waste = total_rounds = launches = 0
     by_cause: dict[str, int] = {}
     programs = set()
     cap = peak = 0
@@ -543,7 +577,7 @@ def replay_sched(profile: WaveProfile, cfg, *, slots: int) -> ReplaySummary:
                 k = min(K, limits_all[ridx] - its[i]) if i in act else 0
                 r, status, cnt, fill, pn, pc = _lane_superstep(
                     t_all[ridx], c_all[ridx], its[i], cnts[i], fills[i], k,
-                    cap, cyc_cap, cfg.store, shrink_below)
+                    cap, cyc_cap, cfg.store, shrink_below, rpl)
                 rs[i], statuses[i], pns[i], pcs[i] = r, status, pn, pc
                 cnts[i], fills[i] = cnt, fill
                 its[i] += r
@@ -559,6 +593,11 @@ def replay_sched(profile: WaveProfile, cfg, *, slots: int) -> ReplaySummary:
             attempts = {i: rs[i] + (1 if statuses[i] in (_GROW, _DRAIN)
                                     else 0) for i in occ}
             max_att = max(attempts.values(), default=0)
+            n_launches = -(-max_att // rpl)
+            launches += n_launches
+            idle = n_launches * rpl - max_att
+            row_work += idle * passes * len(occ) * cap * nw
+            waste += idle * passes * len(occ) * cap * nw
             for j in range(max_att):
                 lanes_j = [i for i in occ if j < attempts[i]]
                 row_work += passes * len(lanes_j) * cap * nw
@@ -606,7 +645,8 @@ def replay_sched(profile: WaveProfile, cfg, *, slots: int) -> ReplaySummary:
         n_dispatches=dispatches, n_host_syncs=syncs,
         n_bucket_transitions=transitions, n_drains=drains,
         rounds=total_rounds, row_work=row_work, padded_waste=waste,
-        n_programs=len(programs), peak_bucket=peak, by_cause=by_cause)
+        n_programs=len(programs), peak_bucket=peak, by_cause=by_cause,
+        n_kernel_launches=launches)
 
 
 # ---------------------------------------------------------------------------
@@ -754,8 +794,9 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
     feasible = cap >= n0_dev and (base_ok or cap >= 2 * est_peak)
 
     passes = 1 if getattr(cfg, "fused_round", True) else 2
+    rpl = max(int(getattr(cfg, "rounds_per_launch", 1)), 1)
     dispatches = syncs = 0
-    row_work = waste = balance_rounds = cross_rounds = 0
+    row_work = waste = balance_rounds = cross_rounds = launches = 0
     by_cause: dict[str, int] = {}
     cnt = profile.n0
     dispatches += 1                           # stage-1 device-side deal
@@ -776,6 +817,14 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
                 balance_rounds += 1
             if nhost > 1 and (it + r) % cross_period == 0:
                 cross_rounds += 1
+        # while-loop iterations of the multi-round body: each advances up
+        # to R masked rounds, so inner rounds past the wave's death still
+        # run a (discarded) local step — full passes, all waste
+        n_launches = -(-r // rpl) if r else 0
+        launches += n_launches
+        idle = n_launches * rpl - r
+        row_work += idle * passes * cap * ndev * nw
+        waste += idle * passes * cap * ndev * nw
         dispatches += 1
         syncs += 1
         status = _DONE if cnt == 0 else _RUN
@@ -796,7 +845,8 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
         n_programs=2,                         # the deal + the superstep
         peak_bucket=cap, by_cause=by_cause,
         feasible=feasible, est_peak_device=int(est_peak),
-        bytes_intra=int(bytes_intra), bytes_cross=int(bytes_cross))
+        bytes_intra=int(bytes_intra), bytes_cross=int(bytes_cross),
+        n_kernel_launches=launches)
 
 
 # ---------------------------------------------------------------------------
@@ -810,7 +860,7 @@ def replay_dist(profile: DistProfile, cfg) -> ReplaySummary:
 # values when 'dist' events carrying per-tier bytes provide enough
 # variation to solve for them.
 DEFAULT_COEFFS = dict(dispatch_ms=0.6, ms_per_mrow=180.0, sync_ms=0.05,
-                      compile_ms=150.0,
+                      compile_ms=150.0, launch_ms=0.05,
                       intra_ms_per_mb=0.05, cross_ms_per_mb=0.4)
 
 
@@ -836,6 +886,11 @@ class CostModel:
     # tuner's cross_balance_every × compress_cross_host grid.
     intra_ms_per_mb: float = DEFAULT_COEFFS["intra_ms_per_mb"]
     cross_ms_per_mb: float = DEFAULT_COEFFS["cross_ms_per_mb"]
+    # per kernel launch inside a dispatch (the while-loop round's pallas
+    # dispatch + frontier HBM round-trip): the cost ``rounds_per_launch``
+    # amortizes ⌈K/R⌉-fold — what makes the tuner's R axis non-trivial
+    # against the idle-round row work a persistent launch adds.
+    launch_ms: float = DEFAULT_COEFFS["launch_ms"]
     n_fit_events: int = 0
     window: int = 256          # sliding-window length (fit points retained)
     warm_points: list = dataclasses.field(default_factory=list, repr=False)
@@ -941,6 +996,7 @@ class CostModel:
             return float("inf")
         rows = rep.row_work / max(profile.nw, 1)  # back to row units
         ms = (self.dispatch_ms * rep.n_dispatches
+              + self.launch_ms * rep.n_kernel_launches
               + self.ms_per_mrow * rows / 1e6
               + self.sync_ms * rep.n_host_syncs
               + self.intra_ms_per_mb * rep.bytes_intra / 1e6
@@ -957,6 +1013,7 @@ class CostModel:
         rep = replay_sched(profile, cfg, slots=slots)
         rows = rep.row_work / max(profile.nw, 1)  # back to row units
         ms = (self.dispatch_ms * rep.n_dispatches
+              + self.launch_ms * rep.n_kernel_launches
               + self.ms_per_mrow * rows / 1e6
               + self.sync_ms * rep.n_host_syncs)
         if objective == "cold":
@@ -969,6 +1026,7 @@ class CostModel:
                                               objective=objective), 4),
                     objective=objective,
                     n_dispatches=rep.n_dispatches,
+                    n_kernel_launches=rep.n_kernel_launches,
                     n_host_syncs=rep.n_host_syncs,
                     n_bucket_transitions=rep.n_bucket_transitions,
                     n_drains=rep.n_drains,
@@ -982,6 +1040,7 @@ class CostModel:
         return dict(dispatch_ms=self.dispatch_ms,
                     ms_per_mrow=self.ms_per_mrow,
                     sync_ms=self.sync_ms, compile_ms=self.compile_ms,
+                    launch_ms=self.launch_ms,
                     intra_ms_per_mb=self.intra_ms_per_mb,
                     cross_ms_per_mb=self.cross_ms_per_mb,
                     n_fit_events=self.n_fit_events)

@@ -115,6 +115,11 @@ class TraceEvent:
     lane_rounds: tuple = ()    # per-lane rounds applied this dispatch (the
     #                            per-lane slice of ``rounds``, which is the
     #                            max across lanes)
+    rounds_per_launch: int = 1  # R the dispatch ran with (DESIGN.md §6.11):
+    #                            each while-iteration of the superstep is
+    #                            ONE kernel launch advancing up to R rounds,
+    #                            so this dispatch cost ``kernel_launches``
+    #                            launches / frontier HBM round-trips
 
     @property
     def rounds_attempted(self) -> int:
@@ -127,6 +132,13 @@ class TraceEvent:
         dispatches scan ``bucket`` rows on EACH of ``ndev`` devices)."""
         return (self.rounds_attempted * self.bucket * max(self.ndev, 1)
                 * n_words)
+
+    @property
+    def kernel_launches(self) -> int:
+        """Kernel launches (= frontier HBM round-trips) this dispatch paid:
+        ⌈rounds_attempted / R⌉ — one persistent launch advances up to R
+        rounds with the frontier resident in scratch between them."""
+        return -(-self.rounds_attempted // max(self.rounds_per_launch, 1))
 
     def padded_waste(self, n_words: int) -> int:
         """Word-rows spent on PADDING (capacity minus live rows), the
@@ -149,8 +161,8 @@ class WaveTrace:
     """
 
     __slots__ = ("enabled", "events", "n_dispatches", "n_host_syncs",
-                 "n_bucket_transitions", "n_drains", "by_cause", "_t0",
-                 "_origin", "_ticked", "observer")
+                 "n_bucket_transitions", "n_drains", "n_kernel_launches",
+                 "by_cause", "_t0", "_origin", "_ticked", "observer")
 
     def __init__(self, enabled: bool = True, origin: float | None = None,
                  observer=None):
@@ -166,6 +178,7 @@ class WaveTrace:
         self.n_host_syncs = 0
         self.n_bucket_transitions = 0
         self.n_drains = 0
+        self.n_kernel_launches = 0
         self.by_cause: dict[str, int] = {}
         self._t0 = 0.0
         self._origin = time.perf_counter() if origin is None else origin
@@ -212,8 +225,12 @@ class WaveTrace:
                  comm_bytes_cross: int = 0,
                  lanes: int = 0, live_lanes: int = 0, retired: int = 0,
                  admitted: int = 0, wall_ms: float = 0.0, lane_rids=(),
-                 lane_rounds=(), t_start_ms: float | None = None) -> None:
+                 lane_rounds=(), rounds_per_launch: int = 1,
+                 t_start_ms: float | None = None) -> None:
         self.n_dispatches += launches
+        if kind in ("superstep", "batch", "dist"):
+            att = rounds + (1 if status in ("GROW", "DRAIN") else 0)
+            self.n_kernel_launches += -(-att // max(rounds_per_launch, 1))
         self.by_cause[status] = self.by_cause.get(status, 0) + 1
         if not self.enabled and self.observer is None:
             self._ticked = False
@@ -241,7 +258,8 @@ class WaveTrace:
             live_lanes=int(live_lanes), retired=int(retired),
             admitted=int(admitted),
             lane_rids=tuple(str(r) for r in lane_rids),
-            lane_rounds=tuple(int(r) for r in lane_rounds))
+            lane_rounds=tuple(int(r) for r in lane_rounds),
+            rounds_per_launch=int(rounds_per_launch))
         if self.enabled:
             self.events.append(ev)
         if self.observer is not None:
@@ -266,6 +284,7 @@ class WaveTrace:
                    n_bucket_transitions=self.n_bucket_transitions,
                    n_drains=self.n_drains,
                    rounds=rounds,
+                   n_kernel_launches=self.n_kernel_launches,
                    rounds_per_dispatch=rounds / max(self.n_dispatches, 1),
                    syncs_per_round=self.n_host_syncs / max(rounds, 1))
         if self.by_cause:
